@@ -1,0 +1,1 @@
+"""Benchmark suite: paper tables/figures, kernels, roofline aggregation."""

@@ -1,0 +1,145 @@
+"""One benchmark per paper table/figure. Each returns rows of
+``(name, value, derived)`` printed as CSV by benchmarks.run.
+
+* fig5  — area + peak GFLOPS scaling across mesh sizes x MAC kinds (§III-B)
+* fig6  — utilization across GEMM sizes x mesh sizes (§III-C)
+* fig7  — Table I workload runtimes on 4 accelerator cycle models with the
+          cluster-level L1 double-buffered tiling (§III-D)
+* table2 — GFLOPS / GFLOPS/mm2 / TFLOPS/W vs published values
+"""
+
+from __future__ import annotations
+
+from typing import List, Tuple
+
+from repro.core.dataflows import ACCELERATORS
+from repro.core.engine import EngineConfig, simulate_gemm
+from repro.core.sota import (
+    PUBLISHED_TABLE2,
+    buffer_share,
+    fig5_area_sweep,
+    fig5_geomean_scaling,
+    table2_model,
+)
+from repro.core.tiling import ClusterConfig, tiled_gemm_cycles
+
+from .workloads import TABLE_I
+
+Row = Tuple[str, float, str]
+
+
+def bench_fig5_area_scaling() -> List[Row]:
+    rows: List[Row] = []
+    for key, rec in fig5_area_sweep().items():
+        rows.append((f"fig5/area/{key}", rec["area_mm2"], "mm2"))
+    for p in (4, 8, 16, 32):
+        rows.append(
+            (f"fig5/buffer_share/{p}x{p}", 100 * buffer_share(EngineConfig(p=p)),
+             "percent (<2 at 32x32 per paper)")
+        )
+    rows.append(
+        ("fig5/geomean_scaling/fp16", fig5_geomean_scaling("fp16"),
+         "x per 4x MACs (paper band 3.27-3.79)")
+    )
+    return rows
+
+
+def bench_fig6_utilization() -> List[Row]:
+    rows: List[Row] = []
+    # Headline claim
+    r = simulate_gemm(EngineConfig(p=4), 64, 256, 128)
+    rows.append(("fig6/util/64x256x128@4x4", 100 * r.utilization,
+                 "percent (paper: 99.97)"))
+    # Utilization across Table I workloads x mesh sizes
+    for name, (m, k, n) in TABLE_I.items():
+        for p in (4, 8, 16, 32):
+            u = simulate_gemm(EngineConfig(p=p), m, k, n).utilization
+            rows.append((f"fig6/util/{name}@{p}x{p}", 100 * u, "percent"))
+    # K sweep (K >= 2p condition)
+    for k in (8, 16, 32, 64, 256, 1024):
+        u = simulate_gemm(EngineConfig(p=16), 64, k, 64).utilization
+        rows.append((f"fig6/util/K{k}@16x16_64x64", 100 * u, "percent"))
+    return rows
+
+
+def bench_fig7_runtime() -> List[Row]:
+    """Cluster-level runtimes: per-accelerator engine cycles under the L1
+    double-buffered tiling; the paper reports O-POPE up to 1.86x faster.
+
+    Fairness: EVERY accelerator gets a per-workload tile-plan search over the
+    64 kB budget (each dataflow prefers different tile aspect ratios), so the
+    comparison reflects dataflow + frequency, not tiling luck.
+    """
+    rows: List[Row] = []
+    worst = 0.0
+    for name, (m, k, n) in TABLE_I.items():
+        times = {}
+        for acc_name, acc in ACCELERATORS.items():
+            us = min(
+                _tiled_runtime_us(acc, m, k, n, plan)
+                for plan in _candidate_plans(m, k, n)
+            )
+            times[acc_name] = us
+            rows.append((f"fig7/runtime_us/{name}/{acc_name}", us, "us"))
+        speedup = max(times.values()) / times["o-pope"]
+        worst = max(worst, speedup)
+        rows.append((f"fig7/speedup/{name}", speedup, "x vs slowest baseline"))
+    rows.append(("fig7/max_speedup", worst, "x (paper: up to 1.86)"))
+    return rows
+
+
+def _candidate_plans(m: int, k: int, n: int, budget: int = 64 * 1024):
+    """Tile-plan candidates under the L1 budget (16-bit elements)."""
+    import math
+
+    from repro.core.tiling import TilingPlan, choose_tile
+
+    plans = [choose_tile(EngineConfig(p=16), m, k, n)]
+    for tm in (32, 64, 128, 256):
+        for tk in (32, 64, 128, 256):
+            # largest tn fitting the budget
+            tn_budget = (budget - tm * tk * 2) // ((tm + tk) * 2)
+            tn = min(n, max(32, (tn_budget // 32) * 32))
+            p = TilingPlan(min(tm, m), min(tk, k), tn, 2)
+            if 0 < p.total_bytes <= budget:
+                plans.append(p)
+    return plans
+
+
+def _tiled_runtime_us(acc, m: int, k: int, n: int, plan) -> float:
+    """L1-tiled runtime: per-tile engine cycles overlapped with DMA."""
+    import math
+
+    cluster = ClusterConfig()
+    mt = math.ceil(m / plan.tm)
+    nt = math.ceil(n / plan.tn)
+    kt = math.ceil(k / plan.tk)
+    total = math.ceil(plan.total_bytes / cluster.dma_bytes_per_cycle)
+    for i in range(mt):
+        tm = min(plan.tm, m - i * plan.tm)
+        for j in range(nt):
+            tn = min(plan.tn, n - j * plan.tn)
+            for kk in range(kt):
+                tk = min(plan.tk, k - kk * plan.tk)
+                eng = acc.cycles(tm, tk, tn).total_cycles
+                dma_bytes = (tm * tk + tk * tn) * plan.elem_bytes
+                if kk == kt - 1:
+                    dma_bytes += 2 * tm * tn * plan.elem_bytes
+                dma = math.ceil(dma_bytes / cluster.dma_bytes_per_cycle)
+                total += max(eng, dma) + cluster.reprogram_cycles
+    return total / (acc.freq_ghz * 1e3)
+
+
+def bench_table2() -> List[Row]:
+    rows: List[Row] = []
+    model = table2_model()
+    for name, rec in model.items():
+        pub = PUBLISHED_TABLE2[name]
+        rows.append((f"table2/gflops/{name}", rec["gflops"],
+                     f"published {pub[0]}"))
+        rows.append((f"table2/gflops_per_mm2/{name}", rec["gflops_per_mm2"],
+                     f"published {pub[1]}"))
+        if pub[2]:
+            rows.append((f"table2/tflops_per_w/{name}", rec["tflops_per_w"],
+                         f"published {pub[2]}"))
+    return rows

@@ -1,0 +1,79 @@
+"""Roofline report: aggregates the dry-run JSON records into the §Roofline
+table (one row per arch x shape x mesh) and emits benchmark rows.
+
+Reads experiments/dryrun/{single,multi}/*.json written by
+``python -m repro.launch.dryrun``. Missing records are reported as absent
+rather than failing (so `benchmarks.run` works before the matrix has run).
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import List, Tuple
+
+Row = Tuple[str, float, str]
+
+DRYRUN_DIR = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "experiments", "dryrun",
+)
+
+
+def load_records(dryrun_dir: str = DRYRUN_DIR):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*", "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def bench_roofline() -> List[Row]:
+    rows: List[Row] = []
+    recs = load_records()
+    if not recs:
+        return [("roofline/records", 0.0, "run repro.launch.dryrun first")]
+    ok = [r for r in recs if r.get("status") == "ok"]
+    rows.append(("roofline/cells_ok", float(len(ok)), f"of {len(recs)}"))
+    fits = sum(1 for r in ok if r["memory"]["fits_16gb"])
+    rows.append(("roofline/cells_fit_16gb", float(fits), f"of {len(ok)}"))
+    for r in ok:
+        key = f"{r['arch']}/{r['shape']}/{r['mesh']}"
+        rl = r["roofline"]
+        rows.append((f"roofline/fraction/{key}", rl["roofline_fraction"],
+                     f"dom={rl['dominant']}"))
+    return rows
+
+
+def markdown_table(mesh: str = "single", dryrun_dir: str = DRYRUN_DIR) -> str:
+    """The §Roofline markdown table for EXPERIMENTS.md."""
+    recs = [
+        r for r in load_records(dryrun_dir)
+        if r.get("mesh") == mesh and r.get("status") == "ok"
+    ]
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | dominant | "
+        "MODEL_FLOPS | useful ratio | roofline frac | GB/dev | fits |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        rl = r["roofline"]
+        lines.append(
+            "| {arch} | {shape} | {c:.4f} | {m:.4f} | {x:.4f} | {dom} | "
+            "{mf:.3e} | {ur:.3f} | {fr:.4f} | {gb:.2f} | {fit} |".format(
+                arch=r["arch"], shape=r["shape"],
+                c=rl["compute_s"], m=rl["memory_s"], x=rl["collective_s"],
+                dom=rl["dominant"], mf=r["model_flops_total"],
+                ur=rl["useful_compute_ratio"], fr=rl["roofline_fraction"],
+                gb=r["memory"]["hbm_need_bytes"] / 1e9,
+                fit="yes" if r["memory"]["fits_16gb"] else "NO",
+            )
+        )
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    import sys
+
+    print(markdown_table(sys.argv[1] if len(sys.argv) > 1 else "single"))

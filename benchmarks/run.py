@@ -1,0 +1,46 @@
+"""Benchmark driver: one function per paper table/figure + kernel + roofline.
+
+Prints ``name,value,derived`` CSV (value is us_per_call for timing rows and
+the natural unit otherwise — unit stated in the derived column).
+"""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from .kernel_bench import bench_kernel
+    from .paper_benchmarks import (
+        bench_fig5_area_scaling,
+        bench_fig6_utilization,
+        bench_fig7_runtime,
+        bench_table2,
+    )
+    from .roofline_report import bench_roofline
+
+    benches = [
+        bench_fig5_area_scaling,
+        bench_fig6_utilization,
+        bench_fig7_runtime,
+        bench_table2,
+        bench_kernel,
+        bench_roofline,
+    ]
+    print("name,value,derived")
+    failures = 0
+    for bench in benches:
+        try:
+            for name, value, derived in bench():
+                print(f"{name},{value:.6g},{derived}")
+        except Exception as e:  # keep the suite going; report at the end
+            failures += 1
+            print(f"{bench.__name__},nan,FAILED: {type(e).__name__}: {e}")
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

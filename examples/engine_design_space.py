@@ -1,0 +1,45 @@
+"""Design-space exploration with the O-POPE engine model.
+
+Sweeps mesh size, pipeline depth and workload shape to show the paper's two
+central trade-offs: (1) K >= 2p hides the output-tile swap; (2) pipeline
+depth L trades per-PE tile footprint against frequency (the registers ARE
+the buffers, so deeper pipelines need M,N multiples of sqrt(L)*p to stay
+utilized).
+
+Run: ``PYTHONPATH=src python examples/engine_design_space.py``
+"""
+
+from repro.core.engine import EngineConfig, simulate_gemm
+from repro.core.sota import area_model_mm2
+from repro.core.tiling import tiled_gemm_cycles
+
+
+def main() -> None:
+    print("== utilization vs K (p=16, M=N=64): the K >= 2p condition ==")
+    for k in (8, 16, 32, 64, 128, 512):
+        u = simulate_gemm(EngineConfig(p=16), 64, k, 64).utilization
+        bar = "#" * int(40 * u)
+        print(f"  K={k:4d}  {100 * u:6.2f}%  {bar}")
+
+    print("== utilization vs pipeline depth (64x256x128 on p=4) ==")
+    for L in (1, 4, 16):
+        cfg = EngineConfig(p=4, pipe_depth=L)
+        u = simulate_gemm(cfg, 64, 256, 128).utilization
+        print(f"  L={L:2d} (tile {cfg.tile_m}x{cfg.tile_n})  {100 * u:6.2f}%")
+
+    print("== area/perf across mesh sizes (FP16 MACs, 1 GHz) ==")
+    for p in (4, 8, 16, 32):
+        cfg = EngineConfig(p=p)
+        a = area_model_mm2(cfg)
+        print(f"  {p:2d}x{p:<2d}  {a['total']:7.4f} mm2  "
+              f"{cfg.peak_gflops:7.1f} GFLOPS  "
+              f"buffers {100 * a['input_buffers'] / a['total']:.2f}%")
+
+    print("== cluster-level tiled GEMM (2048x1024x2048) ==")
+    res = tiled_gemm_cycles(EngineConfig(p=16), 2048, 1024, 2048)
+    print(f"  plan {res['plan'].tm}x{res['plan'].tk}x{res['plan'].tn}  "
+          f"util {100 * res['utilization']:.2f}%  bound: {res['bound']}")
+
+
+if __name__ == "__main__":
+    main()

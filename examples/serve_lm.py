@@ -1,0 +1,56 @@
+"""Batched serving example: prefill a prompt batch, decode with the KV cache.
+
+Run: ``PYTHONPATH=src python examples/serve_lm.py [--arch jamba-v0.1-52b]``
+(reduced configs; the production decode shapes are exercised by the dry-run)
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import api
+from repro.serve import ServeEngine
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="chatglm3-6b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=32)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    params = api.init_params(cfg, jax.random.key(0))
+    batch = {
+        "tokens": jax.random.randint(
+            jax.random.key(1), (args.batch, args.prompt_len), 0, cfg.vocab
+        )
+    }
+    if cfg.family == "vlm":
+        batch["patch_embeds"] = jax.random.normal(
+            jax.random.key(2), (args.batch, cfg.n_img_tokens, cfg.d_model),
+            jnp.float32,
+        )
+    if cfg.family == "audio":
+        batch["frames"] = jax.random.normal(
+            jax.random.key(2), (args.batch, cfg.enc_seq, cfg.d_model),
+            jnp.float32,
+        )
+
+    eng = ServeEngine(cfg=cfg, params=params,
+                      max_len=args.prompt_len + args.gen,
+                      cache_dtype=jnp.float32)
+    t0 = time.perf_counter()
+    toks = eng.generate(batch, args.gen)
+    dt = time.perf_counter() - t0
+    print(f"[serve] {args.arch}: {toks.shape} tokens in {dt:.2f}s "
+          f"({args.batch * args.gen / dt:.1f} tok/s on CPU)")
+    print("[serve] sample:", toks[0, :12].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""End-to-end driver: train a ~100M-parameter LM for a few hundred steps.
+
+A scaled chatglm3-family config (~100M params) learns a Markov token stream
+through the full stack — O-POPE matmul path, AdamW, checkpointing, fault-
+tolerant loop. Loss falls from ln(4096) toward the stream's ~ln(4) entropy
+floor.
+
+Run: ``PYTHONPATH=src python examples/train_lm.py [--steps 300]``
+"""
+
+import argparse
+import dataclasses
+import tempfile
+
+import jax
+
+from repro.configs import get_config
+from repro.data import MarkovLMDataset, make_batch_fn
+from repro.models import api
+from repro.optim import AdamWConfig
+from repro.train import TrainLoopConfig, train
+
+
+def make_100m_config():
+    base = get_config("chatglm3-6b")
+    return dataclasses.replace(
+        base,
+        name="chatglm3-100m",
+        n_layers=12,
+        d_model=768,
+        n_heads=12,
+        n_kv=2,
+        head_dim=64,
+        d_ff=3072,
+        vocab=8192,
+        param_dtype="float32",
+        q_chunk=128,
+        kv_chunk=128,
+        loss_chunk=128,
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    args = ap.parse_args()
+
+    cfg = make_100m_config()
+    n_params = api.param_count(cfg)
+    print(f"[example] {cfg.name}: {n_params / 1e6:.1f}M params")
+
+    ds = MarkovLMDataset(vocab=cfg.vocab, seq_len=args.seq, batch=args.batch)
+    opt = AdamWConfig(peak_lr=3e-3, warmup_steps=30, total_steps=args.steps)
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        loop = TrainLoopConfig(
+            total_steps=args.steps, ckpt_every=100, ckpt_dir=ckpt_dir,
+            log_every=25,
+        )
+        res = train(cfg, opt, loop, make_batch_fn(ds),
+                    init_key=jax.random.key(0))
+    print(f"[example] loss {res.losses[0]:.3f} -> {res.losses[-1]:.3f} "
+          f"(floor ~1.39)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""Checkpoint substrate: atomic sharded save/restore + async writer."""
+from .checkpoint import AsyncCheckpointer, latest_step, restore, save
+__all__ = ["AsyncCheckpointer", "latest_step", "restore", "save"]

@@ -1,0 +1,43 @@
+"""O-POPE core: the paper's contribution as reusable models and analyses.
+
+* :mod:`repro.core.engine` — cycle-accurate O-POPE engine model (§II/§III-C).
+* :mod:`repro.core.dataflows` — Gemmini / RedMulE / Sauria baseline models.
+* :mod:`repro.core.tiling` — L1 double-buffered tiling (§II-C, Fig. 7 setup).
+* :mod:`repro.core.sota` — published PPA constants + Table II / Fig. 5 models.
+* :mod:`repro.core.roofline` — TPU v5e three-term roofline for the dry-run.
+* :mod:`repro.core.hlo_analysis` — collective-traffic extraction from HLO.
+"""
+
+from .engine import (
+    EngineConfig,
+    CycleReport,
+    simulate_gemm,
+    simulate_gemm_cycle_accurate,
+    OPOPE_16x16_FP16,
+)
+from .dataflows import ACCELERATORS, AcceleratorModel
+from .tiling import ClusterConfig, TilingPlan, choose_tile, tiled_gemm_cycles
+from .roofline import TPU_V5E, HardwareSpec, RooflineTerms, roofline_terms, model_flops
+from .hlo_analysis import CollectiveStats, collective_bytes, parse_hlo_collectives
+
+__all__ = [
+    "EngineConfig",
+    "CycleReport",
+    "simulate_gemm",
+    "simulate_gemm_cycle_accurate",
+    "OPOPE_16x16_FP16",
+    "ACCELERATORS",
+    "AcceleratorModel",
+    "ClusterConfig",
+    "TilingPlan",
+    "choose_tile",
+    "tiled_gemm_cycles",
+    "TPU_V5E",
+    "HardwareSpec",
+    "RooflineTerms",
+    "roofline_terms",
+    "model_flops",
+    "CollectiveStats",
+    "collective_bytes",
+    "parse_hlo_collectives",
+]

@@ -1,0 +1,144 @@
+"""Cycle models of the state-of-the-art GEMM accelerators O-POPE compares to.
+
+The paper (§III-D, Table II, Fig. 7) compares a 16x16 FP16 O-POPE against
+Gemmini (weight-stationary systolic), RedMulE (input-stationary inner-product
+rows) and Sauria (output-stationary systolic with explicit input buffering),
+all configured with 256 FP16 MAC units in 12 nm.
+
+These baselines were evaluated in the paper with vendor RTL simulation; here
+each is modelled with a documented, calibrated cycle model that reproduces
+
+* the published peak GFLOPS (Table II) — set by the per-design max frequency
+  in 12 nm: O-POPE 1.0 GHz, RedMulE 0.75 GHz, Sauria 0.65 GHz, Gemmini
+  0.55 GHz (peak = 2 * 256 * f), and
+* the qualitative runtime ordering of Fig. 7 (O-POPE up to ~1.86x faster),
+  driven by frequency * utilization under each dataflow's overheads.
+
+The models are approximations of published microarchitectures, NOT RTL; they
+are labelled as such everywhere they are reported.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Dict
+
+from .engine import CycleReport, EngineConfig, simulate_gemm
+
+__all__ = [
+    "AcceleratorModel",
+    "gemmini_ws_cycles",
+    "redmule_cycles",
+    "sauria_cycles",
+    "opope_cycles",
+    "ACCELERATORS",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class AcceleratorModel:
+    """A named cycle model with its max frequency in GF 12LP+."""
+
+    name: str
+    freq_ghz: float
+    n_macs: int
+    cycles: Callable[[int, int, int], CycleReport]
+
+    @property
+    def peak_gflops(self) -> float:
+        return 2.0 * self.n_macs * self.freq_ghz
+
+    def runtime_us(self, m: int, k: int, n: int) -> float:
+        return self.cycles(m, k, n).total_cycles / (self.freq_ghz * 1e3)
+
+    def utilization(self, m: int, k: int, n: int) -> float:
+        return self.cycles(m, k, n).utilization
+
+
+def _report(
+    name: str, m: int, k: int, n: int, total: int, compute: int, freq: float
+) -> CycleReport:
+    cfg = EngineConfig(p=16, freq_ghz=freq, name=name)
+    return CycleReport(
+        m=m,
+        k=k,
+        n=n,
+        total_cycles=total,
+        compute_cycles=compute,
+        stall_cycles=max(0, total - compute),
+        prologue_cycles=0,
+        epilogue_cycles=0,
+        useful_macs=m * k * n,
+        n_tiles=math.ceil(m / 16) * math.ceil(n / 16),
+        engine=cfg,
+    )
+
+
+def gemmini_ws_cycles(m: int, k: int, n: int, dim: int = 16) -> CycleReport:
+    """Gemmini weight-stationary systolic array (Genc et al., DAC'21).
+
+    For each (K-tile, N-tile) weight block of ``dim x dim``: weights preload
+    double-buffered behind the previous pass; activation rows stream with the
+    wavefronts of consecutive passes overlapped, so a pass costs ``m`` plus a
+    small inter-pass bubble; the skew fill/drain is paid once per call.
+    Gemmini's published utilization on large GEMMs is ~90+% — the runtime gap
+    to O-POPE is dominated by its 0.55 GHz ceiling (the paper's thesis).
+    """
+    kt = math.ceil(k / dim)
+    nt = math.ceil(n / dim)
+    per_pass = m + dim // 4  # stream M rows + inter-pass bubble
+    total = 80 + kt * nt * per_pass + 2 * dim  # skew fill + final drain
+    compute = kt * nt * m
+    return _report("gemmini-ws", m, k, n, total, compute, 0.55)
+
+
+def redmule_cycles(
+    m: int, k: int, n: int, h: int = 16, w: int = 16, pipe: int = 3
+) -> CycleReport:
+    """RedMulE input-stationary inner-product engine (Tortorella et al., FGCS'23).
+
+    The H x W CE array computes H output rows over W-chained FMAs; the K
+    dimension is consumed in chunks of ``w * (pipe + 1)`` elements and the
+    input buffering (which scales with #FPUs x pipeline depth — the overhead
+    O-POPE eliminates) refills with a bubble of ``w`` cycles per K chunk at
+    tile boundaries. M quantizes to H, N to W.
+    """
+    kc = w * (pipe + 1)  # K chunk absorbed per accumulation pass
+    mt = math.ceil(m / h)
+    nt = math.ceil(n / w)
+    kt = math.ceil(k / kc)
+    per_tile = kt * (kc + w // 4)  # chunk compute + refill bubble
+    total = 60 + mt * nt * per_tile + h  # 60: HWPE config; h: first fill
+    compute = mt * nt * kt * kc
+    return _report("redmule", m, k, n, total, compute, 0.75)
+
+
+def sauria_cycles(m: int, k: int, n: int, dim: int = 16) -> CycleReport:
+    """Sauria output-stationary systolic array (Fornt et al., TVLSI'23).
+
+    Output tile of ``dim x dim`` stays in the array; A/B stream through with a
+    skewed wavefront: per tile ``K + 2*dim`` cycles (fill + drain), plus an
+    explicit output drain of ``dim`` cycles per tile that is only partially
+    overlapped (the paper's motivation: limited FPU pipelining caps frequency
+    at 0.65 GHz in 12 nm rather than costing utilization).
+    """
+    mt = math.ceil(m / dim)
+    nt = math.ceil(n / dim)
+    per_tile = k + dim + dim // 2  # K stream + skew fill + partially-hidden drain
+    total = 60 + mt * nt * per_tile
+    compute = mt * nt * k
+    return _report("sauria", m, k, n, total, compute, 0.65)
+
+
+def opope_cycles(m: int, k: int, n: int, p: int = 16) -> CycleReport:
+    """O-POPE at 1 GHz (the paper's engine; see :mod:`repro.core.engine`)."""
+    return simulate_gemm(EngineConfig(p=p, freq_ghz=1.0, name="o-pope"), m, k, n)
+
+
+ACCELERATORS: Dict[str, AcceleratorModel] = {
+    "o-pope": AcceleratorModel("o-pope", 1.0, 256, opope_cycles),
+    "redmule": AcceleratorModel("redmule", 0.75, 256, redmule_cycles),
+    "sauria": AcceleratorModel("sauria", 0.65, 256, sauria_cycles),
+    "gemmini": AcceleratorModel("gemmini", 0.55, 256, gemmini_ws_cycles),
+}

@@ -1,0 +1,117 @@
+"""Parse compiled HLO text for roofline inputs.
+
+``compiled.cost_analysis()`` supplies per-device FLOPs and bytes, but XLA does
+not report collective traffic there. This module extracts it from
+``compiled.as_text()`` (post-SPMD, so all quantities are per device): every
+``all-gather`` / ``all-reduce`` / ``reduce-scatter`` / ``all-to-all`` /
+``collective-permute`` instruction is located and its operand/result sizes
+summed.
+
+Wire-byte convention (documented for the roofline): for each collective we
+take ``max(bytes_in, bytes_out)`` of the instruction as its traffic. This is
+the standard single-shot lower bound — e.g. an all-gather moves its (larger)
+output, a reduce-scatter its (larger) input, an all-reduce its full buffer
+(ring algorithms move ~2x; we report the multiplier-free bound and note it).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Iterable, List
+
+__all__ = ["CollectiveStats", "collective_bytes", "parse_hlo_collectives"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1,
+    "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e5m2fnuz": 1,
+    "f8e4m3fnuz": 1, "f8e3m4": 1, "f8e4m3b11fnuz": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+_SHAPE_RE = re.compile(
+    r"\b(" + "|".join(sorted(_DTYPE_BYTES, key=len, reverse=True)) + r")\[([0-9,]*)\]"
+)
+_COLLECTIVE_KINDS = (
+    "all-reduce",
+    "all-gather",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+# e.g.  %ar = (f32[128]) all-reduce(f32[128] %x), replica_groups=...
+_INSTR_RE = re.compile(
+    r"=\s*[^=]*?\b(" + "|".join(_COLLECTIVE_KINDS) + r")(?:-start|-done)?\("
+)
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    """Per-kind collective traffic of one compiled module (per device)."""
+
+    bytes_by_kind: Dict[str, int]
+    count_by_kind: Dict[str, int]
+    instructions: List[str]
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+    @property
+    def total_count(self) -> int:
+        return sum(self.count_by_kind.values())
+
+    def summary(self) -> Dict[str, object]:
+        return {
+            "total_bytes": self.total_bytes,
+            "total_count": self.total_count,
+            "by_kind": {
+                k: {"bytes": self.bytes_by_kind[k], "count": self.count_by_kind[k]}
+                for k in sorted(self.bytes_by_kind)
+            },
+        }
+
+
+def parse_hlo_collectives(hlo_text: str) -> CollectiveStats:
+    """Scan HLO text and accumulate collective bytes per op kind.
+
+    ``-start``/``-done`` async pairs are counted once (on the ``-start``; a
+    bare ``-done`` with no matching start, as appears for decomposed ops, is
+    counted on the done).
+    """
+    bytes_by_kind: Dict[str, int] = {k: 0 for k in _COLLECTIVE_KINDS}
+    count_by_kind: Dict[str, int] = {k: 0 for k in _COLLECTIVE_KINDS}
+    instructions: List[str] = []
+    for line in hlo_text.splitlines():
+        if "-done(" in line:  # completion of an async op counted at its start
+            continue
+        m = _INSTR_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(1)
+        lhs, _, rhs = line.partition("=")
+        out_bytes = _shape_bytes(rhs.split(kind, 1)[1].split("),", 1)[0]) or 0
+        # Result shape sits between '=' and the op name.
+        res_bytes = _shape_bytes(rhs.split(kind, 1)[0])
+        wire = max(out_bytes, res_bytes)
+        bytes_by_kind[kind] += wire
+        count_by_kind[kind] += 1
+        instructions.append(line.strip()[:200])
+    return CollectiveStats(bytes_by_kind, count_by_kind, instructions)
+
+
+def collective_bytes(hlo_text: str) -> int:
+    return parse_hlo_collectives(hlo_text).total_bytes

@@ -1,0 +1,144 @@
+"""Three-term roofline model for the dry-run artifacts (TPU v5e target).
+
+Per the assignment brief, for each (architecture x shape x mesh) cell we
+derive from the compiled module (all inputs per device, post-SPMD):
+
+* compute term    = HLO_FLOPs / peak_FLOPs_per_chip
+* memory term     = HLO_bytes / HBM_bandwidth_per_chip
+* collective term = collective_bytes / ICI_link_bandwidth
+
+(The brief's formulas divide totals by ``chips x per-chip-rate``; XLA's
+``cost_analysis`` is already per device, so the division by chip count has
+already happened.)
+
+Hardware constants (TPU v5e, per brief): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+__all__ = [
+    "HardwareSpec",
+    "TPU_V5E",
+    "RooflineTerms",
+    "roofline_terms",
+    "model_flops",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareSpec:
+    name: str
+    peak_flops: float  # FLOP/s per chip (bf16)
+    hbm_bw: float  # bytes/s per chip
+    ici_link_bw: float  # bytes/s per link
+
+
+TPU_V5E = HardwareSpec(
+    name="tpu-v5e", peak_flops=197e12, hbm_bw=819e9, ici_link_bw=50e9
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class RooflineTerms:
+    """Roofline seconds per term for one compiled step (per device)."""
+
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes_per_device: float
+    hw: HardwareSpec
+    model_flops_per_device: Optional[float] = None  # 6*N*D / chips
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        """Roofline-model step time: the max of the three terms (full overlap)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful-compute fraction of the roofline step time.
+
+        ``model_flops / peak`` over the bound: 1.0 means every roofline-limited
+        second does useful model math at peak. This is the reported perf score.
+        """
+        if not self.model_flops_per_device:
+            return self.compute_s / self.bound_s if self.bound_s else 0.0
+        return (self.model_flops_per_device / self.hw.peak_flops) / self.bound_s
+
+    @property
+    def useful_compute_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs — catches remat/dispatch/padding waste."""
+        if not self.model_flops_per_device or not self.flops_per_device:
+            return float("nan")
+        return self.model_flops_per_device / self.flops_per_device
+
+    def summary(self) -> Dict[str, object]:
+        return {
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "bound_s": self.bound_s,
+            "roofline_fraction": self.roofline_fraction,
+            "useful_compute_ratio": self.useful_compute_ratio,
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "collective_bytes_per_device": self.collective_bytes_per_device,
+        }
+
+
+def roofline_terms(
+    flops_per_device: float,
+    bytes_per_device: float,
+    collective_bytes_per_device: float,
+    *,
+    hw: HardwareSpec = TPU_V5E,
+    model_flops_total: Optional[float] = None,
+    n_chips: Optional[int] = None,
+) -> RooflineTerms:
+    model_per_dev = None
+    if model_flops_total is not None and n_chips:
+        model_per_dev = model_flops_total / n_chips
+    return RooflineTerms(
+        compute_s=flops_per_device / hw.peak_flops,
+        memory_s=bytes_per_device / hw.hbm_bw,
+        collective_s=collective_bytes_per_device / hw.ici_link_bw,
+        flops_per_device=flops_per_device,
+        bytes_per_device=bytes_per_device,
+        collective_bytes_per_device=collective_bytes_per_device,
+        hw=hw,
+        model_flops_per_device=model_per_dev,
+    )
+
+
+def model_flops(
+    n_params: int,
+    tokens: int,
+    *,
+    kind: str = "train",
+    n_params_active: Optional[int] = None,
+) -> float:
+    """MODEL_FLOPS = 6*N*D (train) or 2*N*D (inference fwd), N = active params.
+
+    For MoE models pass ``n_params_active`` (shared + routed*top_k experts plus
+    dense layers); for decode shapes ``tokens`` is the global batch (one token
+    per sequence per step).
+    """
+    n = n_params_active if n_params_active is not None else n_params
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n * tokens

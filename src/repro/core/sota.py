@@ -1,0 +1,143 @@
+"""Published PPA constants and the Table II / Fig. 5 analytical models.
+
+Area, frequency and power are silicon properties that cannot be measured in
+this container; the paper's published numbers (Table II, §III-B) are encoded
+here as constants, and an analytical area/power model — calibrated to them —
+reproduces the scaling claims of Fig. 5:
+
+* linear area scaling across 4x4 → 32x32 meshes with geomean area ratio
+  between quadrupled-MAC configs in [3.27x, 3.79x] (buffers scale with sqrt of
+  MACs, so the ratio is < 4x),
+* input-buffer area share dropping below 2% at 32x32,
+* Table II: O-POPE 512 GFLOPS / 2336 GFLOPS/mm2 / 3.18 TFLOPS/W, vs RedMulE
+  384 / 2134 / 2.74, Sauria 333 / 1036 / 2.95, Gemmini 280 / 749 / (n.r.).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict
+
+from .engine import EngineConfig
+
+__all__ = [
+    "PUBLISHED_TABLE2",
+    "MAC_AREA_UM2",
+    "area_model_mm2",
+    "buffer_share",
+    "power_model_w",
+    "table2_model",
+]
+
+# --- Published Table II (16x16 FP16->FP16 MAC configs, GF 12LP+) -----------
+# name -> (GFLOPS, GFLOPS/mm2, TFLOPS/W or None)
+PUBLISHED_TABLE2: Dict[str, tuple] = {
+    "gemmini": (280.0, 749.0, None),
+    "redmule": (384.0, 2134.0, 2.74),
+    "sauria": (333.0, 1036.0, 2.95),  # technology-scaled per DeepScaleTool
+    "o-pope": (512.0, 2336.0, 3.18),
+}
+
+# --- Analytical area model ---------------------------------------------------
+# Calibrated so that a 16x16 FP16 O-POPE lands on 512/2336 = 0.2192 mm2.
+# Per-PE area includes the FPnew MAC, its L pipeline registers, and the L
+# q-bit accumulator registers (§II-A). Relative MAC-kind factors follow the
+# FPnew area ratios reported across its instantiations.
+MAC_AREA_UM2: Dict[str, float] = {
+    "fp8_to_fp16": 620.0,  # 2x-widening small MAC
+    "fp16": 800.0,  # same-precision FP16 (Table II configuration)
+    "fp16_to_fp32": 1520.0,  # widening accumulation
+    "fp32": 2880.0,
+    "fp8_to_fp16+fp16": 1210.0,  # combined-support units (Fig. 5a)
+    "fp16_to_fp32+fp32": 3740.0,
+}
+_FLOP_AREA_UM2_PER_BIT = 2.9  # 12 nm register area (buffers + accumulators)
+_CTRL_BASE_MM2 = 0.004  # controller + streamer FSM
+_CTRL_PER_P_MM2 = 0.0003  # address generators grow with vector width
+
+
+def area_model_mm2(cfg: EngineConfig, mac_kind: str = "fp16") -> Dict[str, float]:
+    """Post-synthesis area estimate (mm^2) broken down per Fig. 5b."""
+    pe = cfg.n_macs * MAC_AREA_UM2[mac_kind] * 1e-6
+    buffers = cfg.input_buffer_bits * _FLOP_AREA_UM2_PER_BIT * 1e-6
+    ctrl = _CTRL_BASE_MM2 + _CTRL_PER_P_MM2 * cfg.p
+    return {
+        "pe_array": pe,
+        "input_buffers": buffers,
+        "control": ctrl,
+        "total": pe + buffers + ctrl,
+    }
+
+
+def buffer_share(cfg: EngineConfig, mac_kind: str = "fp16") -> float:
+    a = area_model_mm2(cfg, mac_kind)
+    return a["input_buffers"] / a["total"]
+
+
+# --- Analytical power model --------------------------------------------------
+# Calibrated to Table II: 512 GFLOPS / 3.18 TFLOPS/W -> 161 mW at TT 0.8 V.
+_E_MAC_PJ = 0.55  # energy per FP16 MAC incl. local movement
+_P_LEAK_PER_MAC_MW = 0.079  # static + clock tree share
+
+
+def power_model_w(cfg: EngineConfig, utilization: float = 1.0) -> float:
+    dyn = cfg.n_macs * cfg.freq_ghz * 1e9 * _E_MAC_PJ * 1e-12 * utilization
+    leak = cfg.n_macs * _P_LEAK_PER_MAC_MW * 1e-3
+    return dyn + leak
+
+
+def table2_model() -> Dict[str, Dict[str, float]]:
+    """Our reproduction of Table II from the cycle + area + power models.
+
+    GFLOPS is each accelerator's peak (2 * MACs * f_max) as in the paper;
+    area/power for the baselines are back-derived from their published
+    efficiency figures (silicon ground truth), while O-POPE's come from the
+    analytical models above — so the table cross-checks that the analytical
+    models land on the published O-POPE numbers.
+    """
+    from .dataflows import ACCELERATORS  # local import to avoid cycles
+
+    out: Dict[str, Dict[str, float]] = {}
+    for name, acc in ACCELERATORS.items():
+        gflops = acc.peak_gflops
+        if name == "o-pope":
+            area = area_model_mm2(EngineConfig(p=16, freq_ghz=1.0))["total"]
+            power = power_model_w(EngineConfig(p=16, freq_ghz=1.0))
+        else:
+            pub_gflops, pub_dens, pub_eff = PUBLISHED_TABLE2[name]
+            area = pub_gflops / pub_dens
+            power = (pub_gflops / 1e3) / pub_eff if pub_eff else float("nan")
+        out[name] = {
+            "gflops": gflops,
+            "gflops_per_mm2": gflops / area,
+            "tflops_per_w": (gflops / 1e3) / power if power == power else float("nan"),
+            "area_mm2": area,
+            "power_w": power,
+        }
+    return out
+
+
+def fig5_area_sweep() -> Dict[str, Dict[str, float]]:
+    """Fig. 5a/5b reproduction: area and peak GFLOPS across mesh x MAC kind."""
+    out: Dict[str, Dict[str, float]] = {}
+    for mac_kind in MAC_AREA_UM2:
+        for p in (4, 8, 16, 32):
+            cfg = EngineConfig(p=p, freq_ghz=1.0)
+            a = area_model_mm2(cfg, mac_kind)
+            out[f"{mac_kind}/{p}x{p}"] = {
+                "area_mm2": a["total"],
+                "buffer_share": a["input_buffers"] / a["total"],
+                "peak_gflops": cfg.peak_gflops,
+            }
+    return out
+
+
+def fig5_geomean_scaling(mac_kind: str = "fp16") -> float:
+    """Geometric mean of the area ratio between quadrupled-MAC configs."""
+    ratios = []
+    for p in (4, 8, 16):
+        a1 = area_model_mm2(EngineConfig(p=p), mac_kind)["total"]
+        a2 = area_model_mm2(EngineConfig(p=2 * p), mac_kind)["total"]
+        ratios.append(a2 / a1)
+    return math.prod(ratios) ** (1.0 / len(ratios))

@@ -1,0 +1,3 @@
+"""Data substrate: deterministic synthetic pipeline + prefetch."""
+from .pipeline import MarkovLMDataset, Prefetcher, make_batch_fn
+__all__ = ["MarkovLMDataset", "Prefetcher", "make_batch_fn"]

@@ -1,0 +1,21 @@
+"""Distribution layer: sharding rules for the FSDP x TP (x pod) mesh."""
+
+from .sharding import (
+    batch_pspecs,
+    batch_shardings,
+    cache_shardings,
+    data_axes,
+    guard_spec,
+    param_pspec,
+    param_shardings,
+)
+
+__all__ = [
+    "batch_pspecs",
+    "batch_shardings",
+    "cache_shardings",
+    "data_axes",
+    "guard_spec",
+    "param_pspec",
+    "param_shardings",
+]

@@ -1,0 +1,253 @@
+"""Sharding rules: FSDP x TP 2-D parameter sharding + batch/cache specs.
+
+Mesh axes (launch.mesh): ``data`` (+ ``pod`` at multi-pod scale) carry the
+batch; ``model`` carries tensor parallelism. Parameters shard 2-D — the TP
+dimension (d_ff / fused head dim / vocab / experts) over ``model`` and the
+d_model dimension over ``data`` (FSDP) — which is required to fit grok-1's
+314 B params + moments in a 4 TB pod (DESIGN.md §4).
+
+Every rule is divisibility-guarded: a dim that does not divide its mesh axis
+is replicated on that axis instead (JAX rejects unevenly-sharded jit
+arguments — verified empirically). This is what keeps qwen's 40 heads,
+grok's 8 experts and whisper's 51865-row vocab lowering cleanly.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+__all__ = [
+    "param_pspec",
+    "param_shardings",
+    "batch_pspecs",
+    "batch_shardings",
+    "cache_shardings",
+    "data_axes",
+    "guard_spec",
+]
+
+AxisName = Union[str, Tuple[str, ...]]
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """The batch axes: ('pod', 'data') on a multi-pod mesh, ('data',) else."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _axis_size(mesh: Mesh, axis: Optional[AxisName]) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        out = 1
+        for a in axis:
+            out *= mesh.shape[a]
+        return out
+    return mesh.shape[axis]
+
+
+def guard_spec(mesh: Mesh, shape: Sequence[int], spec: P) -> P:
+    """Drop any spec axis whose mesh size does not divide the dim."""
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for dim, axis in zip(shape, entries):
+        out.append(axis if dim % _axis_size(mesh, axis) == 0 else None)
+    return P(*out)
+
+
+# --- parameter rules ---------------------------------------------------------
+# Matched in order against '/'-joined tree paths. First hit wins. ``S`` below
+# marks the stacked leading period/layer axis on block params (always None).
+_FSDP = "data"  # d_model / reduction dims
+_TP = "model"  # d_ff / fused-heads / vocab / expert dims
+
+_PARAM_RULES: Tuple[Tuple[str, Tuple[Optional[str], ...]], ...] = (
+    # embeddings / unembedding: [V, D]
+    (r"embed/table$", (_TP, _FSDP)),
+    (r"lm_head$", (_TP, _FSDP)),
+    (r"enc_pos$", (None, _FSDP)),
+    # attention (stacked): wq/wk/wv [S, D, H*Dh]; wo [S, H*Dh, D]
+    (r"(attn|self_attn|cross_attn)/w[qkv]/w$", ("S", _FSDP, _TP)),
+    (r"(attn|self_attn|cross_attn)/w[qkv]/b$", ("S", _TP)),
+    (r"(attn|self_attn|cross_attn)/wo/w$", ("S", _TP, _FSDP)),
+    # dense MLP: w_up/w_gate [S, D, F]; w_down [S, F, D]
+    (r"mlp/w_(up|gate)$", ("S", _FSDP, _TP)),
+    (r"mlp/w_down$", ("S", _TP, _FSDP)),
+    # MoE: router [S, D, E]; experts [S, E, D, F] / [S, E, F, D].
+    # EP over the expert dim when it divides the model axis (deepseek 64,
+    # jamba 16); otherwise TP inside the expert on d_ff (grok E=8 — without
+    # this fallback the 3.2 TB of grok expert weights would replicate 16x).
+    (r"moe/router$", ("S", _FSDP, None)),
+    (r"moe/w_(up|gate)$", ("S", "_EP_E", _FSDP, "_EP_F")),
+    (r"moe/w_down$", ("S", "_EP_E", "_EP_F", _FSDP)),
+    (r"moe/shared/w_(up|gate)$", ("S", _FSDP, _TP)),
+    (r"moe/shared/w_down$", ("S", _TP, _FSDP)),
+    # mamba
+    (r"mamba/in_proj$", ("S", _FSDP, _TP)),
+    (r"mamba/conv_w$", ("S", None, _TP)),
+    (r"mamba/conv_b$", ("S", _TP)),
+    (r"mamba/x_proj$", ("S", _TP, None)),
+    (r"mamba/dt_proj$", ("S", None, _TP)),
+    (r"mamba/dt_bias$", ("S", _TP)),
+    (r"mamba/A_log$", ("S", _TP, None)),
+    (r"mamba/D$", ("S", _TP)),
+    (r"mamba/out_proj$", ("S", _TP, _FSDP)),
+    # xLSTM
+    (r"mlstm/w[qkv]$", ("S", _FSDP, _TP)),
+    (r"mlstm/w_if$", ("S", _FSDP, None)),
+    (r"mlstm/(w_o|ogate)$", ("S", _TP, _FSDP)),
+    (r"slstm/w_x$", ("S", _FSDP, _TP)),
+    (r"slstm/r$", ("S", None, None, None)),
+    (r"slstm/w_o$", ("S", _TP, _FSDP)),
+    # VLM projector
+    (r"mm_projector/w1$", (_FSDP, _TP)),
+    (r"mm_projector/w2$", (_TP, _FSDP)),
+    # norms, biases, scalars: replicated
+    (r".*", ()),
+)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        elif hasattr(k, "name"):
+            parts.append(str(k.name))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def param_pspec(
+    mesh: Mesh, path_str: str, shape: Sequence[int], *, stacked_depth: bool = True
+) -> P:
+    """Spec for one parameter leaf; 'S' entries map to the stacked layer dim."""
+    for pattern, rule in _PARAM_RULES:
+        if re.search(pattern, path_str):
+            entries = []
+            rule_list = list(rule)
+            # 'S' is positional: align rule entries to trailing dims if the
+            # leaf lacks the stacked axis (e.g. unstacked whisper usage).
+            if rule_list and rule_list[0] == "S":
+                if len(shape) == len(rule_list):
+                    entries.append(None)  # stacked axis replicated
+                    rule_list = rule_list[1:]
+                else:
+                    rule_list = rule_list[1:]
+            # Expert-dim fallback: _EP_E takes the model axis if the expert
+            # count divides it, else _EP_F (the d_ff entry) takes it.
+            if "_EP_E" in rule_list:
+                e_pos = rule_list.index("_EP_E")
+                dim_offset = len(entries)
+                e_dim = shape[dim_offset + e_pos]
+                ep_ok = e_dim % mesh.shape[_TP] == 0
+                rule_list = [
+                    (_TP if ep_ok else None)
+                    if a == "_EP_E"
+                    else ((None if ep_ok else _TP) if a == "_EP_F" else a)
+                    for a in rule_list
+                ]
+            entries.extend(rule_list)
+            spec = P(*entries) if entries else P()
+            return guard_spec(mesh, shape, spec)
+    return P()
+
+
+def param_shardings(mesh: Mesh, params_shapes: Any) -> Any:
+    """Tree of NamedShardings matching an eval_shape'd parameter pytree."""
+
+    def one(path, leaf):
+        spec = param_pspec(mesh, _path_str(path), leaf.shape)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, params_shapes)
+
+
+# --- batch / cache specs -----------------------------------------------------
+
+
+def batch_pspecs(mesh: Mesh, cfg: ArchConfig, batch_shapes: Any) -> Any:
+    """Input batch: leading batch dim over the data axes (guarded)."""
+    dp = data_axes(mesh)
+    dp_axis = dp if len(dp) > 1 else (dp[0] if dp else None)
+
+    def one(path, leaf):
+        spec = guard_spec(mesh, leaf.shape, P(dp_axis))
+        return spec
+
+    return jax.tree_util.tree_map_with_path(one, batch_shapes)
+
+
+def batch_shardings(mesh: Mesh, cfg: ArchConfig, batch_shapes: Any) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), batch_pspecs(mesh, cfg, batch_shapes)
+    )
+
+
+def cache_shardings(
+    mesh: Mesh, cfg: ArchConfig, cache_shapes: Any, *, layout: str = "decode"
+) -> Any:
+    """Decode-state sharding.
+
+    KV caches are stored fused, [layers, B, S, H_kv*D] (the fused head dim
+    always divides the 16-way model axis; individual head counts often
+    don't — see KVCache).
+
+    * ``layout="decode"`` — batch over the data axes, SEQUENCE over
+      ``model``: split-K flash-decoding; the per-token cache read is the
+      roofline memory term and shards 256-way. B=1 (long_500k) puts the
+      sequence over data axes too (SP).
+    * ``layout="prefill"`` — batch over data, fused HEAD dim over ``model``:
+      exactly the K/V projection output layout, so the prefill installs the
+      cache with zero resharding. (Serving reshards prefill->decode once,
+      amortized over thousands of decode steps.)
+
+    SSM / xLSTM states [layers, B, inner, ...]: batch over data axes, inner
+    dim over ``model``. Whisper cross K/V [L, B, T_enc, H, D]: batch only.
+    """
+    dp = data_axes(mesh)
+    dp_axis = dp if len(dp) > 1 else (dp[0] if dp else None)
+
+    def one(path, leaf):
+        shape = leaf.shape
+        name = _path_str(path)
+        last = name.split("/")[-1]
+        if leaf.ndim == 4 and last in ("k", "v"):
+            # fused KV cache [L, B, S, H*D]
+            b_ok = shape[1] % _axis_size(mesh, dp_axis) == 0
+            if layout == "prefill":
+                spec = P(None, dp_axis, None, _TP)
+            elif b_ok:
+                spec = P(None, dp_axis, _TP, None)
+            else:  # long-context decode, B=1: SP + split-K on the sequence
+                spec = P(None, None, (*_as_tuple(dp_axis), _TP), None)
+            return NamedSharding(mesh, guard_spec(mesh, shape, spec))
+        if leaf.ndim == 5 and "cross" in name:
+            return NamedSharding(
+                mesh, guard_spec(mesh, shape, P(None, dp_axis, None, None, None))
+            )
+        if leaf.ndim >= 3:
+            # ssm/conv/mlstm/slstm states: [L, B, inner, ...]
+            if "conv" in name:  # [L, B, d_conv-1, Di]
+                spec = P(None, dp_axis, None, _TP)
+            else:
+                spec = P(*([None, dp_axis, _TP] + [None] * (leaf.ndim - 3)))
+            return NamedSharding(mesh, guard_spec(mesh, shape, spec))
+        return NamedSharding(mesh, P())
+
+    return jax.tree_util.tree_map_with_path(one, cache_shapes)
+
+
+def _as_tuple(axis: Optional[AxisName]) -> Tuple[str, ...]:
+    if axis is None:
+        return ()
+    return axis if isinstance(axis, tuple) else (axis,)

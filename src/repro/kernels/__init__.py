@@ -1,0 +1,24 @@
+"""O-POPE kernels: output-stationary Pallas TPU kernels + jnp oracles.
+
+* opope_gemm      — the paper's GEMM dataflow (VMEM-resident accumulator,
+                    K-innermost panel streaming, C-preload epilogue).
+* opope_attention — flash attention with the same accumulator-resident
+                    structure (beyond-paper, §Perf).
+* opope_scan      — state-resident chunked linear scan (mamba/xLSTM).
+* ref             — pure-jnp oracles for all of the above.
+* ops             — the backend-routed matmul every model layer calls.
+"""
+
+from . import ops, ref
+from .opope_gemm import opope_gemm
+from .opope_attention import opope_attention, opope_attention_bhsd
+from .opope_scan import opope_chunked_scan
+
+__all__ = [
+    "ops",
+    "ref",
+    "opope_gemm",
+    "opope_attention",
+    "opope_attention_bhsd",
+    "opope_chunked_scan",
+]

@@ -1,0 +1,157 @@
+"""Flash attention with the O-POPE accumulator-resident dataflow (Pallas).
+
+Beyond-paper kernel (§Perf): the paper keeps the GEMM's output tile resident
+in the PE accumulators while input panels stream. Attention has the same
+structure once softmax is computed online — the per-query-block state
+``(m, l, acc)`` is the output-stationary accumulator, KV panels are the
+streamed rank-k updates:
+
+* grid = (q_blocks, kv_steps), kv innermost (``arbitrary``), exactly the
+  (m, n, k) structure of ``opope_gemm`` with k -> KV panels;
+* ``m/l/acc`` live in VMEM scratch across the KV loop (the paper's
+  accumulator registers), written to the output window once at the end;
+* Mosaic double-buffers the K/V panel DMAs behind the MXU — the "pipeline
+  registers as buffers" insight, one level up.
+
+Single-head layout (q: [S, D], k/v: [T, D]); batch/heads via ``jax.vmap``.
+Causal masking per block pair; fully-masked panels are skipped via
+``pl.when`` (no MXU work issued).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["opope_attention", "opope_attention_bhsd"]
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def _attn_kernel(
+    q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+    *, kv_steps: int, block_q: int, block_k: int, causal: bool, scale: float,
+    t_actual: int, q_offset: int,
+):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # Causal panel pruning: panel j is live iff its first kv position is
+    # <= the block's last query position (+ q_offset aligns q to the END of
+    # the key range when T != S, matching cache-continuation semantics).
+    live = (j * block_k <= (i + 1) * block_q - 1 + q_offset) if causal else True
+
+    @pl.when(live)
+    def _panel():
+        s = jax.lax.dot_general(
+            q_ref[...], k_ref[...], (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale  # [block_q, block_k]
+        qpos = i * block_q + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 0
+        )
+        kpos = j * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1
+        )
+        valid = kpos < t_actual  # padded keys never win softmax weight
+        if causal:
+            valid &= kpos <= qpos + q_offset
+        s = jnp.where(valid, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=-1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+            p.astype(v_ref.dtype), v_ref[...], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_ref[...] = m_new
+
+    @pl.when(j == kv_steps - 1)
+    def _writeback():
+        o_ref[...] = (
+            acc_ref[...] / jnp.maximum(l_ref[...], 1e-37)[:, None]
+        ).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "block_q", "block_k", "interpret"),
+)
+def opope_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Single-head attention. q: [S, D]; k/v: [T, D] -> [S, D]."""
+    s, d = q.shape
+    t = k.shape[0]
+    scale = d**-0.5
+    bq = min(block_q, s)
+    bk = min(block_k, t)
+    sp, tp = _rup(s, bq), _rup(t, bk)
+    q_p = jnp.pad(q, ((0, sp - s), (0, 0)))
+    k_p = jnp.pad(k, ((0, tp - t), (0, 0)))
+    v_p = jnp.pad(v, ((0, tp - t), (0, 0)))
+
+    kv_steps = tp // bk
+    out = pl.pallas_call(
+        functools.partial(
+            _attn_kernel,
+            kv_steps=kv_steps,
+            block_q=bq,
+            block_k=bk,
+            causal=causal,
+            scale=scale,
+            t_actual=t,
+            q_offset=t - s,
+        ),
+        grid=(sp // bq, kv_steps),
+        in_specs=[
+            pl.BlockSpec((bq, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bk, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((bk, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq, d), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((sp, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(q_p, k_p, v_p)
+    return out[:s]
+
+
+def opope_attention_bhsd(
+    q: jax.Array, k: jax.Array, v: jax.Array, **kw
+) -> jax.Array:
+    """Batched/multi-head wrapper. q: [B,H,S,D]; k/v: [B,H,T,D]."""
+    fn = functools.partial(opope_attention, **kw)
+    return jax.vmap(jax.vmap(fn))(q, k, v)
+
+
+def _rup(x: int, m: int) -> int:
+    return m * math.ceil(x / m)

@@ -1,0 +1,191 @@
+"""O-POPE GEMM as a Pallas TPU kernel.
+
+This is the TPU-native embodiment of the paper's dataflow (DESIGN.md §3):
+
+* **Output-stationary**: the fp32 accumulator tile lives in VMEM scratch for
+  the whole K loop — the analogue of the paper's accumulator registers. It is
+  written to the (HBM-backed) output window exactly once, on the last K step.
+* **Outer-product K streaming**: the grid is ``(m, n, k)`` with ``k`` the
+  innermost, ``arbitrary`` (sequential) dimension; each step performs a
+  rank-``block_k`` panel update — the MXU generalization of the paper's
+  rank-1 updates (a rank-1 grid step would starve the 128x128 MXU; the
+  *dataflow* is identical, the panel width is sized to the unit).
+* **Pipeline registers as buffers**: Mosaic's automatic multiple-buffering of
+  the ``BlockSpec`` input streams plays the role of the FPU pipeline
+  registers: A/B panels for step ``k+1`` are DMA'd while step ``k`` computes,
+  with no explicitly managed buffers — the same "the pipeline is the buffer"
+  insight, one level up the memory hierarchy.
+* **Accumulator preload (C operand)**: like the paper's engine, the kernel can
+  preload an initial C tile into the accumulator (``c=``). This fuses
+  ``A @ B + C`` (residual adds, bias grids, K-split partial accumulation)
+  into the GEMM epilogue with zero extra HBM round-trip.
+* **Mixed precision**: inputs fp8/bf16/f32, accumulation always fp32
+  (``preferred_element_type``), output cast configurable — mirroring the
+  paper's FP8→FP16 / FP16→FP32 widening MAC configurations.
+
+Block shapes are multiples of the TPU tile (8x128 lanes; 128-aligned MXU
+dims). Shape padding is applied outside the ``pallas_call`` and reported via
+:func:`padding_waste` — the software analogue of the paper's tile-quantization
+utilization loss (§III-C).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = [
+    "opope_gemm",
+    "default_block_shape",
+    "padding_waste",
+]
+
+
+def _gemm_kernel(a_ref, b_ref, o_ref, acc_ref, *, k_steps: int):
+    """One (m, n, k) grid step: rank-block_k update of the resident tile."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == k_steps - 1)
+    def _writeback():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _gemm_preload_kernel(a_ref, b_ref, c_ref, o_ref, acc_ref, *, k_steps: int):
+    """As :func:`_gemm_kernel` but the accumulator is preloaded from C —
+    the paper's accumulator-preload path (Fig. 2/3)."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = c_ref[...].astype(jnp.float32)
+
+    acc_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == k_steps - 1)
+    def _writeback():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def default_block_shape(
+    m: int, k: int, n: int, elem_bytes: int = 2
+) -> Tuple[int, int, int]:
+    """Pick (block_m, block_n, block_k) the way `core.tiling.choose_tile` does
+    for the TCDM, with VMEM (16 MiB/core, ~half usable with double buffering)
+    as the budget: C tile fp32 + double-buffered A/B panels must fit, MXU dims
+    128-aligned, and block_k at least 2x the MXU side so the output tile swap
+    hides under compute (the paper's K >= 2p condition, one level up)."""
+    bm = min(256, max(128, 8 * math.ceil(m / 8) if m < 128 else 128))
+    bn = min(256, 128 * max(1, math.ceil(min(n, 256) / 128)))
+    bk = min(512, 128 * max(2, math.ceil(min(k, 512) / 128)))
+    # VMEM budget: acc f32 + 2x (A + B panels).
+    budget = 8 * 1024 * 1024
+    while (
+        bm * bn * 4 + 2 * (bm * bk + bk * bn) * elem_bytes > budget and bk > 128
+    ):
+        bk //= 2
+    return bm, bn, bk
+
+
+def padding_waste(m: int, k: int, n: int, bm: int, bn: int, bk: int) -> float:
+    """Fraction of MACs wasted on pad — the paper's quantization loss."""
+    mp = math.ceil(m / bm) * bm
+    kp = math.ceil(k / bk) * bk
+    np_ = math.ceil(n / bn) * bn
+    return 1.0 - (m * k * n) / (mp * kp * np_)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "block_m",
+        "block_n",
+        "block_k",
+        "out_dtype",
+        "interpret",
+    ),
+)
+def opope_gemm(
+    a: jax.Array,
+    b: jax.Array,
+    c: Optional[jax.Array] = None,
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 256,
+    out_dtype: Optional[jnp.dtype] = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """``O = A @ B (+ C)`` with the O-POPE dataflow. a: [M,K], b: [K,N].
+
+    ``interpret=True`` runs the kernel body in the Pallas interpreter (CPU) —
+    used for all correctness tests in this container; on a real TPU the same
+    call lowers through Mosaic.
+    """
+    if a.ndim != 2 or b.ndim != 2 or a.shape[1] != b.shape[0]:
+        raise ValueError(f"bad GEMM shapes {a.shape} @ {b.shape}")
+    m, k = a.shape
+    _, n = b.shape
+    out_dtype = jnp.dtype(out_dtype or a.dtype)
+
+    bm, bn, bk = min(block_m, _rup(m, 8)), min(block_n, _rup(n, 128)), min(
+        block_k, _rup(k, 128)
+    )
+    mp, kp, np_ = _rup(m, bm), _rup(k, bk), _rup(n, bn)
+    a_p = _pad2(a, mp, kp)
+    b_p = _pad2(b, kp, np_)
+    k_steps = kp // bk
+
+    grid = (mp // bm, np_ // bn, k_steps)
+    in_specs = [
+        pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+        pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+    ]
+    operands = [a_p, b_p]
+    if c is not None:
+        if c.shape != (m, n):
+            raise ValueError(f"C preload shape {c.shape} != {(m, n)}")
+        in_specs.append(pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)))
+        operands.append(_pad2(c, mp, np_))
+        kernel = functools.partial(_gemm_preload_kernel, k_steps=k_steps)
+    else:
+        kernel = functools.partial(_gemm_kernel, k_steps=k_steps)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(*operands)
+    return out[:m, :n]
+
+
+def _rup(x: int, mult: int) -> int:
+    return mult * math.ceil(x / mult)
+
+
+def _pad2(x: jax.Array, d0: int, d1: int) -> jax.Array:
+    if x.shape == (d0, d1):
+        return x
+    return jnp.pad(x, ((0, d0 - x.shape[0]), (0, d1 - x.shape[1])))

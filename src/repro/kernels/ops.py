@@ -1,0 +1,147 @@
+"""Public jit'd matmul entry point used by every layer in the framework.
+
+``matmul`` routes through one of three backends with identical numerics
+(fp32 accumulation, single final cast — see `ref.py`):
+
+* ``"pallas"``            — the O-POPE Pallas kernel, compiled (TPU).
+* ``"pallas_interpret"``  — same kernel body, Pallas interpreter (CPU tests).
+* ``"xla"``               — ``jax.lax.dot_general`` with
+  ``preferred_element_type=f32``; used for the CPU dry-run, where Pallas
+  cannot lower, and as the A/B comparison baseline in benchmarks.
+
+The default ``"auto"`` picks pallas on TPU and xla elsewhere, so model code is
+backend-agnostic. A ``custom_vjp`` makes the backward pass run the same
+O-POPE dataflow (two more GEMMs: dA = dO @ B^T, dB = A^T @ dO) instead of
+whatever XLA would pick for the transposed dots.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import opope_gemm as _kern
+from . import ref as _ref
+
+__all__ = ["matmul", "linear", "default_backend", "set_default_backend"]
+
+_DEFAULT_BACKEND = "auto"
+
+
+def default_backend() -> str:
+    if _DEFAULT_BACKEND != "auto":
+        return _DEFAULT_BACKEND
+    platform = jax.devices()[0].platform
+    return "pallas" if platform == "tpu" else "xla"
+
+
+def set_default_backend(name: str) -> None:
+    """Override backend globally ('pallas', 'pallas_interpret', 'xla', 'auto')."""
+    global _DEFAULT_BACKEND
+    if name not in ("pallas", "pallas_interpret", "xla", "auto"):
+        raise ValueError(name)
+    _DEFAULT_BACKEND = name
+
+
+def _matmul_impl(
+    a: jax.Array,
+    b: jax.Array,
+    c: Optional[jax.Array],
+    backend: str,
+    out_dtype,
+) -> jax.Array:
+    if backend == "xla":
+        return _ref.reference_matmul(a, b, c, out_dtype=out_dtype)
+    interpret = backend == "pallas_interpret"
+    return _kern.opope_gemm(a, b, c, out_dtype=out_dtype, interpret=interpret)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def _matmul(a, b, c, backend, out_dtype):
+    return _matmul_impl(a, b, c, backend, out_dtype)
+
+
+def _matmul_fwd(a, b, c, backend, out_dtype):
+    return _matmul_impl(a, b, c, backend, out_dtype), (a, b)
+
+
+def _matmul_bwd(backend, out_dtype, res, g):
+    a, b = res
+    # Backward = two more O-POPE GEMMs in the same dataflow; gradients are
+    # accumulated in fp32 and cast back to the operand dtypes.
+    da = _matmul_impl(g, b.T, None, backend, a.dtype)
+    db = _matmul_impl(a.T, g, None, backend, b.dtype)
+    dc = g  # c enters the accumulator linearly
+    return da, db, dc
+
+
+_matmul.defvjp(_matmul_fwd, _matmul_bwd)
+
+
+def matmul(
+    a: jax.Array,
+    b: jax.Array,
+    c: Optional[jax.Array] = None,
+    *,
+    backend: Optional[str] = None,
+    out_dtype=None,
+) -> jax.Array:
+    """``a @ b (+ c)`` with O-POPE semantics; a: [..., K], b: [K, N].
+
+    Leading batch dims of ``a`` are flattened into M (the engine sees one tall
+    GEMM — exactly how the paper maps ML layers onto the engine, Table I).
+    """
+    out_dtype = jnp.dtype(out_dtype or a.dtype)
+    backend = backend or default_backend()
+    batch_shape = a.shape[:-1]
+    m = 1
+    for d in batch_shape:
+        m *= d
+    a2 = a.reshape(m, a.shape[-1])
+    if c is None:
+        out = _matmul_nc(a2, b, backend, out_dtype)
+    else:
+        out = _matmul(a2, b, c.reshape(m, b.shape[-1]), backend, out_dtype)
+    return out.reshape(*batch_shape, b.shape[-1])
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def _matmul_nc(a, b, backend, out_dtype):
+    return _matmul_impl(a, b, None, backend, out_dtype)
+
+
+def _matmul_nc_fwd(a, b, backend, out_dtype):
+    return _matmul_impl(a, b, None, backend, out_dtype), (a, b)
+
+
+def _matmul_nc_bwd(backend, out_dtype, res, g):
+    a, b = res
+    da = _matmul_impl(g, b.T, None, backend, a.dtype)
+    db = _matmul_impl(a.T, g, None, backend, b.dtype)
+    return da, db
+
+
+_matmul_nc.defvjp(_matmul_nc_fwd, _matmul_nc_bwd)
+
+
+def linear(
+    x: jax.Array,
+    w: jax.Array,
+    bias: Optional[jax.Array] = None,
+    *,
+    backend: Optional[str] = None,
+    out_dtype=None,
+) -> jax.Array:
+    """Linear layer on the O-POPE path. Bias rides the C-preload operand —
+    the fused epilogue the paper's accumulator preload enables for free."""
+    if bias is not None:
+        batch = x.shape[:-1]
+        m = 1
+        for d in batch:
+            m *= d
+        c = jnp.broadcast_to(bias, (m, w.shape[-1])).reshape(*batch, w.shape[-1])
+        return matmul(x, w, c, backend=backend, out_dtype=out_dtype)
+    return matmul(x, w, backend=backend, out_dtype=out_dtype)

@@ -1,0 +1,89 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each reference implements the exact numerical contract of its kernel —
+including accumulation precision — so `assert_allclose` tolerances in the
+tests reflect only reassociation noise, not semantic differences.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["reference_matmul", "reference_attention", "reference_chunked_scan"]
+
+
+def reference_matmul(
+    a: jax.Array,
+    b: jax.Array,
+    c: Optional[jax.Array] = None,
+    *,
+    out_dtype: Optional[jnp.dtype] = None,
+) -> jax.Array:
+    """Oracle for :func:`repro.kernels.opope_gemm.opope_gemm`.
+
+    Contract (mirrors the O-POPE PE, §II-A): multiply in the input format,
+    accumulate in fp32 (the TPU MXU's ``preferred_element_type`` — the
+    analogue of the paper's widening accumulation), optionally add the
+    preloaded C operand into the accumulator, cast once at the end.
+    """
+    out_dtype = out_dtype or a.dtype
+    acc = jnp.dot(a, b, preferred_element_type=jnp.float32)
+    if c is not None:
+        acc = acc + c.astype(jnp.float32)
+    return acc.astype(out_dtype)
+
+
+def reference_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    scale: Optional[float] = None,
+    out_dtype: Optional[jnp.dtype] = None,
+) -> jax.Array:
+    """Oracle for :func:`repro.kernels.opope_attention.opope_attention`.
+
+    Shapes: q [S, D], k/v [T, D] (single head; the kernel vmaps batch/heads).
+    fp32 softmax and accumulation throughout.
+    """
+    out_dtype = out_dtype or q.dtype
+    scale = scale if scale is not None else q.shape[-1] ** -0.5
+    s = jnp.einsum(
+        "sd,td->st", q, k, preferred_element_type=jnp.float32
+    ) * scale
+    if causal:
+        sq, tk = q.shape[0], k.shape[0]
+        mask = jnp.tril(jnp.ones((sq, tk), dtype=bool), k=tk - sq)
+        s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("st,td->sd", p.astype(jnp.float32), v.astype(jnp.float32))
+    return o.astype(out_dtype)
+
+
+def reference_chunked_scan(
+    decay: jax.Array, update: jax.Array, init: Optional[jax.Array] = None
+) -> jax.Array:
+    """Oracle for the state-resident chunked linear scan kernel.
+
+    Computes ``h[t] = decay[t] * h[t-1] + update[t]`` over the leading axis in
+    fp32 and returns all states. decay/update: [S, ...] broadcastable.
+    """
+    decay = decay.astype(jnp.float32)
+    update = update.astype(jnp.float32)
+    h0 = (
+        jnp.zeros_like(update[0])
+        if init is None
+        else jnp.broadcast_to(init.astype(jnp.float32), update[0].shape)
+    )
+
+    def step(h, du):
+        d, u = du
+        h = d * h + u
+        return h, h
+
+    _, hs = jax.lax.scan(step, h0, (decay, update))
+    return hs

@@ -1,0 +1,9 @@
+"""Launchers: production mesh, multi-pod dry-run, train and serve drivers.
+
+NOTE: do not import .dryrun from here — it sets XLA_FLAGS at import time and
+must only be imported as the program entry point (python -m repro.launch.dryrun).
+"""
+
+from .mesh import make_production_mesh, make_test_mesh
+
+__all__ = ["make_production_mesh", "make_test_mesh"]

@@ -1,0 +1,36 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so that
+importing this module never touches JAX device state — the dry-run must set
+``XLA_FLAGS`` before any device query, and tests must keep seeing 1 device.
+
+Mesh topology (TPU v5e pods of 256 chips):
+
+* single pod:  (data=16, model=16)           — 256 chips
+* multi pod:   (pod=2, data=16, model=16)    — 512 chips
+
+``model`` maps onto the intra-pod ICI torus dimension with the highest
+locality (TP traffic is the latency-critical all-reduce path); ``pod``
+crosses the slower inter-pod links and carries only data-parallel gradient
+all-reduces, which overlap with the backward pass.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+__all__ = ["make_production_mesh", "make_test_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(AxisType.Auto,) * len(axes)
+    )
+
+
+def make_test_mesh(shape=(2, 2, 2), axes=("pod", "data", "model")):
+    """Small mesh for subprocess smoke tests (8 forced host devices)."""
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))

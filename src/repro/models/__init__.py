@@ -1,0 +1,14 @@
+"""Model zoo: all 10 assigned architecture families, pure-JAX, scan-stacked."""
+
+from . import attention, encdec, layers, mamba, moe, transformer, vlm, xlstm
+
+__all__ = [
+    "attention",
+    "encdec",
+    "layers",
+    "mamba",
+    "moe",
+    "transformer",
+    "vlm",
+    "xlstm",
+]

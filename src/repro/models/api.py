@@ -1,0 +1,133 @@
+"""Family-dispatched model API: one surface for all 10 architectures.
+
+Batch dicts (matching ``launch.dryrun.input_specs``):
+
+* LM families (dense/moe/hybrid/ssm): ``{"tokens", "labels"}``
+* vlm:   ``{"tokens", "labels", "patch_embeds"}``
+* audio: ``{"frames", "tokens", "labels"}``
+
+Decode state is ``(caches, pos)`` where ``caches`` is the family's stacked
+cache pytree and ``pos`` the current sequence position (int32 scalar).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from . import encdec as encdec_mod
+from . import transformer as tf_mod
+from . import vlm as vlm_mod
+
+__all__ = [
+    "init_params",
+    "loss_fn",
+    "prefill",
+    "decode",
+    "init_state",
+    "param_count",
+    "active_param_count",
+]
+
+
+def init_params(cfg: ArchConfig, key: jax.Array):
+    if cfg.family == "audio":
+        return encdec_mod.init_encdec_params(cfg, key)
+    if cfg.family == "vlm":
+        return vlm_mod.init_vlm_params(cfg, key)
+    return tf_mod.init_lm_params(cfg, key)
+
+
+def loss_fn(cfg: ArchConfig, params, batch: Dict[str, jax.Array]) -> jax.Array:
+    if cfg.family == "audio":
+        return encdec_mod.encdec_loss(
+            params, batch["frames"], batch["tokens"], batch["labels"], cfg
+        )
+    if cfg.family == "vlm":
+        return vlm_mod.vlm_loss(
+            params, batch["tokens"], batch["patch_embeds"], batch["labels"], cfg
+        )
+    return tf_mod.lm_loss(params, batch["tokens"], batch["labels"], cfg)
+
+
+def init_state(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    """Decode caches sized for ``max_len`` total positions."""
+    if cfg.family == "audio":
+        return encdec_mod.init_decoder_caches(cfg, batch, max_len, dtype)
+    return tf_mod.init_caches(cfg, batch, max_len, dtype)
+
+
+def prefill(
+    cfg: ArchConfig, params, batch: Dict[str, jax.Array], max_len: int,
+    cache_dtype=jnp.bfloat16,
+) -> Tuple[jax.Array, Any]:
+    """Process the full prompt; return (last-token logits [B,V], caches)."""
+    if cfg.family == "audio":
+        enc_out = encdec_mod.encode(params, batch["frames"], cfg)
+        caches = encdec_mod.init_decoder_caches(
+            cfg, batch["tokens"].shape[0], max_len, cache_dtype
+        )
+        hidden, caches = encdec_mod.decoder_forward(
+            params, batch["tokens"], cfg, enc_out=enc_out, caches=caches,
+            mode="prefill",
+        )
+        logits = jnp.einsum(
+            "bd,vd->bv", hidden[:, -1], params["embed"]["table"],
+            preferred_element_type=jnp.float32,
+        )
+        return logits, caches
+
+    b = batch["tokens"].shape[0]
+    caches = tf_mod.init_caches(cfg, b, max_len, cache_dtype)
+    extra = None
+    if cfg.family == "vlm":
+        extra = vlm_mod.project_image(params, batch["patch_embeds"])
+    hidden, caches, _ = tf_mod.lm_forward(
+        params, batch["tokens"], cfg, mode="prefill", caches=caches,
+        extra_embeds=extra,
+    )
+    logits = tf_mod.lm_logits(params, hidden[:, -1:], cfg)[:, 0]
+    return logits, caches
+
+
+def decode(
+    cfg: ArchConfig, params, token: jax.Array, caches, pos: jax.Array
+) -> Tuple[jax.Array, Any]:
+    """One decode step. token: [B, 1] -> (logits [B, V], new caches)."""
+    if cfg.family == "audio":
+        hidden, caches = encdec_mod.decoder_forward(
+            params, token, cfg, caches=caches, mode="decode"
+        )
+        logits = jnp.einsum(
+            "bd,vd->bv", hidden[:, 0], params["embed"]["table"],
+            preferred_element_type=jnp.float32,
+        )
+        return logits, caches
+    b = token.shape[0]
+    positions = jnp.broadcast_to(pos.astype(jnp.int32), (b, 1))
+    hidden, caches, _ = tf_mod.lm_forward(
+        params, token, cfg, mode="decode", caches=caches, positions=positions
+    )
+    logits = tf_mod.lm_logits(params, hidden, cfg)[:, 0]
+    return logits, caches
+
+
+def param_count(cfg: ArchConfig) -> int:
+    shapes = jax.eval_shape(functools.partial(init_params, cfg), jax.random.key(0))
+    return sum(math.prod(x.shape) for x in jax.tree.leaves(shapes))
+
+
+def active_param_count(cfg: ArchConfig) -> int:
+    total = param_count(cfg)
+    if cfg.moe is None:
+        return total
+    expert_params_per_layer = 3 * cfg.d_model * cfg.moe.d_ff_expert
+    n_moe_layers = cfg.n_periods * sum(1 for b in cfg.pattern if b.ffn == "moe")
+    routed_total = n_moe_layers * cfg.moe.n_experts * expert_params_per_layer
+    routed_active = n_moe_layers * cfg.moe.top_k * expert_params_per_layer
+    return total - routed_total + routed_active

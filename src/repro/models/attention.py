@@ -1,0 +1,340 @@
+"""GQA attention with O-POPE-style blockwise accumulation.
+
+The full-sequence path (:func:`blockwise_attention`) applies the paper's
+output-stationary insight one level up: the per-query-block softmax state
+``(m, l, acc)`` stays resident while KV panels stream through — never
+materializing the S x T score matrix. Query blocks are unrolled in Python so
+causal / sliding-window structure prunes KV panels *statically*: HLO FLOPs
+stay close to the useful FLOPs (this shows up directly in the roofline's
+useful-compute ratio).
+
+Features (driven by the arch configs): grouped KV heads, RoPE with partial
+rotary fraction (chatglm3's 2-D RoPE), sliding windows (gemma2 local layers),
+attention logit soft-capping (gemma2), QKV bias (qwen2.5), bidirectional mode
+(whisper encoder), cross-attention (whisper decoder), and single-token decode
+against a (possibly sequence-sharded) KV cache — split-K flash-decoding, with
+the partial-softmax reduction handled by GSPMD.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from .layers import Initializer, apply_rope, dense_init, softcap
+
+__all__ = [
+    "AttentionParams",
+    "attention_init",
+    "attention_apply",
+    "blockwise_attention",
+    "decode_attention",
+    "KVCache",
+]
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+class KVCache(NamedTuple):
+    """Decode-time cache. k/v: [B, S_max, H_kv * D]; length: [] current fill.
+
+    The head dim is stored FUSED: ``H_kv * D`` always divides the 16-way
+    model axis (individual head counts often don't), and the fused layout is
+    exactly what the K/V projections produce — so prefill writes the cache
+    with zero resharding and decode shards TP-style over the head dim.
+    """
+
+    k: jax.Array
+    v: jax.Array
+    length: jax.Array  # scalar int32
+
+    @staticmethod
+    def zeros(batch: int, max_len: int, n_kv: int, head_dim: int, dtype):
+        return KVCache(
+            k=jnp.zeros((batch, max_len, n_kv * head_dim), dtype),
+            v=jnp.zeros((batch, max_len, n_kv * head_dim), dtype),
+            length=jnp.zeros((), jnp.int32),
+        )
+
+
+def attention_init(
+    key,
+    d_model: int,
+    n_heads: int,
+    n_kv: int,
+    head_dim: int,
+    init: Initializer,
+    *,
+    qkv_bias: bool = False,
+):
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(kq, d_model, n_heads * head_dim, init, bias=qkv_bias),
+        "wk": dense_init(kk, d_model, n_kv * head_dim, init, bias=qkv_bias),
+        "wv": dense_init(kv, d_model, n_kv * head_dim, init, bias=qkv_bias),
+        "wo": dense_init(ko, n_heads * head_dim, d_model, init),
+    }
+
+
+def _project_qkv(params, x, kv_x, n_heads, n_kv, head_dim, backend):
+    """QKV projections on the O-POPE path (bias fused via C-preload)."""
+    b, s, _ = x.shape
+    t = kv_x.shape[1]
+    q = ops.linear(x, params["wq"]["w"], params["wq"].get("b"), backend=backend)
+    k = ops.linear(kv_x, params["wk"]["w"], params["wk"].get("b"), backend=backend)
+    v = ops.linear(kv_x, params["wv"]["w"], params["wv"].get("b"), backend=backend)
+    return (
+        q.reshape(b, s, n_heads, head_dim),
+        k.reshape(b, t, n_kv, head_dim),
+        v.reshape(b, t, n_kv, head_dim),
+    )
+
+
+def _block_scores(q, k, scale, cap):
+    """Panel scores [B, Hkv, G, qc, kc] in fp32 (widening accumulation)."""
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", q, k, preferred_element_type=jnp.float32)
+    s = s * scale
+    if cap is not None:
+        s = cap * jnp.tanh(s / cap)
+    return s
+
+
+def blockwise_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    attn_softcap: Optional[float] = None,
+    q_offset: int = 0,
+    q_chunk: int = 512,
+    kv_chunk: int = 1024,
+    scale: Optional[float] = None,
+    seq_shard: bool = False,
+) -> jax.Array:
+    """Online-softmax attention. q: [B,S,Hq,D]; k/v: [B,T,Hkv,D] -> [B,S,Hq,D].
+
+    Memory: O(S*D + q_chunk*kv_chunk) per head group instead of O(S*T).
+    Causal/window KV ranges are static per query block (Python unrolled), so
+    pruned panels cost zero HLO FLOPs.
+
+    ``seq_shard=True`` (context-parallel core, §Perf hillclimb): query rows
+    shard over the ``model`` axis and KV panels replicate across it. Without
+    this, head counts that don't divide the model axis (qwen's 40, every
+    GQA kv<16) make GSPMD REPLICATE the score/PV einsums on all 16 model
+    shards — 16x wasted FLOPs and a swarm of partial-sum all-reduces.
+    """
+    from repro.distributed.hints import constrain
+
+    b, s, hq, d = q.shape
+    t, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    scale = scale if scale is not None else d**-0.5
+    qc = min(q_chunk, s)
+    while s % qc:
+        qc -= 1
+    kc = min(kv_chunk, t)
+    while t % kc:
+        kc -= 1
+    nq, nkv = s // qc, t // kc
+
+    qg = q.reshape(b, nq, qc, hkv, g, d)
+    kr = k.reshape(b, nkv, kc, hkv, d)
+    vr = v.reshape(b, nkv, kc, hkv, d)
+    if seq_shard:
+        dp = ("pod", "data")
+        qg = constrain(qg, dp, None, "model", None, None, None)
+        kr = constrain(kr, dp, None, None, None, None)
+        vr = constrain(vr, dp, None, None, None, None)
+    k_pos = jnp.arange(t).reshape(nkv, kc)
+
+    outs = []
+    for i in range(nq):
+        q_i = qg[:, i]  # [B, qc, Hkv, G, D]
+        q_pos = q_offset + i * qc + jnp.arange(qc)
+        # Static KV panel range for this query block:
+        hi = nkv if not causal else min(
+            nkv, math.ceil((q_offset + (i + 1) * qc) / kc)
+        )
+        lo = 0 if window is None else max(
+            0, (q_offset + i * qc - window) // kc
+        )
+        m = jnp.full((b, hkv, g, qc), NEG_INF, jnp.float32)
+        l = jnp.zeros((b, hkv, g, qc), jnp.float32)
+        acc = jnp.zeros((b, hkv, g, qc, d), jnp.float32)
+
+        def panel(carry, j, q_i=q_i, q_pos=q_pos):
+            m, l, acc = carry
+            s_ij = _block_scores(q_i, kr[:, j], scale, attn_softcap)
+            kp = k_pos[j]
+            mask = jnp.ones((qc, kc), bool)
+            if causal:
+                mask &= kp[None, :] <= q_pos[:, None]
+            if window is not None:
+                mask &= kp[None, :] > q_pos[:, None] - window
+            s_ij = jnp.where(mask[None, None, None], s_ij, NEG_INF)
+            m_new = jnp.maximum(m, s_ij.max(axis=-1))
+            p = jnp.exp(s_ij - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + p.sum(axis=-1)
+            # bf16 x bf16 -> f32 accumulate; no f32 copy of the V panel.
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p.astype(v.dtype), vr[:, j],
+                preferred_element_type=jnp.float32,
+            )
+            return (m_new, l, acc), None
+
+        if hi > lo:
+            (m, l, acc), _ = jax.lax.scan(
+                panel, (m, l, acc), jnp.arange(lo, hi)
+            )
+        out_i = acc / jnp.maximum(l[..., None], 1e-37)
+        outs.append(out_i.transpose(0, 3, 1, 2, 4).reshape(b, qc, hq, d))
+    return jnp.concatenate(outs, axis=1).astype(q.dtype)
+
+
+def decode_attention(
+    q: jax.Array,
+    cache: KVCache,
+    *,
+    n_kv: int,
+    window: Optional[int] = None,
+    attn_softcap: Optional[float] = None,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Single-token attention against the cache. q: [B,1,Hq,D] -> [B,1,Hq,D].
+
+    With the cache sequence axis sharded (long-context cells) the einsums
+    below become split-K partial softmaxes reduced by GSPMD — the
+    flash-decoding pattern, no score matrix materialized beyond [.., S_max].
+    """
+    from repro.distributed.hints import constrain
+
+    b, _, hq, d = q.shape
+    t = cache.k.shape[1]
+    hkv = n_kv
+    g = hq // hkv
+    scale = scale if scale is not None else d**-0.5
+    # Split-K layout: the decode cache shards its SEQUENCE axis — over
+    # `model` for batched decode, over every axis when B=1 (long-context SP;
+    # mirrors distributed.sharding.cache_shardings). The single query is
+    # replicated across the sequence shards (bytes: one token). Scores stay
+    # sequence-sharded; softmax stats and the PV partial reduce via psum —
+    # flash-decoding assembled by GSPMD. The k/v constraints below pin the
+    # post-reshape layout: without them GSPMD re-shards the whole cache to a
+    # head-factorized layout (measured: a 2.1 GB all-gather per layer per
+    # token on the 500k-context cell).
+    if b == 1:
+        batch_ax = None
+        seq_ax = ("pod", "data", "model")
+    else:
+        batch_ax = ("pod", "data")
+        seq_ax = "model"
+    qg = constrain(q.reshape(b, 1, hkv, g, d), batch_ax, None, None, None, None)
+    k = constrain(cache.k.reshape(b, t, hkv, d), batch_ax, seq_ax, None, None)
+    v = constrain(cache.v.reshape(b, t, hkv, d), batch_ax, seq_ax, None, None)
+    s = jnp.einsum(
+        "bqhgd,bkhd->bhgqk", qg, k, preferred_element_type=jnp.float32
+    ) * scale
+    s = constrain(s, batch_ax, None, None, None, seq_ax)
+    if attn_softcap is not None:
+        s = attn_softcap * jnp.tanh(s / attn_softcap)
+    kp = jnp.arange(t)
+    valid = kp < cache.length
+    if window is not None:
+        valid &= kp > cache.length - 1 - window
+    s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    # bf16 x bf16 -> f32 accumulate (widening MAC); no f32 cache copy.
+    o = jnp.einsum(
+        "bhgqk,bkhd->bhgqd", p.astype(v.dtype), v,
+        preferred_element_type=jnp.float32,
+    )
+    return o.transpose(0, 3, 1, 2, 4).reshape(b, 1, hq, d).astype(q.dtype)
+
+
+def attention_apply(
+    params,
+    x: jax.Array,
+    *,
+    n_heads: int,
+    n_kv: int,
+    head_dim: int,
+    positions: Optional[jax.Array] = None,
+    rotary_frac: float = 1.0,
+    rope_theta: float = 10000.0,
+    causal: bool = True,
+    window: Optional[int] = None,
+    attn_softcap: Optional[float] = None,
+    cross_x: Optional[jax.Array] = None,
+    cache: Optional[KVCache] = None,
+    q_chunk: int = 512,
+    kv_chunk: int = 1024,
+    seq_shard: bool = False,
+    backend: Optional[str] = None,
+) -> Tuple[jax.Array, Optional[KVCache]]:
+    """Full attention block: projections + RoPE + core + output projection.
+
+    Modes:
+    * ``cache is None``      — training / prefill without cache.
+    * ``cache`` + ``x.shape[1] == 1`` — single-token decode (append + attend).
+    * ``cache`` + longer x   — prefill that fills and returns the cache.
+    * ``cross_x``            — cross-attention (no RoPE on KV, not causal).
+    """
+    b, s, _ = x.shape
+    kv_src = cross_x if cross_x is not None else x
+    q, k, v = _project_qkv(params, x, kv_src, n_heads, n_kv, head_dim, backend)
+
+    if cross_x is None:
+        if positions is None:
+            positions = jnp.arange(s)[None, :].astype(jnp.int32)
+        if rotary_frac > 0:
+            q = apply_rope(q, positions, rotary_frac=rotary_frac, theta=rope_theta)
+            k = apply_rope(k, positions, rotary_frac=rotary_frac, theta=rope_theta)
+
+    new_cache = None
+    if cache is not None and s == 1:
+        # Decode: append one token (fused-head layout), attend over the cache.
+        idx = cache.length
+        kf = k.reshape(b, 1, n_kv * head_dim).astype(cache.k.dtype)
+        vf = v.reshape(b, 1, n_kv * head_dim).astype(cache.v.dtype)
+        new_cache = KVCache(
+            k=jax.lax.dynamic_update_slice_in_dim(cache.k, kf, idx, axis=1),
+            v=jax.lax.dynamic_update_slice_in_dim(cache.v, vf, idx, axis=1),
+            length=cache.length + 1,
+        )
+        o = decode_attention(
+            q, new_cache, n_kv=n_kv, window=window, attn_softcap=attn_softcap
+        )
+    else:
+        q_offset = 0
+        o = blockwise_attention(
+            q,
+            k,
+            v,
+            causal=causal and cross_x is None,
+            window=window,
+            attn_softcap=attn_softcap,
+            q_offset=q_offset,
+            q_chunk=q_chunk,
+            kv_chunk=kv_chunk,
+            seq_shard=seq_shard,
+        )
+        if cache is not None:
+            # Prefill: install computed K/V (fused-head layout, matching the
+            # projection output sharding — no reshard).
+            t = k.shape[1]
+            kf = k.reshape(b, t, n_kv * head_dim).astype(cache.k.dtype)
+            vf = v.reshape(b, t, n_kv * head_dim).astype(cache.v.dtype)
+            new_cache = KVCache(
+                k=jax.lax.dynamic_update_slice_in_dim(cache.k, kf, 0, axis=1),
+                v=jax.lax.dynamic_update_slice_in_dim(cache.v, vf, 0, axis=1),
+                length=jnp.asarray(s, jnp.int32),
+            )
+    out = ops.matmul(o.reshape(b, s, n_heads * head_dim), params["wo"]["w"], backend=backend)
+    return out, new_cache

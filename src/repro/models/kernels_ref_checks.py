@@ -1,0 +1,42 @@
+"""Shared naive references used by tests (kept in-package for reuse)."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["naive_attention"]
+
+
+def naive_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    attn_softcap: Optional[float] = None,
+) -> jax.Array:
+    """Materialized-scores GQA attention oracle. q: [B,S,Hq,D]; k/v [B,T,Hkv,D]."""
+    b, s, hq, d = q.shape
+    t, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, s, hkv, g, d)
+    scores = jnp.einsum(
+        "bshgd,bthd->bhgst", qg, k, preferred_element_type=jnp.float32
+    ) * (d**-0.5)
+    if attn_softcap is not None:
+        scores = attn_softcap * jnp.tanh(scores / attn_softcap)
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(t)[None, :]
+    mask = jnp.ones((s, t), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    scores = jnp.where(mask[None, None, None], scores, -jnp.inf)
+    p = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bhgst,bthd->bshgd", p.astype(jnp.float32), v.astype(jnp.float32))
+    return o.reshape(b, s, hq, d).astype(q.dtype)

@@ -1,0 +1,153 @@
+"""Shared neural-net building blocks (pure functional, param pytrees).
+
+Every matrix multiply routes through :func:`repro.kernels.ops.matmul`, i.e.
+the O-POPE GEMM path — the paper's engine is the framework's matmul substrate
+(DESIGN.md §5). Norms and softmaxes compute in fp32 regardless of the
+parameter dtype, matching the widening-accumulation discipline of the PE.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+__all__ = [
+    "Initializer",
+    "dense_init",
+    "embedding_init",
+    "rmsnorm_init",
+    "rmsnorm",
+    "layernorm_init",
+    "layernorm",
+    "softcap",
+    "rope_frequencies",
+    "apply_rope",
+    "mlp_init",
+    "mlp_apply",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Initializer:
+    """Truncated-normal fan-in initializer with a configurable param dtype."""
+
+    dtype: jnp.dtype = jnp.bfloat16
+    stddev: float = 0.02
+
+    def __call__(self, key: jax.Array, shape: Tuple[int, ...], fan_in: Optional[int] = None):
+        std = self.stddev if fan_in is None else (1.0 / jnp.sqrt(fan_in)).astype(jnp.float32)
+        return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * std).astype(self.dtype)
+
+
+def dense_init(key, d_in: int, d_out: int, init: Initializer, *, bias: bool = False):
+    p = {"w": init(key, (d_in, d_out), fan_in=d_in)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), init.dtype)
+    return p
+
+
+def embedding_init(key, vocab: int, d_model: int, init: Initializer):
+    return {"table": init(key, (vocab, d_model))}
+
+
+def rmsnorm_init(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params, x: jax.Array, *, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * params["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def layernorm_init(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(params, x: jax.Array, *, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def softcap(x: jax.Array, cap: Optional[float]) -> jax.Array:
+    """Gemma-2 logit soft-capping: cap * tanh(x / cap)."""
+    if cap is None:
+        return x
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)
+
+
+# --- rotary position embeddings ---------------------------------------------
+
+
+def rope_frequencies(rotary_dim: int, theta: float = 10000.0) -> jax.Array:
+    """Inverse frequencies for the rotated ``rotary_dim`` (must be even)."""
+    return 1.0 / (
+        theta ** (jnp.arange(0, rotary_dim, 2, dtype=jnp.float32) / rotary_dim)
+    )
+
+
+def apply_rope(
+    x: jax.Array,
+    positions: jax.Array,
+    *,
+    rotary_frac: float = 1.0,
+    theta: float = 10000.0,
+) -> jax.Array:
+    """Apply RoPE to ``x`` [..., S, H, D] with ``positions`` [..., S].
+
+    ``rotary_frac < 1`` rotates only the leading fraction of the head dim —
+    chatglm3's 2-D RoPE rotates half the dimensions and leaves the rest as
+    plain channels (rotary_frac=0.5).
+    """
+    d = x.shape[-1]
+    rot = int(d * rotary_frac)
+    rot -= rot % 2
+    if rot == 0:
+        return x
+    inv = rope_frequencies(rot, theta)
+    ang = positions[..., :, None].astype(jnp.float32) * inv  # [..., S, rot/2]
+    cos = jnp.cos(ang)[..., :, None, :]  # broadcast over heads
+    sin = jnp.sin(ang)[..., :, None, :]
+    x_rot, x_pass = x[..., :rot], x[..., rot:]
+    x1, x2 = x_rot[..., 0::2], x_rot[..., 1::2]
+    r1 = x1.astype(jnp.float32) * cos - x2.astype(jnp.float32) * sin
+    r2 = x2.astype(jnp.float32) * cos + x1.astype(jnp.float32) * sin
+    rotated = jnp.stack([r1, r2], axis=-1).reshape(x_rot.shape).astype(x.dtype)
+    return jnp.concatenate([rotated, x_pass], axis=-1) if rot < d else rotated
+
+
+# --- gated MLP ----------------------------------------------------------------
+
+
+def mlp_init(key, d_model: int, d_ff: int, init: Initializer, *, gated: bool = True):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "w_up": init(k1, (d_model, d_ff), fan_in=d_model),
+        "w_down": init(k3, (d_ff, d_model), fan_in=d_ff),
+    }
+    if gated:
+        p["w_gate"] = init(k2, (d_model, d_ff), fan_in=d_model)
+    return p
+
+
+def mlp_apply(params, x: jax.Array, *, activation: str = "silu", backend=None):
+    """SwiGLU (default) / GeGLU / plain-GELU MLP on the O-POPE matmul path."""
+    up = ops.matmul(x, params["w_up"], backend=backend)
+    if "w_gate" in params:
+        gate = ops.matmul(x, params["w_gate"], backend=backend)
+        act = jax.nn.silu if activation == "silu" else jax.nn.gelu
+        h = act(gate.astype(jnp.float32)).astype(x.dtype) * up
+    else:
+        act = jax.nn.gelu if activation == "gelu" else jax.nn.silu
+        h = act(up.astype(jnp.float32)).astype(x.dtype)
+    return ops.matmul(h, params["w_down"], backend=backend)

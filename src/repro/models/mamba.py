@@ -1,0 +1,218 @@
+"""Mamba (S6) selective-state-space mixer — jamba's sequence layer.
+
+The CUDA selective-scan kernel of the original paper is GPU-specific
+(warp-level scan with SRAM-resident state). The TPU-idiomatic adaptation is a
+**state-resident chunked scan** (the O-POPE principle again: the [B, d_inner,
+d_state] state is the output-stationary accumulator; token panels stream):
+
+* the sequence is split into chunks of ``chunk`` tokens;
+* inside a chunk an associative scan runs over the discretized
+  ``(exp(Δ·A), Δ·B·x)`` pairs — materializing only [B, chunk, d_inner,
+  d_state] instead of the full sequence;
+* a ``lax.scan`` carries the state across chunks.
+
+Decode is the exact single-step recurrence with a (conv-window, ssm-state)
+cache. A Pallas realization of the chunk kernel lives in
+``repro.kernels.opope_scan`` (validated in interpret mode); the jnp form here
+is what the dry-run lowers.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from .layers import Initializer
+
+__all__ = ["MambaState", "mamba_init", "mamba_apply", "mamba_decode_step"]
+
+
+class MambaState(NamedTuple):
+    """Decode cache: conv window [B, d_conv-1, d_inner], ssm [B, d_inner, N]."""
+
+    conv: jax.Array
+    ssm: jax.Array
+
+    @staticmethod
+    def zeros(batch: int, d_inner: int, d_state: int, d_conv: int, dtype):
+        return MambaState(
+            conv=jnp.zeros((batch, d_conv - 1, d_inner), dtype),
+            ssm=jnp.zeros((batch, d_inner, d_state), jnp.float32),
+        )
+
+
+def mamba_init(
+    key,
+    d_model: int,
+    *,
+    expand: int = 2,
+    d_state: int = 16,
+    d_conv: int = 4,
+    dt_rank: Optional[int] = None,
+    init: Initializer,
+):
+    d_inner = expand * d_model
+    dt_rank = dt_rank or max(1, math.ceil(d_model / 16))
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": init(ks[0], (d_model, 2 * d_inner), fan_in=d_model),
+        "conv_w": init(ks[1], (d_conv, d_inner), fan_in=d_conv),
+        "conv_b": jnp.zeros((d_inner,), init.dtype),
+        "x_proj": init(ks[2], (d_inner, dt_rank + 2 * d_state), fan_in=d_inner),
+        "dt_proj": init(ks[3], (dt_rank, d_inner), fan_in=dt_rank),
+        "dt_bias": jnp.zeros((d_inner,), jnp.float32),
+        # A stored as log so exp(-softplus-ish) stays stable; D skip gain.
+        "A_log": jnp.log(
+            jnp.tile(jnp.arange(1, d_state + 1, dtype=jnp.float32), (d_inner, 1))
+        ),
+        "D": jnp.ones((d_inner,), jnp.float32),
+        "out_proj": init(ks[4], (d_inner, d_model), fan_in=d_inner),
+    }
+
+
+def _ssm_inputs(params, xc: jax.Array):
+    """Project conv output to (dA, dBx, C) discretized SSM inputs (fp32)."""
+    d_state = params["A_log"].shape[1]
+    dt_rank = params["x_proj"].shape[1] - 2 * d_state
+    proj = ops.matmul(xc, params["x_proj"]).astype(jnp.float32)
+    dt, bmat, cmat = jnp.split(proj, [dt_rank, dt_rank + d_state], axis=-1)
+    dt = jax.nn.softplus(
+        ops.matmul(dt.astype(xc.dtype), params["dt_proj"]).astype(jnp.float32)
+        + params["dt_bias"]
+    )  # [..., d_inner]
+    a = -jnp.exp(params["A_log"])  # [d_inner, N]
+    da = jnp.exp(dt[..., None] * a)  # [..., d_inner, N]
+    dbx = (dt * xc.astype(jnp.float32))[..., None] * bmat[..., None, :]
+    return da, dbx, cmat
+
+
+def _conv1d_causal(params, x: jax.Array, history: Optional[jax.Array] = None):
+    """Depthwise causal conv over the sequence. x: [B,S,Di] (+ optional
+    [B,d_conv-1,Di] left history for decode continuity)."""
+    w = params["conv_w"].astype(jnp.float32)  # [K, Di]
+    kw = w.shape[0]
+    pad = (
+        history.astype(jnp.float32)
+        if history is not None
+        else jnp.zeros((x.shape[0], kw - 1, x.shape[2]), jnp.float32)
+    )
+    xp = jnp.concatenate([pad, x.astype(jnp.float32)], axis=1)
+    out = sum(
+        xp[:, i : i + x.shape[1]] * w[i] for i in range(kw)
+    ) + params["conv_b"].astype(jnp.float32)
+    return jax.nn.silu(out).astype(x.dtype)
+
+
+def mamba_apply(
+    params,
+    x: jax.Array,
+    *,
+    chunk: int = 64,
+    backend: Optional[str] = None,
+    return_state: bool = False,
+):
+    """Full-sequence selective scan. x: [B, S, D] -> [B, S, D].
+
+    With ``return_state=True`` also returns the :class:`MambaState` after the
+    last token (used by prefill to seed decoding)."""
+    from repro.distributed.hints import constrain
+
+    b, s, _ = x.shape
+    xi = ops.matmul(x, params["in_proj"], backend=backend)
+    xm, z = jnp.split(xi, 2, axis=-1)  # [B,S,Di] each
+    xc = _conv1d_causal(params, xm)
+
+    # Only the *projections* are computed full-sequence ([B,S,Di] / [B,S,N]);
+    # the discretized [*, Di, N] expansion is chunk-local inside the scan —
+    # the state-resident dataflow (a full-sequence expansion would be
+    # ~0.5 TB at jamba's train_4k shape).
+    d_state = params["A_log"].shape[1]
+    dt_rank = params["x_proj"].shape[1] - 2 * d_state
+    proj = ops.matmul(xc, params["x_proj"], backend=backend).astype(jnp.float32)
+    dt, bmat, cmat = jnp.split(proj, [dt_rank, dt_rank + d_state], axis=-1)
+    dt = jax.nn.softplus(
+        ops.matmul(dt.astype(xc.dtype), params["dt_proj"], backend=backend)
+        .astype(jnp.float32)
+        + params["dt_bias"]
+    )  # [B,S,Di]
+    a = -jnp.exp(params["A_log"])  # [Di, N]
+    d_inner = dt.shape[-1]
+
+    # Pin the TP sharding of the inner dim: GSPMD loses it through the
+    # associative scan and replicates [*, Di, N] tensors 16x otherwise
+    # (measured: the dominant HBM-traffic term of jamba's train cell, §Perf).
+    dp = ("pod", "data")
+    dt = constrain(dt, dp, None, "model")
+    xc_f = constrain(xc.astype(jnp.float32), dp, None, "model")
+
+    ck = min(chunk, s)
+    while s % ck:
+        ck -= 1
+    nc = s // ck
+
+    def chunked(t):
+        return t.reshape(b, nc, ck, t.shape[-1]).transpose(1, 0, 2, 3)
+
+    dt_c, x_c, b_c, c_c = map(chunked, (dt, xc_f, bmat, cmat))
+
+    def chunk_step(h, inputs):
+        dt_k, x_k, b_k, c_k = inputs  # [B, ck, Di] / [B, ck, N]
+        da_k = jnp.exp(dt_k[..., None] * a)  # [B, ck, Di, N]
+        dbx_k = (dt_k * x_k)[..., None] * b_k[..., None, :]
+
+        def combine(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a1 * a2, b1 * a2 + b2
+
+        a_cum, b_cum = jax.lax.associative_scan(combine, (da_k, dbx_k), axis=1)
+        hs = a_cum * h[:, None] + b_cum  # [B, ck, Di, N]
+        y_k = jnp.einsum("bsdn,bsn->bsd", hs, c_k)  # project within the chunk
+        return hs[:, -1], y_k
+
+    h0 = jnp.zeros((b, d_inner, d_state), jnp.float32)
+    # checkpoint: the backward recomputes the chunk's [B,ck,Di,N] expansion
+    # from the carried state instead of stacking it as a residual — the
+    # state-resident discipline applied to AD (§Perf, jamba hillclimb).
+    h_final, ys = jax.lax.scan(
+        jax.checkpoint(chunk_step), h0, (dt_c, x_c, b_c, c_c)
+    )
+    y = ys.transpose(1, 0, 2, 3).reshape(b, s, d_inner)
+    y = y + params["D"] * xc.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = ops.matmul(y, params["out_proj"], backend=backend)
+    if not return_state:
+        return out
+    kw = params["conv_w"].shape[0]
+    if s >= kw - 1:
+        conv_hist = xm[:, s - (kw - 1) :]
+    else:  # pathological tiny prefill: left-pad with zeros
+        conv_hist = jnp.concatenate(
+            [jnp.zeros((b, kw - 1 - s, xm.shape[2]), xm.dtype), xm], axis=1
+        )
+    return out, MambaState(conv=conv_hist, ssm=h_final)
+
+
+def mamba_decode_step(
+    params,
+    x: jax.Array,
+    state: MambaState,
+    *,
+    backend: Optional[str] = None,
+) -> Tuple[jax.Array, MambaState]:
+    """One-token recurrence. x: [B, 1, D] -> ([B, 1, D], new state)."""
+    b = x.shape[0]
+    xi = ops.matmul(x, params["in_proj"], backend=backend)
+    xm, z = jnp.split(xi, 2, axis=-1)
+    xc = _conv1d_causal(params, xm, history=state.conv)
+    new_conv = jnp.concatenate([state.conv[:, 1:], xm], axis=1)
+    da, dbx, cmat = _ssm_inputs(params, xc[:, 0])  # [B,Di,N],[B,N]
+    h = da * state.ssm + dbx
+    y = jnp.einsum("bdn,bn->bd", h, cmat) + params["D"] * xc[:, 0].astype(jnp.float32)
+    y = (y * jax.nn.silu(z[:, 0].astype(jnp.float32))).astype(x.dtype)
+    out = ops.matmul(y[:, None], params["out_proj"], backend=backend)
+    return out, MambaState(conv=new_conv, ssm=h)

@@ -1,0 +1,212 @@
+"""Mixture-of-Experts FFN with two dispatch strategies.
+
+* ``"onehot"`` — the GShard/Switch formulation: dispatch/combine one-hot
+  einsums over [tokens, experts, capacity]. Simple, fully dense, and the
+  **paper-faithful baseline** here (every dispatch op is a GEMM on the
+  O-POPE path), but its dispatch einsums burn HLO FLOPs proportional to
+  ``T*E*C*D`` — visible as a poor useful-compute ratio in the roofline.
+* ``"sort"`` — beyond-paper optimized path: sort token assignments by expert,
+  scatter into per-expert capacity buffers, run the expert GEMMs, gather back.
+  Dispatch costs data movement only; HLO FLOPs drop to the expert GEMMs
+  (hillclimb #2 in EXPERIMENTS.md §Perf).
+
+Both honor capacity: assignments past ``capacity_factor * T * top_k / E`` per
+expert are dropped (standard token-dropping semantics). Expert weights are
+stacked [E, ...] so EP sharding is a single spec on axis 0 (or TP inside the
+expert when E doesn't divide the model axis — grok's E=8, DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from .layers import Initializer
+
+__all__ = ["moe_init", "moe_apply", "router_load_balancing_loss"]
+
+
+def moe_init(
+    key,
+    d_model: int,
+    d_ff_expert: int,
+    n_experts: int,
+    init: Initializer,
+    *,
+    n_shared: int = 0,
+    d_ff_shared: Optional[int] = None,
+):
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": init(ks[0], (d_model, n_experts), fan_in=d_model),
+        "w_gate": init(ks[1], (n_experts, d_model, d_ff_expert), fan_in=d_model),
+        "w_up": init(ks[2], (n_experts, d_model, d_ff_expert), fan_in=d_model),
+        "w_down": init(ks[3], (n_experts, d_ff_expert, d_model), fan_in=d_ff_expert),
+    }
+    if n_shared:
+        dsh = d_ff_shared or n_shared * d_ff_expert
+        from .layers import mlp_init
+
+        p["shared"] = mlp_init(ks[4], d_model, dsh, init)
+    return p
+
+
+def _expert_ffn(p, xs: jax.Array) -> jax.Array:
+    """xs: [E, C, D] -> [E, C, D]; batched per-expert SwiGLU on stacked weights."""
+    gate = jnp.einsum("ecd,edf->ecf", xs, p["w_gate"])
+    up = jnp.einsum("ecd,edf->ecf", xs, p["w_up"])
+    h = jax.nn.silu(gate.astype(jnp.float32)).astype(xs.dtype) * up
+    return jnp.einsum("ecf,efd->ecd", h, p["w_down"])
+
+
+def router_load_balancing_loss(gates: jax.Array, expert_mask: jax.Array) -> jax.Array:
+    """Switch-style aux loss: E * sum_e f_e * P_e (fp32)."""
+    e = gates.shape[-1]
+    f = expert_mask.astype(jnp.float32).mean(axis=tuple(range(expert_mask.ndim - 1)))
+    p = gates.astype(jnp.float32).mean(axis=tuple(range(gates.ndim - 1)))
+    return e * jnp.sum(f * p)
+
+
+def moe_apply(
+    params,
+    x: jax.Array,
+    *,
+    n_experts: int,
+    top_k: int,
+    capacity_factor: float = 1.25,
+    dispatch: str = "sort",
+    group_size: int = 512,
+    backend: Optional[str] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """x: [B, S, D] -> (y, aux_loss).
+
+    Tokens are processed in groups of ``group_size`` with per-group capacity
+    (GShard semantics): dispatch structures stay O(T * E * C_g) instead of
+    O(T * E * C_global), and — critically for SPMD — the group axis carries
+    the batch sharding, so routing never sorts or one-hots across devices.
+    """
+    b, s, d = x.shape
+    t = b * s
+    xf = x.reshape(t, d)
+    logits = ops.matmul(xf, params["router"], backend=backend).astype(jnp.float32)
+    gates = jax.nn.softmax(logits, axis=-1)  # [T, E]
+    top_vals, top_idx = jax.lax.top_k(gates, top_k)  # [T, K]
+    top_vals = top_vals / jnp.maximum(top_vals.sum(-1, keepdims=True), 1e-9)
+
+    g = min(group_size, t)
+    while t % g:
+        g -= 1
+    n_groups = t // g
+    capacity = max(int(math.ceil(capacity_factor * g * top_k / n_experts)), 1)
+
+    xg = xf.reshape(n_groups, g, d)
+    vg = top_vals.reshape(n_groups, g, top_k)
+    ig = top_idx.reshape(n_groups, g, top_k)
+
+    if dispatch == "onehot":
+        y = _dispatch_onehot(params, xg, vg, ig, n_experts, capacity)
+    elif dispatch == "sort":
+        y = _dispatch_sort(params, xg, vg, ig, n_experts, capacity)
+    else:
+        raise ValueError(f"unknown MoE dispatch {dispatch!r}")
+    y = y.reshape(t, d)
+
+    if "shared" in params:
+        from .layers import mlp_apply
+
+        y = y + mlp_apply(params["shared"], xf, backend=backend)
+
+    mask = jax.nn.one_hot(top_idx, n_experts, dtype=jnp.float32).sum(axis=1)
+    aux = router_load_balancing_loss(gates, mask)
+    return y.reshape(b, s, d), aux
+
+
+def _positions_in_expert(ig: jax.Array, n_experts: int) -> jax.Array:
+    """Per-group rank of each assignment within its expert. ig: [G, g, K]."""
+    gshape = ig.shape
+    ohf = jax.nn.one_hot(
+        ig.reshape(gshape[0], -1), n_experts, dtype=jnp.int32
+    )  # [G, g*K, E]
+    pos = jnp.cumsum(ohf, axis=1) - 1
+    return (pos * ohf).sum(-1).reshape(gshape)  # [G, g, K]
+
+
+def _dispatch_onehot(params, xg, vg, ig, n_experts, capacity):
+    """GShard one-hot dispatch/combine einsums (dense baseline).
+
+    Every routing op is a GEMM on the O-POPE path — simple and fully static,
+    but the dispatch einsums cost 2*T*E*C*D FLOPs, which dwarfs the expert
+    GEMMs for fine-grained MoE (deepseek) — visible in the roofline's
+    useful-compute ratio and removed by the "sort" dispatch (§Perf).
+    """
+    pos = _positions_in_expert(ig, n_experts)  # [G, g, K]
+    keep = pos < capacity
+    oh_e = jax.nn.one_hot(ig, n_experts, dtype=xg.dtype)  # [G,g,K,E]
+    oh_c = jax.nn.one_hot(pos, capacity, dtype=xg.dtype)  # [G,g,K,C]
+    disp = jnp.einsum(
+        "gske,gskc->gsec", oh_e * keep[..., None].astype(xg.dtype), oh_c
+    )  # [G,g,E,C]
+    comb = jnp.einsum(
+        "gske,gskc->gsec",
+        (oh_e.astype(jnp.float32) * (vg * keep)[..., None]),
+        oh_c.astype(jnp.float32),
+    )
+    expert_in = jnp.einsum("gsec,gsd->gecd", disp, xg)
+    e, c, d = n_experts, capacity, xg.shape[-1]
+    expert_out = _expert_ffn(
+        params, expert_in.transpose(1, 0, 2, 3).reshape(e, -1, d)
+    ).reshape(e, -1, c, d).transpose(1, 0, 2, 3)  # [G,E,C,D]
+    return jnp.einsum("gsec,gecd->gsd", comb, expert_out.astype(jnp.float32)).astype(
+        xg.dtype
+    )
+
+
+def _dispatch_sort(params, xg, vg, ig, n_experts, capacity):
+    """Per-group sort-scatter dispatch (beyond-paper optimized path).
+
+    Routing is pure data movement (argsort + scatter + gather within each
+    group); HLO FLOPs reduce to the expert GEMMs. The group axis keeps all
+    sorting device-local under the batch sharding.
+    """
+    n_groups, g, d = xg.shape
+    k = ig.shape[-1]
+    e_flat = ig.reshape(n_groups, g * k)
+    tok_flat = jnp.tile(jnp.repeat(jnp.arange(g), k)[None], (n_groups, 1))
+    w_flat = vg.reshape(n_groups, g * k)
+
+    order = jnp.argsort(e_flat, axis=1)
+    e_sorted = jnp.take_along_axis(e_flat, order, axis=1)
+    tok_sorted = jnp.take_along_axis(tok_flat, order, axis=1)
+    w_sorted = jnp.take_along_axis(w_flat, order, axis=1)
+    seg_start = jax.vmap(lambda es: jnp.searchsorted(es, jnp.arange(n_experts)))(
+        e_sorted
+    )  # [G, E]
+    rank = jnp.arange(g * k)[None] - jnp.take_along_axis(seg_start, e_sorted, axis=1)
+    keep = rank < capacity
+    dest = jnp.where(keep, e_sorted * capacity + rank, n_experts * capacity)
+
+    def scatter_group(x_g, tok_g, dest_g):
+        buf = jnp.zeros((n_experts * capacity + 1, d), x_g.dtype)
+        return buf.at[dest_g].set(x_g[tok_g])[:-1]
+
+    expert_in = jax.vmap(scatter_group)(xg, tok_sorted, dest)  # [G, E*C, D]
+    expert_in = expert_in.reshape(n_groups, n_experts, capacity, d)
+    expert_out = _expert_ffn(
+        params, expert_in.transpose(1, 0, 2, 3).reshape(n_experts, -1, d)
+    ).reshape(n_experts, n_groups, capacity, d).transpose(1, 0, 2, 3)
+
+    def gather_group(out_g, dest_g, tok_g, w_g):
+        flat = jnp.concatenate(
+            [out_g.reshape(n_experts * capacity, d), jnp.zeros((1, d), out_g.dtype)]
+        )
+        y_sorted = flat[dest_g] * w_g[:, None].astype(out_g.dtype)
+        return jnp.zeros((g, d), jnp.float32).at[tok_g].add(
+            y_sorted.astype(jnp.float32)
+        )
+
+    y = jax.vmap(gather_group)(expert_out, dest, tok_sorted, w_sorted)
+    return y.astype(xg.dtype)

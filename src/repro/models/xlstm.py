@@ -1,0 +1,296 @@
+"""xLSTM blocks (Beck et al., arXiv:2405.04517): mLSTM and sLSTM mixers.
+
+* **mLSTM** — matrix-memory cell with exponential gating. Train/prefill uses
+  the chunkwise-parallel form (state [B, H, D, D] carried across chunks by a
+  ``lax.scan``; intra-chunk contributions via a masked quadratic over the
+  chunk — another instance of the state-resident streaming dataflow).
+  Stabilized in log space with the running max-gate trick from the paper.
+* **sLSTM** — scalar-memory cell with a per-head recurrent mix matrix; it is
+  inherently sequential, so train/prefill runs a ``lax.scan`` over tokens
+  (the paper itself notes sLSTM is not parallelizable).
+
+Both support single-token decode with explicit state tuples, which is what
+the 500k-token long-context cell lowers (state size is sequence-independent —
+the reason this arch *runs* long_500k while full-attention archs skip it).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from .layers import Initializer
+
+__all__ = [
+    "MLSTMState",
+    "SLSTMState",
+    "mlstm_init",
+    "mlstm_apply",
+    "mlstm_decode_step",
+    "slstm_init",
+    "slstm_apply",
+    "slstm_decode_step",
+]
+
+
+class MLSTMState(NamedTuple):
+    c: jax.Array  # [B, H, D, D] matrix memory
+    n: jax.Array  # [B, H, D] normalizer
+    m: jax.Array  # [B, H] running log-gate max (stabilizer)
+
+    @staticmethod
+    def zeros(batch: int, n_heads: int, head_dim: int):
+        return MLSTMState(
+            c=jnp.zeros((batch, n_heads, head_dim, head_dim), jnp.float32),
+            n=jnp.zeros((batch, n_heads, head_dim), jnp.float32),
+            m=jnp.full((batch, n_heads), -1e30, jnp.float32),
+        )
+
+
+class SLSTMState(NamedTuple):
+    c: jax.Array  # [B, H, D] cell
+    n: jax.Array  # [B, H, D] normalizer
+    h: jax.Array  # [B, H, D] hidden (recurrent input)
+    m: jax.Array  # [B, H, D] stabilizer
+
+    @staticmethod
+    def zeros(batch: int, n_heads: int, head_dim: int):
+        z = jnp.zeros((batch, n_heads, head_dim), jnp.float32)
+        return SLSTMState(c=z, n=z, h=z, m=z - 1e30)
+
+
+# --------------------------------------------------------------------------
+# mLSTM
+# --------------------------------------------------------------------------
+
+
+def mlstm_init(key, d_model: int, n_heads: int, *, init: Initializer):
+    head_dim = d_model // n_heads
+    ks = jax.random.split(key, 6)
+    return {
+        "wq": init(ks[0], (d_model, d_model), fan_in=d_model),
+        "wk": init(ks[1], (d_model, d_model), fan_in=d_model),
+        "wv": init(ks[2], (d_model, d_model), fan_in=d_model),
+        "w_if": init(ks[3], (d_model, 2 * n_heads), fan_in=d_model),
+        "b_if": jnp.zeros((2 * n_heads,), jnp.float32),
+        "w_o": init(ks[4], (d_model, d_model), fan_in=d_model),
+        "ogate": init(ks[5], (d_model, d_model), fan_in=d_model),
+    }
+
+
+def _mlstm_qkv(params, x, n_heads, backend):
+    b, s, d = x.shape
+    hd = d // n_heads
+    q = ops.matmul(x, params["wq"], backend=backend).reshape(b, s, n_heads, hd)
+    k = ops.matmul(x, params["wk"], backend=backend).reshape(b, s, n_heads, hd)
+    v = ops.matmul(x, params["wv"], backend=backend).reshape(b, s, n_heads, hd)
+    gates = ops.matmul(x, params["w_if"], backend=backend).astype(jnp.float32)
+    gates = gates + params["b_if"]
+    i_pre, f_pre = jnp.split(gates.reshape(b, s, 2, n_heads), 2, axis=2)
+    return q, k, v, i_pre[:, :, 0], f_pre[:, :, 0]  # gate pre-acts [B,S,H]
+
+
+def mlstm_apply(
+    params,
+    x: jax.Array,
+    *,
+    n_heads: int,
+    chunk: int = 64,
+    backend: Optional[str] = None,
+    return_state: bool = False,
+):
+    """Chunkwise-parallel mLSTM. x: [B,S,D] -> [B,S,D]."""
+    b, s, d = x.shape
+    hd = d // n_heads
+    q, k, v, i_pre, f_pre = _mlstm_qkv(params, x, n_heads, backend)
+    logf = jax.nn.log_sigmoid(f_pre)  # [B,S,H]
+
+    ck = min(chunk, s)
+    while s % ck:
+        ck -= 1
+    nc = s // ck
+
+    def reshape_c(t):
+        return t.reshape(b, nc, ck, *t.shape[2:]).transpose(1, 0, 2, *range(3, t.ndim + 1))
+
+    qc, kc, vc = map(reshape_c, (q, k, v))  # [nc,B,ck,H,hd]
+    ic, fc = map(reshape_c, (i_pre, logf))  # [nc,B,ck,H]
+
+    def chunk_step(state, inp):
+        c, n, m = state  # [B,H,hd,hd], [B,H,hd], [B,H]
+        qk, kk, vk, ik, lfk = inp
+        lf_cum = jnp.cumsum(lfk, axis=1)  # [B,ck,H] inclusive
+        lf_tot = lf_cum[:, -1]  # [B,H]
+        # log gate weight of token t's contribution at chunk end:
+        # a_t = i_t + sum_{u>t} logf_u = i_t + lf_tot - lf_cum_t
+        a = ik + (lf_tot[:, None] - lf_cum)  # [B,ck,H]
+        m_new = jnp.maximum(lf_tot + m, a.max(axis=1))  # [B,H]
+        # intra-chunk pairwise weights: D_ts = i_s + lf_cum_t - lf_cum_s (s<=t)
+        dmat = (
+            ik[:, None, :, :] + lf_cum[:, :, None, :] - lf_cum[:, None, :, :]
+        )  # [B,t,s,H]
+        mask = jnp.tril(jnp.ones((ck, ck), bool))
+        dmat = jnp.where(mask[None, :, :, None], dmat, -jnp.inf)
+        m_intra = jnp.maximum(
+            dmat.max(axis=2), (lf_cum + m[:, None]) - 1e-9
+        )  # running stab per (t): also covers inter part
+        m_t = jnp.maximum(m_intra, m[:, None] + lf_cum)  # [B,ck,H]
+        w = jnp.exp(dmat - m_t[:, :, None, :])  # [B,t,s,H]
+        scale = hd**-0.5
+        qf = qk.astype(jnp.float32) * scale
+        kf = kk.astype(jnp.float32)
+        vf = vk.astype(jnp.float32)
+        scores = jnp.einsum("bthd,bshd->btsh", qf, kf) * w
+        intra = jnp.einsum("btsh,bshd->bthd", scores, vf)
+        intra_n = jnp.einsum("btsh,bshd->bthd", scores, jnp.ones_like(kf)[..., :1])
+        # inter-chunk: contribution of carried state, decayed to position t.
+        w_inter = jnp.exp(m[:, None] + lf_cum - m_t)  # [B,ck,H]
+        inter = jnp.einsum("bthd,bhde->bthe", qf, c) * w_inter[..., None]
+        inter_n = jnp.einsum("bthd,bhd->bth", qf, n) * w_inter
+        num = intra + inter
+        den = jnp.abs(intra_n[..., 0] + inter_n)
+        h_t = num / jnp.maximum(den, jnp.exp(-m_t))[..., None]
+        # state update to chunk end:
+        wa = jnp.exp(a - m_new[:, None])  # [B,ck,H]
+        c_new = c * jnp.exp(m + lf_tot - m_new)[..., None, None] + jnp.einsum(
+            "bshd,bsh,bshe->bhde", kf, wa, vf
+        )
+        n_new = n * jnp.exp(m + lf_tot - m_new)[..., None] + jnp.einsum(
+            "bshd,bsh->bhd", kf, wa
+        )
+        return (c_new, n_new, m_new), h_t
+
+    state0 = (
+        jnp.zeros((b, n_heads, hd, hd), jnp.float32),
+        jnp.zeros((b, n_heads, hd), jnp.float32),
+        jnp.full((b, n_heads), -1e30, jnp.float32),
+    )
+    (c_f, n_f, m_f), hs = jax.lax.scan(chunk_step, state0, (qc, kc, vc, ic, fc))
+    hs = hs.transpose(1, 0, 2, 3, 4).reshape(b, s, d)  # [B,S,D]
+    og = jax.nn.sigmoid(
+        ops.matmul(x, params["ogate"], backend=backend).astype(jnp.float32)
+    )
+    out = ops.matmul((hs * og).astype(x.dtype), params["w_o"], backend=backend)
+    if return_state:
+        return out, MLSTMState(c=c_f, n=n_f, m=m_f)
+    return out
+
+
+def mlstm_decode_step(
+    params,
+    x: jax.Array,
+    state: MLSTMState,
+    *,
+    n_heads: int,
+    backend: Optional[str] = None,
+) -> Tuple[jax.Array, MLSTMState]:
+    """Exact single-token mLSTM recurrence. x: [B,1,D]."""
+    b, _, d = x.shape
+    hd = d // n_heads
+    q, k, v, i_pre, f_pre = _mlstm_qkv(params, x, n_heads, backend)
+    qf = q[:, 0].astype(jnp.float32) * hd**-0.5  # [B,H,hd]
+    kf = k[:, 0].astype(jnp.float32)
+    vf = v[:, 0].astype(jnp.float32)
+    i_t, lf_t = i_pre[:, 0], jax.nn.log_sigmoid(f_pre[:, 0])  # [B,H]
+    m_new = jnp.maximum(state.m + lf_t, i_t)
+    wf = jnp.exp(state.m + lf_t - m_new)[..., None]
+    wi = jnp.exp(i_t - m_new)[..., None]
+    c_new = state.c * wf[..., None] + (kf * wi)[..., :, None] * vf[..., None, :]
+    n_new = state.n * wf + kf * wi
+    num = jnp.einsum("bhd,bhde->bhe", qf, c_new)
+    den = jnp.abs(jnp.einsum("bhd,bhd->bh", qf, n_new))
+    h = num / jnp.maximum(den, jnp.exp(-m_new))[..., None]
+    og = jax.nn.sigmoid(
+        ops.matmul(x, params["ogate"], backend=backend).astype(jnp.float32)
+    )
+    out = (h.reshape(b, 1, d) * og).astype(x.dtype)
+    return (
+        ops.matmul(out, params["w_o"], backend=backend),
+        MLSTMState(c=c_new, n=n_new, m=m_new),
+    )
+
+
+# --------------------------------------------------------------------------
+# sLSTM
+# --------------------------------------------------------------------------
+
+
+def slstm_init(key, d_model: int, n_heads: int, *, init: Initializer):
+    hd = d_model // n_heads
+    ks = jax.random.split(key, 3)
+    return {
+        # fused input projection for i, f, z, o pre-activations
+        "w_x": init(ks[0], (d_model, 4 * d_model), fan_in=d_model),
+        "b": jnp.zeros((4 * d_model,), jnp.float32),
+        # per-head recurrent (block-diagonal) mix of h_{t-1}
+        "r": init(ks[1], (n_heads, hd, 4 * hd), fan_in=hd),
+        "w_o": init(ks[2], (d_model, d_model), fan_in=d_model),
+    }
+
+
+def _slstm_cell(params, xw_t, state: SLSTMState, n_heads: int):
+    """One sLSTM step. xw_t: [B, 4D] pre-projected input contribution."""
+    b = xw_t.shape[0]
+    d = xw_t.shape[1] // 4
+    hd = d // n_heads
+    rec = jnp.einsum(
+        "bhd,hdk->bhk", state.h, params["r"].astype(jnp.float32)
+    )  # [B,H,4hd]
+    # Layout: the 4D projection is [i | f | z | o] blocks of d each.
+    pre = (
+        xw_t.astype(jnp.float32).reshape(b, 4, n_heads, hd).transpose(0, 2, 1, 3)
+        + rec.reshape(b, n_heads, 4, hd)
+        + params["b"].reshape(4, n_heads, hd).transpose(1, 0, 2)[None]
+    )  # [B,H,4,hd]
+    i_pre, f_pre, z_pre, o_pre = (pre[:, :, j] for j in range(4))
+    lf = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(state.m + lf, i_pre)
+    wf = jnp.exp(state.m + lf - m_new)
+    wi = jnp.exp(i_pre - m_new)
+    c_new = wf * state.c + wi * jnp.tanh(z_pre)
+    n_new = wf * state.n + wi
+    h_new = jax.nn.sigmoid(o_pre) * c_new / jnp.maximum(n_new, 1e-6)
+    return SLSTMState(c=c_new, n=n_new, h=h_new, m=m_new)
+
+
+def slstm_apply(
+    params,
+    x: jax.Array,
+    *,
+    n_heads: int,
+    backend: Optional[str] = None,
+    return_state: bool = False,
+):
+    """Sequential sLSTM over the sequence. x: [B,S,D] -> [B,S,D]."""
+    b, s, d = x.shape
+    xw = ops.matmul(x, params["w_x"], backend=backend)  # [B,S,4D]
+    state0 = SLSTMState.zeros(b, n_heads, d // n_heads)
+
+    def step(state, xw_t):
+        new = _slstm_cell(params, xw_t, state, n_heads)
+        return new, new.h
+
+    final, hs = jax.lax.scan(step, state0, xw.transpose(1, 0, 2))
+    hs = hs.transpose(1, 0, 2, 3).reshape(b, s, d).astype(x.dtype)
+    out = ops.matmul(hs, params["w_o"], backend=backend)
+    if return_state:
+        return out, final
+    return out
+
+
+def slstm_decode_step(
+    params,
+    x: jax.Array,
+    state: SLSTMState,
+    *,
+    n_heads: int,
+    backend: Optional[str] = None,
+) -> Tuple[jax.Array, SLSTMState]:
+    b, _, d = x.shape
+    xw = ops.matmul(x, params["w_x"], backend=backend)[:, 0]
+    new = _slstm_cell(params, xw, state, n_heads)
+    h = new.h.reshape(b, 1, d).astype(x.dtype)
+    return ops.matmul(h, params["w_o"], backend=backend), new

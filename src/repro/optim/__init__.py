@@ -1,0 +1,3 @@
+"""Optimizer substrate: AdamW + cosine schedule, sharded moments."""
+from .adamw import AdamWConfig, OptState, apply_updates, cosine_lr, init_opt_state
+__all__ = ["AdamWConfig", "OptState", "apply_updates", "cosine_lr", "init_opt_state"]

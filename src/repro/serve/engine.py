@@ -1,0 +1,80 @@
+"""Batched serving: prefill + greedy/temperature decode over the KV caches.
+
+``ServeEngine`` compiles one prefill step and one decode step per
+(batch, prompt_len, max_len) bucket and runs requests through them. The
+decode step is a single fused jit (cache update + attention + sampling), so
+steady-state serving is one dispatch per token — the structure the decode_32k
+/ long_500k dry-run cells lower at production shapes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import api as model_api
+
+__all__ = ["ServeEngine", "sample_token"]
+
+
+def sample_token(logits: jax.Array, key, temperature: float = 0.0) -> jax.Array:
+    """logits [B, V] -> [B, 1] token (greedy at temperature 0)."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+    return jax.random.categorical(key, logits / temperature, axis=-1)[
+        :, None
+    ].astype(jnp.int32)
+
+
+@dataclasses.dataclass
+class ServeEngine:
+    cfg: ArchConfig
+    params: Any
+    max_len: int
+    cache_dtype: Any = jnp.bfloat16
+    temperature: float = 0.0
+
+    def __post_init__(self):
+        cfg = self.cfg
+
+        @jax.jit
+        def _prefill(params, batch):
+            return model_api.prefill(
+                cfg, params, batch, self.max_len, self.cache_dtype
+            )
+
+        @functools.partial(jax.jit, donate_argnums=(2,))
+        def _decode(params, token, caches, pos, key):
+            logits, caches = model_api.decode(cfg, params, token, caches, pos)
+            nxt = sample_token(logits, key, self.temperature)
+            return nxt, caches
+
+        self._prefill = _prefill
+        self._decode = _decode
+
+    def generate(
+        self,
+        batch: Dict[str, jax.Array],
+        n_tokens: int,
+        *,
+        key: Optional[jax.Array] = None,
+    ) -> jax.Array:
+        """Prefill the prompt batch and decode ``n_tokens`` greedily.
+
+        Returns generated tokens [B, n_tokens].
+        """
+        key = key if key is not None else jax.random.key(0)
+        logits, caches = self._prefill(self.params, batch)
+        tok = sample_token(logits, key, self.temperature)
+        pos = jnp.asarray(batch["tokens"].shape[1], jnp.int32)
+        out = [tok]
+        for i in range(n_tokens - 1):
+            key, sub = jax.random.split(key)
+            tok, caches = self._decode(self.params, tok, caches, pos + i, sub)
+            out.append(tok)
+        return jnp.concatenate(out, axis=1)

@@ -1,0 +1,3 @@
+"""Training substrate: fault-tolerant loop + step factory."""
+from .loop import TrainLoopConfig, TrainResult, make_train_step, train
+__all__ = ["TrainLoopConfig", "TrainResult", "make_train_step", "train"]

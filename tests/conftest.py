@@ -1,0 +1,8 @@
+import os
+import sys
+
+# Tests run single-device (the dry-run forces 512 devices only inside its own
+# process). Keep XLA from grabbing every core for compilation determinism.
+os.environ.setdefault("XLA_FLAGS", "--xla_cpu_multi_thread_eigen=false")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

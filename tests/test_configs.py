@@ -1,0 +1,67 @@
+"""The 10 configs must match the assignment table exactly."""
+
+import pytest
+
+from repro.configs import ARCHS, applicable_shapes
+from repro.models import api
+
+# (layers, d_model, heads, kv, d_ff, vocab) straight from the assignment.
+ASSIGNED = {
+    "chatglm3-6b": (28, 4096, 32, 2, 13696, 65024),
+    "gemma2-9b": (42, 3584, 16, 8, 14336, 256000),
+    "stablelm-12b": (40, 5120, 32, 8, 13824, 100352),
+    "qwen2.5-32b": (64, 5120, 40, 8, 27648, 152064),
+    "grok-1-314b": (64, 6144, 48, 8, 32768, 131072),
+    "deepseek-moe-16b": (28, 2048, 16, 16, 1408, 102400),
+    "jamba-v0.1-52b": (32, 4096, 32, 8, 14336, 65536),
+    "xlstm-125m": (12, 768, 4, 4, 3072, 50304),
+    "llava-next-mistral-7b": (32, 4096, 32, 8, 14336, 32000),
+    "whisper-base": (6, 512, 8, 8, 2048, 51865),
+}
+
+MOE = {
+    "grok-1-314b": (8, 2),
+    "deepseek-moe-16b": (64, 6),
+    "jamba-v0.1-52b": (16, 2),
+}
+
+
+@pytest.mark.parametrize("name", sorted(ASSIGNED))
+def test_config_matches_assignment(name):
+    cfg = ARCHS[name]
+    layers, d, h, kv, ff, v = ASSIGNED[name]
+    assert cfg.n_layers == layers
+    assert cfg.d_model == d
+    assert cfg.n_heads == h
+    assert cfg.n_kv == kv
+    assert cfg.d_ff == ff
+    assert cfg.vocab == v
+    if name in MOE:
+        e, k = MOE[name]
+        assert cfg.moe.n_experts == e and cfg.moe.top_k == k
+    else:
+        assert cfg.moe is None or name in MOE
+
+
+def test_long_500k_applicability():
+    runs_long = {n for n, c in ARCHS.items() if c.supports_long}
+    assert runs_long == {"jamba-v0.1-52b", "xlstm-125m"}
+    for name, cfg in ARCHS.items():
+        names = [s.name for s in applicable_shapes(cfg)]
+        assert ("long_500k" in names) == (name in runs_long)
+
+
+@pytest.mark.parametrize(
+    "name,target_b,tol",
+    [
+        ("grok-1-314b", 314e9, 0.03),
+        ("jamba-v0.1-52b", 52e9, 0.03),
+        ("deepseek-moe-16b", 16.4e9, 0.05),
+        ("qwen2.5-32b", 32.5e9, 0.03),
+        ("gemma2-9b", 9.2e9, 0.05),
+        ("llava-next-mistral-7b", 7.2e9, 0.05),
+    ],
+)
+def test_param_counts_match_published(name, target_b, tol):
+    n = api.param_count(ARCHS[name])
+    assert abs(n - target_b) / target_b < tol, n / 1e9

@@ -1,0 +1,112 @@
+"""Pallas kernel vs pure-jnp oracle: shape/dtype sweeps (interpret mode)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops
+from repro.kernels.opope_gemm import default_block_shape, opope_gemm, padding_waste
+from repro.kernels.ref import reference_matmul
+
+RNG = np.random.default_rng(0)
+
+
+def _rand(shape, dtype):
+    return jnp.asarray(RNG.standard_normal(shape), dtype)
+
+
+def _err(a, b):
+    return float(jnp.max(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32))))
+
+
+SHAPES = [
+    (128, 256, 128),
+    (64, 512, 128),
+    (100, 200, 96),  # unaligned in every dim
+    (33, 77, 130),
+    (1, 128, 128),  # degenerate rows
+    (256, 1, 64),  # K=1
+]
+DTYPES = [
+    # (in, out, tol): bf16 output quantizes to ~2^-8 relative of |result|,
+    # which for K=512 sums reaches ~0.15 absolute.
+    (jnp.float32, jnp.float32, 1e-4),
+    (jnp.bfloat16, jnp.float32, 5e-2),
+    (jnp.bfloat16, jnp.bfloat16, 2e-1),
+]
+
+
+@pytest.mark.parametrize("m,k,n", SHAPES)
+@pytest.mark.parametrize("in_dt,out_dt,tol", DTYPES)
+def test_gemm_matches_oracle(m, k, n, in_dt, out_dt, tol):
+    a, b = _rand((m, k), in_dt), _rand((k, n), in_dt)
+    got = opope_gemm(a, b, block_m=64, block_n=128, block_k=128,
+                     out_dtype=out_dt, interpret=True)
+    want = reference_matmul(a, b, out_dtype=out_dt)
+    assert got.shape == want.shape and got.dtype == want.dtype
+    assert _err(got, want) < tol
+
+
+@pytest.mark.parametrize("m,k,n", [(128, 256, 128), (100, 200, 96)])
+def test_gemm_c_preload(m, k, n):
+    """The paper's accumulator-preload path: O = A@B + C fused."""
+    a, b = _rand((m, k), jnp.float32), _rand((k, n), jnp.float32)
+    c = _rand((m, n), jnp.float32)
+    got = opope_gemm(a, b, c, block_m=64, block_n=128, block_k=128,
+                     interpret=True)
+    want = reference_matmul(a, b, c)
+    assert _err(got, want) < 1e-4
+
+
+def test_gemm_fp8_widening():
+    """FP8 inputs with widening accumulation (paper's FP8->FP16 MAC)."""
+    a = _rand((64, 128), jnp.float8_e4m3fn)
+    b = _rand((128, 64), jnp.float8_e4m3fn)
+    got = opope_gemm(a, b, out_dtype=jnp.bfloat16, block_m=64, block_n=64,
+                     block_k=128, interpret=True)
+    want = reference_matmul(a, b, out_dtype=jnp.bfloat16)
+    assert _err(got, want) < 0.25  # fp8 quantization noise
+
+
+def test_ops_linear_bias_via_preload():
+    ops.set_default_backend("pallas_interpret")
+    try:
+        x = _rand((4, 32, 64), jnp.float32)
+        w = _rand((64, 48), jnp.float32)
+        bias = _rand((48,), jnp.float32)
+        y = ops.linear(x, w, bias)
+        want = np.einsum("bsk,kn->bsn", np.asarray(x), np.asarray(w)) + np.asarray(bias)
+        assert float(np.max(np.abs(np.asarray(y) - want))) < 1e-4
+    finally:
+        ops.set_default_backend("auto")
+
+
+def test_ops_vjp_matches_xla_grads():
+    ops.set_default_backend("pallas_interpret")
+    try:
+        a = _rand((32, 64), jnp.float32)
+        w = _rand((64, 48), jnp.float32)
+        f = lambda a, w: jnp.sum(ops.matmul(a, w) ** 2)
+        ga, gw = jax.grad(f, argnums=(0, 1))(a, w)
+        f2 = lambda a, w: jnp.sum((a @ w) ** 2)
+        ga2, gw2 = jax.grad(f2, argnums=(0, 1))(a, w)
+        assert _err(ga, ga2) < 1e-2 and _err(gw, gw2) < 1e-2
+    finally:
+        ops.set_default_backend("auto")
+
+
+def test_xla_backend_bitwise_matches_reference():
+    a, b = _rand((64, 128), jnp.bfloat16), _rand((128, 32), jnp.bfloat16)
+    got = ops.matmul(a, b, backend="xla")
+    want = reference_matmul(a, b)
+    assert _err(got, want) == 0.0
+
+
+def test_padding_waste_mirrors_paper_quantization():
+    # aligned: no waste; ragged: waste matches closed form
+    assert padding_waste(256, 512, 256, 128, 128, 128) == 0.0
+    w = padding_waste(100, 200, 96, 64, 128, 128)
+    assert 0 < w < 1
+    bm, bn, bk = default_block_shape(1024, 4096, 1024)
+    assert bm % 8 == 0 and bn % 128 == 0 and bk % 128 == 0

@@ -1,0 +1,74 @@
+"""opope_attention / opope_chunked_scan vs their jnp oracles (interpret)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.opope_attention import opope_attention, opope_attention_bhsd
+from repro.kernels.opope_scan import opope_chunked_scan
+from repro.kernels.ref import reference_attention, reference_chunked_scan
+
+RNG = np.random.default_rng(0)
+
+
+@pytest.mark.parametrize(
+    "s,t,d,causal",
+    [
+        (128, 128, 64, True),
+        (100, 160, 64, True),  # unaligned + cache-continuation offset
+        (96, 128, 32, False),
+        (77, 77, 64, True),
+        (256, 256, 128, True),
+    ],
+)
+def test_attention_matches_oracle(s, t, d, causal):
+    q = jnp.asarray(RNG.standard_normal((s, d)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((t, d)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((t, d)), jnp.float32)
+    got = opope_attention(q, k, v, causal=causal, block_q=64, block_k=64,
+                          interpret=True)
+    want = reference_attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_attention_batched_bf16():
+    q = jnp.asarray(RNG.standard_normal((2, 3, 64, 32)), jnp.bfloat16)
+    k = jnp.asarray(RNG.standard_normal((2, 3, 64, 32)), jnp.bfloat16)
+    v = jnp.asarray(RNG.standard_normal((2, 3, 64, 32)), jnp.bfloat16)
+    got = opope_attention_bhsd(q, k, v, block_q=32, block_k=32, interpret=True)
+    want = jax.vmap(jax.vmap(lambda q, k, v: reference_attention(q, k, v)))(
+        q, k, v
+    )
+    err = float(jnp.max(jnp.abs(got.astype(jnp.float32) - want.astype(jnp.float32))))
+    assert err < 5e-2
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    s=st.integers(16, 96),
+    d=st.sampled_from([32, 64]),
+    bq=st.sampled_from([16, 32, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_attention_property(s, d, bq, seed):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.standard_normal((s, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((s, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((s, d)), jnp.float32)
+    got = opope_attention(q, k, v, block_q=bq, block_k=bq, interpret=True)
+    want = reference_attention(q, k, v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=5e-4, atol=5e-4)
+
+
+@pytest.mark.parametrize("s,d,chunk", [(128, 64, 32), (100, 32, 64), (64, 128, 64)])
+def test_chunked_scan_matches_oracle(s, d, chunk):
+    decay = jnp.asarray(RNG.uniform(0.2, 0.99, (s, d)), jnp.float32)
+    update = jnp.asarray(RNG.standard_normal((s, d)), jnp.float32)
+    got = opope_chunked_scan(decay, update, chunk=chunk, interpret=True)
+    want = reference_chunked_scan(decay, update)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)

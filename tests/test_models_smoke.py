@@ -1,0 +1,163 @@
+"""Per-architecture smoke tests (reduced configs, CPU).
+
+Every assigned arch: one forward/train step (loss + finite grads, exact
+output shapes), one prefill and one decode step. Plus exactness checks:
+prefill-state == full-sequence state (mamba), blockwise attention == naive
+attention, MoE dispatch equivalence.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.models import api
+from repro.models.attention import blockwise_attention
+from repro.models.kernels_ref_checks import naive_attention  # noqa: F401  (shared helper)
+
+KEY = jax.random.key(0)
+
+
+def make_batch(cfg, b, s, key=KEY):
+    ks = jax.random.split(key, 3)
+    batch = {
+        "tokens": jax.random.randint(ks[0], (b, s), 0, cfg.vocab),
+        "labels": jax.random.randint(ks[1], (b, s), 0, cfg.vocab),
+    }
+    if cfg.family == "vlm":
+        batch["tokens"] = batch["tokens"][:, : s - cfg.n_img_tokens]
+        batch["labels"] = batch["labels"][:, : s - cfg.n_img_tokens]
+        batch["patch_embeds"] = jax.random.normal(
+            ks[2], (b, cfg.n_img_tokens, cfg.d_model), jnp.float32
+        )
+    if cfg.family == "audio":
+        batch["frames"] = jax.random.normal(
+            ks[2], (b, cfg.enc_seq, cfg.d_model), jnp.float32
+        )
+    return batch
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_arch_train_step(name):
+    cfg = ARCHS[name].reduced()
+    params = api.init_params(cfg, KEY)
+    batch = make_batch(cfg, 2, 32)
+    loss, grads = jax.value_and_grad(lambda p: api.loss_fn(cfg, p, batch))(params)
+    assert np.isfinite(float(loss))
+    gnorm = sum(float(jnp.sum(g.astype(jnp.float32) ** 2)) for g in jax.tree.leaves(grads))
+    assert np.isfinite(gnorm) and gnorm > 0
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_arch_prefill_decode(name):
+    cfg = ARCHS[name].reduced()
+    params = api.init_params(cfg, KEY)
+    batch = make_batch(cfg, 2, 32)
+    logits, caches = api.prefill(cfg, params, batch, max_len=48,
+                                 cache_dtype=jnp.float32)
+    assert logits.shape == (2, cfg.vocab)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    tok = jnp.argmax(logits, -1)[:, None]
+    pos = jnp.asarray(batch["tokens"].shape[1], jnp.int32)
+    for i in range(3):
+        logits, caches = api.decode(cfg, params, tok, caches, pos + i)
+        assert logits.shape == (2, cfg.vocab)
+        assert np.isfinite(np.asarray(logits, np.float32)).all()
+        tok = jnp.argmax(logits, -1)[:, None]
+
+
+def test_prefill_then_decode_matches_full_forward():
+    """Decoding token s+1 after prefill(0..s) == forward over 0..s+1.
+
+    This is the strongest correctness check of the cache machinery: it
+    exercises RoPE offsets, cache indexing and state carry for a dense arch.
+    """
+    from repro.models.transformer import lm_forward, lm_logits
+
+    cfg = ARCHS["chatglm3-6b"].reduced()
+    params = api.init_params(cfg, KEY)
+    toks = jax.random.randint(jax.random.key(1), (2, 17), 0, cfg.vocab)
+    # full forward over all 17 tokens
+    hidden, _, _ = lm_forward(params, toks, cfg, mode="train")
+    full_logits = lm_logits(params, hidden, cfg)[:, -1]
+    # prefill over 16 then decode the 17th
+    logits, caches = api.prefill(
+        cfg, params, {"tokens": toks[:, :16]}, max_len=32,
+        cache_dtype=jnp.float32,
+    )
+    dec_logits, _ = api.decode(
+        cfg, params, toks[:, 16:17], caches, jnp.asarray(16, jnp.int32)
+    )
+    np.testing.assert_allclose(
+        np.asarray(dec_logits), np.asarray(full_logits), rtol=2e-2, atol=2e-2
+    )
+
+
+def test_prefill_then_decode_matches_full_forward_ssm():
+    """Same consistency check through mamba + moe + attention (jamba)."""
+    from repro.models.transformer import lm_forward, lm_logits
+
+    cfg = ARCHS["jamba-v0.1-52b"].reduced()
+    params = api.init_params(cfg, KEY)
+    toks = jax.random.randint(jax.random.key(2), (2, 17), 0, cfg.vocab)
+    hidden, _, _ = lm_forward(params, toks, cfg, mode="train")
+    full_logits = lm_logits(params, hidden, cfg)[:, -1]
+    logits, caches = api.prefill(
+        cfg, params, {"tokens": toks[:, :16]}, max_len=32,
+        cache_dtype=jnp.float32,
+    )
+    dec_logits, _ = api.decode(
+        cfg, params, toks[:, 16:17], caches, jnp.asarray(16, jnp.int32)
+    )
+    np.testing.assert_allclose(
+        np.asarray(dec_logits), np.asarray(full_logits), rtol=5e-2, atol=5e-2
+    )
+
+
+def test_blockwise_attention_matches_naive():
+    rng = np.random.default_rng(0)
+    b, s, hq, hkv, d = 2, 48, 4, 2, 16
+    q = jnp.asarray(rng.standard_normal((b, s, hq, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, s, hkv, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, s, hkv, d)), jnp.float32)
+    for window in (None, 16):
+        for cap in (None, 30.0):
+            got = blockwise_attention(
+                q, k, v, causal=True, window=window, attn_softcap=cap,
+                q_chunk=16, kv_chunk=16,
+            )
+            want = naive_attention(q, k, v, causal=True, window=window,
+                                   attn_softcap=cap)
+            np.testing.assert_allclose(
+                np.asarray(got), np.asarray(want), rtol=2e-3, atol=2e-3
+            )
+
+
+def test_moe_dispatch_modes_agree():
+    from repro.models.layers import Initializer
+    from repro.models.moe import moe_apply, moe_init
+
+    p = moe_init(jax.random.key(0), 32, 64, 8, Initializer(dtype=jnp.float32))
+    x = jax.random.normal(jax.random.key(1), (2, 16, 32))
+    kw = dict(n_experts=8, top_k=2, capacity_factor=8.0, group_size=16)
+    y1, a1 = moe_apply(p, x, dispatch="onehot", **kw)
+    y2, a2 = moe_apply(p, x, dispatch="sort", **kw)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-5)
+    assert float(jnp.abs(a1 - a2)) < 1e-6
+
+
+def test_moe_capacity_drops_tokens():
+    from repro.models.layers import Initializer
+    from repro.models.moe import moe_apply, moe_init
+
+    p = moe_init(jax.random.key(0), 16, 32, 4, Initializer(dtype=jnp.float32))
+    x = jax.random.normal(jax.random.key(1), (1, 32, 16))
+    full, _ = moe_apply(p, x, n_experts=4, top_k=2, capacity_factor=8.0,
+                        dispatch="sort", group_size=32)
+    tight, _ = moe_apply(p, x, n_experts=4, top_k=2, capacity_factor=0.25,
+                         dispatch="sort", group_size=32)
+    # token dropping must change (reduce) some outputs but keep shape/finite
+    assert full.shape == tight.shape
+    assert float(jnp.max(jnp.abs(full - tight))) > 1e-6
+    assert np.isfinite(np.asarray(tight)).all()

@@ -1,0 +1,145 @@
+"""Sharding rules + HLO census unit tests (no multi-device needed)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCHS
+from repro.core.hlo_census import census_hlo
+from repro.distributed.sharding import guard_spec, param_pspec
+
+
+class FakeMesh:
+    """Duck-typed mesh: only .shape (dict) and .axis_names are consulted."""
+
+    def __init__(self, shape):
+        self.shape = dict(shape)
+        self.axis_names = tuple(shape)
+        self.size = int(np.prod(list(shape.values())))
+
+
+MESH = FakeMesh({"data": 16, "model": 16})
+POD = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+class TestGuard:
+    def test_divisible_kept(self):
+        assert guard_spec(MESH, (64, 32), P("data", "model")) == P("data", "model")
+
+    def test_indivisible_dropped(self):
+        assert guard_spec(MESH, (40, 32), P("model", "data")) == P(None, "data")
+
+    def test_tuple_axes(self):
+        assert guard_spec(POD, (64, 32), P(("pod", "data"), None)) == P(
+            ("pod", "data"), None
+        )
+        assert guard_spec(POD, (31, 32), P(("pod", "data"), None)) == P(None, None)
+
+
+class TestParamRules:
+    def test_attention_weights_2d_sharded(self):
+        spec = param_pspec(MESH, "blocks/0/attn/wq/w", (28, 4096, 4096))
+        assert spec == P(None, "data", "model")
+
+    def test_qwen_heads_never_model_sharded(self):
+        # fused qkv out dim 40*128=5120 divides 16 -> fine to shard
+        spec = param_pspec(MESH, "blocks/0/attn/wq/w", (64, 5120, 5120))
+        assert spec == P(None, "data", "model")
+
+    def test_whisper_vocab_unsharded(self):
+        spec = param_pspec(MESH, "embed/table", (51865, 512))
+        assert spec == P(None, "data")
+
+    def test_expert_ep_when_divisible(self):
+        spec = param_pspec(MESH, "blocks/0/moe/w_gate", (28, 64, 2048, 1408))
+        assert spec == P(None, "model", "data", None)
+
+    def test_expert_tp_fallback_grok(self):
+        """E=8 < 16: the model axis must land on d_ff, not vanish."""
+        spec = param_pspec(MESH, "blocks/0/moe/w_gate", (64, 8, 6144, 32768))
+        assert spec == P(None, None, "data", "model")
+        spec = param_pspec(MESH, "blocks/0/moe/w_down", (64, 8, 32768, 6144))
+        assert spec == P(None, None, "model", "data")
+
+    def test_norms_replicated(self):
+        spec = param_pspec(MESH, "blocks/0/norm_mixer/scale", (28, 4096))
+        assert all(e is None for e in tuple(spec))
+
+    def test_every_arch_every_param_is_legal(self):
+        """All rules produce evenly-divisible specs for every arch."""
+        import functools
+
+        from repro.models import api
+
+        for name, cfg in ARCHS.items():
+            shapes = jax.eval_shape(
+                functools.partial(api.init_params, cfg), jax.random.key(0)
+            )
+            leaves = jax.tree_util.tree_flatten_with_path(shapes)[0]
+            for path, leaf in leaves:
+                pstr = "/".join(
+                    str(getattr(k, "key", getattr(k, "idx", getattr(k, "name", k))))
+                    for k in path
+                )
+                for mesh in (MESH, POD):
+                    spec = param_pspec(mesh, pstr, leaf.shape)
+                    for dim, entry in zip(leaf.shape, tuple(spec)):
+                        if entry is None:
+                            continue
+                        axes = entry if isinstance(entry, tuple) else (entry,)
+                        n = int(np.prod([mesh.shape[a] for a in axes]))
+                        assert dim % n == 0, (name, pstr, leaf.shape, spec)
+
+
+class TestHloCensus:
+    def test_loop_trip_multiplication(self):
+        def f(x, w):
+            def body(c, wi):
+                return jnp.tanh(c @ wi), None
+            c, _ = jax.lax.scan(body, x, w)
+            return c.sum()
+
+        comp = jax.jit(f).lower(
+            jax.ShapeDtypeStruct((8, 32), jnp.float32),
+            jax.ShapeDtypeStruct((7, 32, 32), jnp.float32),
+        ).compile()
+        cen = census_hlo(comp.as_text())
+        want = 7 * 2 * 8 * 32 * 32  # 7 iterations x one [8,32]@[32,32]
+        assert abs(cen.flops - want) / want < 0.01
+        assert cen.max_trip == 7
+
+    def test_loop_free_matches_cost_analysis(self):
+        def g(x, w):
+            return jnp.sum(jnp.tanh(x @ w))
+
+        comp = jax.jit(g).lower(
+            jax.ShapeDtypeStruct((64, 128), jnp.float32),
+            jax.ShapeDtypeStruct((128, 96), jnp.float32),
+        ).compile()
+        ca = comp.cost_analysis()
+        cen = census_hlo(comp.as_text())
+        assert abs(cen.flops - ca["flops"]) / ca["flops"] < 0.05
+
+    def test_known_train_step_accounting(self):
+        """fwd+bwd+remat of a scanned MLP ~ 4x fwd FLOPs (within 15%)."""
+        L, B, D, F = 4, 8, 64, 256
+
+        def loss(ws, x):
+            def body(c, w):
+                return jnp.tanh(c @ w[0]) @ w[1], None
+            c, _ = jax.lax.scan(jax.checkpoint(body), x, ws)
+            return jnp.sum(c * c)
+
+        def step(ws, x):
+            return jax.grad(loss)(ws, x)
+
+        comp = jax.jit(step).lower(
+            (jax.ShapeDtypeStruct((L, D, F), jnp.float32),
+             jax.ShapeDtypeStruct((L, F, D), jnp.float32)),
+            jax.ShapeDtypeStruct((B, D), jnp.float32),
+        ).compile()
+        cen = census_hlo(comp.as_text())
+        fwd = L * 2 * (B * D * F + B * F * D)
+        assert 2.5 * fwd < cen.flops < 4.6 * fwd
