@@ -1,10 +1,12 @@
-"""Kernel-level benchmark: O-POPE Pallas GEMM vs XLA dot (wall time + check).
+"""Kernel-level benchmark: every available matmul backend (wall time + check).
 
-On this CPU container the Pallas kernel runs in interpret mode (Python
-executor — wall time is NOT indicative of TPU performance; correctness and
-the block-shape machinery are what is exercised). The XLA path is compiled
-and its wall time is the CPU reference. TPU-side performance is covered by
-the roofline analysis in EXPERIMENTS.md.
+Backends are enumerated from the ``repro.kernels.ops`` registry, so a newly
+registered backend shows up here with no benchmark change. On this CPU
+container the Pallas kernel runs in interpret mode (Python executor — wall
+time is NOT indicative of TPU performance; correctness and the block-shape
+machinery are what is exercised). The XLA path is compiled and its wall time
+is the CPU reference. TPU-side performance is covered by the roofline
+analysis in EXPERIMENTS.md.
 """
 
 from __future__ import annotations
@@ -16,7 +18,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.opope_gemm import opope_gemm
+from repro.kernels import ops
 from repro.kernels.ref import reference_matmul
 
 Row = Tuple[str, float, str]
@@ -36,21 +38,27 @@ def _time(fn, *args, n=5) -> float:
 def bench_kernel() -> List[Row]:
     rows: List[Row] = []
     rng = np.random.default_rng(0)
+    backends = ops.available_backends()
     for m, k, n in [(256, 256, 256), (512, 512, 512)]:
         a = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
         b = jnp.asarray(rng.standard_normal((k, n)), jnp.float32)
+        want = jax.jit(lambda a, b: reference_matmul(a, b))(a, b)
 
-        xla = jax.jit(lambda a, b: reference_matmul(a, b))
-        us_xla = _time(xla, a, b)
-        rows.append((f"kernel/xla_us/{m}x{k}x{n}", us_xla, "compiled CPU"))
-
-        t0 = time.perf_counter()
-        out = opope_gemm(a, b, block_m=128, block_n=128, block_k=128,
-                         interpret=True)
-        out.block_until_ready()
-        us_pal = (time.perf_counter() - t0) * 1e6
-        err = float(jnp.max(jnp.abs(out - xla(a, b))))
-        rows.append((f"kernel/pallas_interpret_us/{m}x{k}x{n}", us_pal,
-                     f"interpreter; max_err={err:.2e}"))
-        assert err < 1e-3
+        for backend in backends:
+            if backend == "pallas_interpret":
+                # Python executor: one un-jitted call, no averaging needed.
+                t0 = time.perf_counter()
+                out = ops.matmul(a, b, backend=backend)
+                out.block_until_ready()
+                us = (time.perf_counter() - t0) * 1e6
+                note = "interpreter"
+            else:
+                fn = jax.jit(lambda a, b, _be=backend: ops.matmul(a, b, backend=_be))
+                us = _time(fn, a, b)
+                out = fn(a, b)
+                note = "compiled"
+            err = float(jnp.max(jnp.abs(out - want)))
+            rows.append((f"kernel/{backend}_us/{m}x{k}x{n}", us,
+                         f"{note}; max_err={err:.2e}"))
+            assert err < 1e-3
     return rows

@@ -33,6 +33,11 @@ class MoESpec:
     capacity_factor: float = 1.25
     dispatch: str = "onehot"  # paper-faithful baseline; "sort" = optimized
     group_size: int = 512  # routing group (per-group capacity, local sorts)
+    # Dropless routing (capacity = group size, so no assignment can overflow).
+    # Token-choice capacity dropping makes autoregressive decode diverge from
+    # teacher forcing (drop decisions depend on the whole token group, which
+    # a decode step cannot see); consistency-critical configs set this.
+    dropless: bool = False
 
 
 @dataclasses.dataclass(frozen=True)
@@ -130,6 +135,10 @@ class ArchConfig:
                 top_k=min(2, self.moe.top_k),
                 d_ff_expert=32,
                 d_ff_shared=32 if self.moe.n_shared else None,
+                # Smoke tests check prefill+decode against teacher forcing;
+                # with an untrained (imbalanced) router, capacity dropping
+                # would make those paths disagree by construction.
+                dropless=True,
             )
             if self.moe
             else None

@@ -1,11 +1,13 @@
 """Ambient-mesh sharding hints usable inside model code.
 
 ``constrain(x, spec...)`` applies ``with_sharding_constraint`` against the
-ambient abstract mesh (``jax.set_mesh``), silently dropping axis names the
+ambient mesh (``repro.compat.set_mesh``), silently dropping axis names the
 mesh doesn't have and becoming a no-op when there is no mesh (CPU smoke
 tests). This lets model internals pin the few layouts GSPMD gets wrong
 (split-K decode attention) without threading mesh objects through every
-call.
+call. On JAX without abstract meshes the ambient mesh is the physical one,
+and the constraint is issued as a NamedSharding (which needs no resource
+env); on newer JAX the bare PartitionSpec binds to the abstract mesh.
 """
 
 from __future__ import annotations
@@ -15,13 +17,15 @@ from typing import Optional, Tuple, Union
 import jax
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
+
 __all__ = ["constrain"]
 
 AxisEntry = Union[None, str, Tuple[str, ...]]
 
 
 def constrain(x: jax.Array, *entries: AxisEntry) -> jax.Array:
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = compat.current_abstract_mesh()
     names = set(getattr(mesh, "axis_names", ()) or ())
     if not names:
         return x
@@ -37,7 +41,7 @@ def constrain(x: jax.Array, *entries: AxisEntry) -> jax.Array:
     spec = [keep(e) for e in entries]
     # Drop axes whose mesh size does not divide the dim (jit-arg rule is
     # stricter than constraints, but keep it uniform and predictable).
-    sizes = dict(zip(mesh.axis_names, mesh.axis_sizes))
+    sizes = compat.mesh_axis_sizes(mesh)
     for i, (e, d) in enumerate(zip(spec, x.shape)):
         if e is None:
             continue
@@ -46,4 +50,9 @@ def constrain(x: jax.Array, *entries: AxisEntry) -> jax.Array:
             n *= sizes[a]
         if d % n:
             spec[i] = None
-    return jax.lax.with_sharding_constraint(x, P(*spec))
+    pspec = P(*spec)
+    if isinstance(mesh, jax.sharding.Mesh):  # physical-mesh fallback (0.4.x)
+        return jax.lax.with_sharding_constraint(
+            x, jax.sharding.NamedSharding(mesh, pspec)
+        )
+    return jax.lax.with_sharding_constraint(x, pspec)

@@ -24,6 +24,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import compat
+
 __all__ = ["opope_chunked_scan"]
 
 
@@ -70,7 +72,7 @@ def opope_chunked_scan(
         out_specs=pl.BlockSpec((ck, d), lambda j: (j, 0)),
         out_shape=jax.ShapeDtypeStruct((sp, d), jnp.float32),
         scratch_shapes=[pltpu.VMEM((d,), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("arbitrary",),
         ),
         interpret=interpret,

@@ -1,7 +1,7 @@
 """Public jit'd matmul entry point used by every layer in the framework.
 
-``matmul`` routes through one of three backends with identical numerics
-(fp32 accumulation, single final cast — see `ref.py`):
+``matmul`` routes through a **backend registry** with identical numerics
+across backends (fp32 accumulation, single final cast — see `ref.py`):
 
 * ``"pallas"``            — the O-POPE Pallas kernel, compiled (TPU).
 * ``"pallas_interpret"``  — same kernel body, Pallas interpreter (CPU tests).
@@ -9,16 +9,30 @@
   ``preferred_element_type=f32``; used for the CPU dry-run, where Pallas
   cannot lower, and as the A/B comparison baseline in benchmarks.
 
-The default ``"auto"`` picks pallas on TPU and xla elsewhere, so model code is
-backend-agnostic. A ``custom_vjp`` makes the backward pass run the same
-O-POPE dataflow (two more GEMMs: dA = dO @ B^T, dB = A^T @ dO) instead of
-whatever XLA would pick for the transposed dots.
+New backends register with :func:`register_backend` (an availability probe
+gates selection). The default ``"auto"`` resolver probes whether the
+compiled Pallas path actually lowers on the current platform — once, lazily,
+cached — so model code is backend-agnostic and a platform where Mosaic is
+absent degrades to ``xla`` instead of raising at the first layer. An
+explicitly requested backend that is unavailable likewise degrades (to
+``pallas_interpret`` then ``xla``, with a warning) rather than raising.
+
+The pallas backends pick block shapes through a per-``(M, N, K, dtype)``
+memoized tile selection (`opope_gemm.default_block_shape` — the VMEM-budget
+analogue of the paper's tile quantization rule), so repeated layer shapes pay
+the selection cost once.
+
+A ``custom_vjp`` makes the backward pass run the same O-POPE dataflow (two
+more GEMMs: dA = dO @ B^T, dB = A^T @ dO) instead of whatever XLA would pick
+for the transposed dots.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import functools
-from typing import Optional
+import warnings
+from typing import Callable, Dict, List, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -26,24 +40,170 @@ import jax.numpy as jnp
 from . import opope_gemm as _kern
 from . import ref as _ref
 
-__all__ = ["matmul", "linear", "default_backend", "set_default_backend"]
+__all__ = [
+    "matmul",
+    "linear",
+    "default_backend",
+    "set_default_backend",
+    "register_backend",
+    "resolve_backend",
+    "available_backends",
+    "registered_backends",
+]
 
 _DEFAULT_BACKEND = "auto"
 
+# --------------------------------------------------------------------------
+# Backend registry
+# --------------------------------------------------------------------------
+
+# A backend is fn(a, b, c_or_None, out_dtype) -> [M, N] array with fp32
+# accumulation and a single final cast (the repo-wide numerics contract).
+BackendFn = Callable[[jax.Array, jax.Array, Optional[jax.Array], jnp.dtype], jax.Array]
+
+
+@dataclasses.dataclass(frozen=True)
+class _Backend:
+    name: str
+    fn: BackendFn
+    available: Callable[[], bool]
+
+
+_REGISTRY: Dict[str, _Backend] = {}
+# Degradation order when a requested backend's availability probe fails:
+# prefer the semantics-preserving interpreter, then the XLA reference.
+_FALLBACK_CHAIN = ("pallas_interpret", "xla")
+
+
+def register_backend(
+    name: str,
+    fn: BackendFn,
+    *,
+    available: Union[bool, Callable[[], bool]] = True,
+) -> None:
+    """Register (or replace) a matmul backend.
+
+    ``available`` is either a bool or a zero-arg probe evaluated lazily at
+    resolution time (never at import — see :func:`_pallas_compiles`).
+    """
+    if not callable(fn):
+        raise TypeError(f"backend fn for {name!r} is not callable")
+    probe = available if callable(available) else (lambda _a=bool(available): _a)
+    _REGISTRY[name] = _Backend(name, fn, probe)
+
+
+def registered_backends() -> List[str]:
+    return list(_REGISTRY)
+
+
+def available_backends() -> List[str]:
+    return [n for n, b in _REGISTRY.items() if _probe_ok(b)]
+
+
+def _probe_ok(backend: _Backend) -> bool:
+    try:
+        return bool(backend.available())
+    except Exception:
+        return False
+
+
+@functools.lru_cache(maxsize=None)
+def _pallas_compiles() -> bool:
+    """Probe once whether the *compiled* Pallas path lowers here.
+
+    Lazy (first ``auto``/``pallas`` resolution, not import) because touching
+    ``jax.devices()`` at import would lock the device count before the
+    dry-run can set ``XLA_FLAGS``. A tiny one-tile GEMM is lowered and
+    compiled; any failure (no TPU, no Mosaic support) means "unavailable".
+    """
+    try:
+        if jax.devices()[0].platform != "tpu":
+            return False
+        a = jax.ShapeDtypeStruct((8, 128), jnp.float32)
+        b = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+        _kern.opope_gemm.lower(a, b, interpret=False).compile()
+        return True
+    except Exception:
+        return False
+
+
+@functools.lru_cache(maxsize=4096)
+def _tile_for(m: int, k: int, n: int, itemsize: int) -> Tuple[int, int, int]:
+    """Memoized per-(M, N, K, dtype) block-shape selection."""
+    return _kern.default_block_shape(m, k, n, elem_bytes=itemsize)
+
+
+def _pallas_fn(interpret: bool) -> BackendFn:
+    def run(a, b, c, out_dtype):
+        bm, bn, bk = _tile_for(
+            a.shape[0], a.shape[1], b.shape[1], jnp.dtype(a.dtype).itemsize
+        )
+        return _kern.opope_gemm(
+            a, b, c,
+            block_m=bm, block_n=bn, block_k=bk,
+            out_dtype=out_dtype, interpret=interpret,
+        )
+
+    return run
+
+
+def _xla_fn(a, b, c, out_dtype):
+    return _ref.reference_matmul(a, b, c, out_dtype=out_dtype)
+
+
+register_backend("pallas", _pallas_fn(interpret=False), available=_pallas_compiles)
+register_backend("pallas_interpret", _pallas_fn(interpret=True))
+register_backend("xla", _xla_fn)
+
+
+def resolve_backend(name: Optional[str] = None) -> str:
+    """Resolve a backend request to the name of an available backend.
+
+    ``None`` means the process default; ``"auto"`` picks ``pallas`` when the
+    compiled path lowers here, else ``xla``. An unavailable explicit request
+    degrades along ``pallas_interpret`` -> ``xla`` with a warning.
+    """
+    name = name or _DEFAULT_BACKEND
+    if name == "auto":
+        # Consult the registry's probe (not _pallas_compiles directly) so a
+        # re-registered "pallas" backend brings its own availability rule.
+        return "pallas" if _probe_ok(_REGISTRY["pallas"]) else "xla"
+    backend = _REGISTRY.get(name)
+    if backend is None:
+        raise ValueError(
+            f"unknown matmul backend {name!r}; registered: {registered_backends()}"
+        )
+    if _probe_ok(backend):
+        return name
+    for fallback in _FALLBACK_CHAIN:
+        if fallback != name and _probe_ok(_REGISTRY[fallback]):
+            warnings.warn(
+                f"matmul backend {name!r} unavailable on this platform; "
+                f"degrading to {fallback!r}",
+                RuntimeWarning,
+                stacklevel=2,
+            )
+            return fallback
+    raise RuntimeError(f"no available matmul backend (requested {name!r})")
+
 
 def default_backend() -> str:
-    if _DEFAULT_BACKEND != "auto":
-        return _DEFAULT_BACKEND
-    platform = jax.devices()[0].platform
-    return "pallas" if platform == "tpu" else "xla"
+    return resolve_backend(None)
 
 
 def set_default_backend(name: str) -> None:
-    """Override backend globally ('pallas', 'pallas_interpret', 'xla', 'auto')."""
+    """Override backend globally (any registered name, or 'auto')."""
     global _DEFAULT_BACKEND
-    if name not in ("pallas", "pallas_interpret", "xla", "auto"):
-        raise ValueError(name)
+    if name != "auto" and name not in _REGISTRY:
+        raise ValueError(
+            f"unknown matmul backend {name!r}; registered: {registered_backends()}"
+        )
     _DEFAULT_BACKEND = name
+
+
+# --------------------------------------------------------------------------
+# matmul / linear entry points (custom_vjp keeps the backward in-dataflow)
+# --------------------------------------------------------------------------
 
 
 def _matmul_impl(
@@ -53,10 +213,7 @@ def _matmul_impl(
     backend: str,
     out_dtype,
 ) -> jax.Array:
-    if backend == "xla":
-        return _ref.reference_matmul(a, b, c, out_dtype=out_dtype)
-    interpret = backend == "pallas_interpret"
-    return _kern.opope_gemm(a, b, c, out_dtype=out_dtype, interpret=interpret)
+    return _REGISTRY[backend].fn(a, b, c, out_dtype)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
@@ -95,7 +252,7 @@ def matmul(
     GEMM — exactly how the paper maps ML layers onto the engine, Table I).
     """
     out_dtype = jnp.dtype(out_dtype or a.dtype)
-    backend = backend or default_backend()
+    backend = resolve_backend(backend)
     batch_shape = a.shape[:-1]
     m = 1
     for d in batch_shape:

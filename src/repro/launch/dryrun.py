@@ -37,6 +37,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.configs import ARCHS, applicable_shapes, get_config, shape_by_name
 from repro.configs.base import ArchConfig, ShapeConfig
 from repro.core.hlo_census import census_hlo
@@ -105,7 +106,7 @@ def run_cell(
     dp = data_axes(mesh)
     dp_axis = dp if len(dp) > 1 else dp[0]
 
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         if shape.kind == "train":
             import functools
 
@@ -179,8 +180,8 @@ def run_cell(
         compiled = lowered.compile()
         t_compile = time.time() - t0 - t_lower
 
-    ma = compiled.memory_analysis()
-    ca = compiled.cost_analysis() or {}
+    ma = compat.normalize_memory_analysis(compiled)
+    ca = compat.normalize_cost_analysis(compiled)
     hlo = compiled.as_text()
     # Loop-aware census: cost_analysis counts while bodies once (useless for
     # scanned layers); the census multiplies by known_trip_count. See
@@ -215,15 +216,13 @@ def run_cell(
         "memory": {
             # peak_bytes is the buffer-assignment high-water mark including
             # arguments, (aliased) outputs and live temps — the per-chip HBM
-            # requirement. temp_bytes sums logical temp buffers (reused
-            # buffers counted once each, not concurrent) — diagnostic only.
-            "argument_bytes": ma.argument_size_in_bytes,
-            "output_bytes": ma.output_size_in_bytes,
-            "temp_bytes": ma.temp_size_in_bytes,
-            "peak_bytes": ma.peak_memory_in_bytes,
-            "alias_bytes": ma.alias_size_in_bytes,
-            "hbm_need_bytes": ma.peak_memory_in_bytes,
-            "fits_16gb": ma.peak_memory_in_bytes < 16e9,
+            # requirement (upper-bounded from components on JAX without
+            # peak_memory_in_bytes). temp_bytes sums logical temp buffers
+            # (reused buffers counted once each, not concurrent) — diagnostic
+            # only.
+            **ma,
+            "hbm_need_bytes": ma["peak_bytes"],
+            "fits_16gb": ma["peak_bytes"] < 16e9,
         },
         "cost": {
             "flops_per_device": flops_dev,

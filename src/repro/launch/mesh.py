@@ -17,8 +17,7 @@ all-reduces, which overlap with the backward pass.
 
 from __future__ import annotations
 
-import jax
-from jax.sharding import AxisType
+from repro import compat
 
 __all__ = ["make_production_mesh", "make_test_mesh"]
 
@@ -26,11 +25,9 @@ __all__ = ["make_production_mesh", "make_test_mesh"]
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(AxisType.Auto,) * len(axes)
-    )
+    return compat.make_mesh(shape, axes, axis_types="auto")
 
 
 def make_test_mesh(shape=(2, 2, 2), axes=("pod", "data", "model")):
     """Small mesh for subprocess smoke tests (8 forced host devices)."""
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes, axis_types="auto")

@@ -80,6 +80,7 @@ def moe_apply(
     capacity_factor: float = 1.25,
     dispatch: str = "sort",
     group_size: int = 512,
+    dropless: bool = False,
     backend: Optional[str] = None,
 ) -> Tuple[jax.Array, jax.Array]:
     """x: [B, S, D] -> (y, aux_loss).
@@ -88,6 +89,12 @@ def moe_apply(
     (GShard semantics): dispatch structures stay O(T * E * C_g) instead of
     O(T * E * C_global), and — critically for SPMD — the group axis carries
     the batch sharding, so routing never sorts or one-hots across devices.
+
+    ``dropless=True`` sets capacity to the group size — the provable
+    no-overflow bound (each token contributes at most one assignment per
+    expert) — so routing becomes a pure per-token function and autoregressive
+    decode matches teacher forcing exactly. Capacity-based dropping remains
+    the default: it is what the production roofline models.
     """
     b, s, d = x.shape
     t = b * s
@@ -101,7 +108,10 @@ def moe_apply(
     while t % g:
         g -= 1
     n_groups = t // g
-    capacity = max(int(math.ceil(capacity_factor * g * top_k / n_experts)), 1)
+    if dropless:
+        capacity = g
+    else:
+        capacity = max(int(math.ceil(capacity_factor * g * top_k / n_experts)), 1)
 
     xg = xf.reshape(n_groups, g, d)
     vg = top_vals.reshape(n_groups, g, top_k)

@@ -266,6 +266,7 @@ def _block_apply(
             capacity_factor=cfg.moe.capacity_factor,
             dispatch=cfg.moe.dispatch,
             group_size=cfg.moe.group_size,
+            dropless=cfg.moe.dropless,
             backend=backend,
         )
         x = x + y

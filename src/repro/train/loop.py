@@ -160,28 +160,39 @@ def train(
     step_fn = make_train_step(cfg, opt_cfg)
     wd = _Watchdog(loop.watchdog_factor)
     losses = []
-    for step in range(start, loop.total_steps):
-        if loop.fail_at_step is not None and step == loop.fail_at_step:
-            raise RuntimeError(f"injected failure at step {step}")
-        t0 = time.perf_counter()
-        batch = batch_fn(step)
-        params, opt_state, metrics = step_fn(params, opt_state, batch)
-        loss = float(metrics["loss"])
-        losses.append(loss)
-        dt = time.perf_counter() - t0
-        if wd.observe(dt):
-            log(f"[train] straggler: step {step} took {dt:.3f}s")
-        if loop.log_every and step % loop.log_every == 0:
-            log(
-                f"[train] step {step} loss {loss:.4f} "
-                f"lr {float(metrics['lr']):.2e} gnorm {float(metrics['grad_norm']):.3f} "
-                f"{dt*1e3:.0f}ms"
-            )
-        if writer and (step + 1) % loop.ckpt_every == 0:
-            writer.save(step + 1, {"params": params, "opt": opt_state})
-    if writer:
-        writer.save(loop.total_steps, {"params": params, "opt": opt_state})
-        writer.wait()
+    try:
+        for step in range(start, loop.total_steps):
+            if loop.fail_at_step is not None and step == loop.fail_at_step:
+                raise RuntimeError(f"injected failure at step {step}")
+            t0 = time.perf_counter()
+            batch = batch_fn(step)
+            params, opt_state, metrics = step_fn(params, opt_state, batch)
+            loss = float(metrics["loss"])
+            losses.append(loss)
+            dt = time.perf_counter() - t0
+            if wd.observe(dt):
+                log(f"[train] straggler: step {step} took {dt:.3f}s")
+            if loop.log_every and step % loop.log_every == 0:
+                log(
+                    f"[train] step {step} loss {loss:.4f} "
+                    f"lr {float(metrics['lr']):.2e} gnorm {float(metrics['grad_norm']):.3f} "
+                    f"{dt*1e3:.0f}ms"
+                )
+            if writer and (step + 1) % loop.ckpt_every == 0:
+                writer.save(step + 1, {"params": params, "opt": opt_state})
+        if writer:
+            writer.save(loop.total_steps, {"params": params, "opt": opt_state})
+            writer.wait()
+    finally:
+        # A failing step must not also lose the checkpoint already in flight:
+        # join the async writer so every save issued before the failure is
+        # committed (the graceful-shutdown analogue of a SIGTERM flush; a hard
+        # kill still loses at most one interval, as documented in checkpoint).
+        if writer:
+            try:
+                writer.wait()
+            except Exception as flush_err:  # don't mask the original failure
+                log(f"[train] checkpoint flush failed: {flush_err}")
     return TrainResult(
         losses=losses,
         resumed_from=resumed_from,

@@ -3,7 +3,10 @@
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container without the `test` extra
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core.engine import (
     EngineConfig,

@@ -2,7 +2,10 @@
 
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container without the `test` extra
+    from _hypothesis_fallback import given, settings, st
 
 from repro.kernels.opope_gemm import opope_gemm
 from repro.kernels.ref import reference_matmul

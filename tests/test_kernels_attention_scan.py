@@ -4,7 +4,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container without the `test` extra
+    from _hypothesis_fallback import given, settings, st
 
 from repro.kernels.opope_attention import opope_attention, opope_attention_bhsd
 from repro.kernels.opope_scan import opope_chunked_scan

@@ -6,6 +6,7 @@ import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.configs import ARCHS
 from repro.core.hlo_census import census_hlo
 from repro.distributed.sharding import guard_spec, param_pspec
@@ -118,7 +119,7 @@ class TestHloCensus:
             jax.ShapeDtypeStruct((64, 128), jnp.float32),
             jax.ShapeDtypeStruct((128, 96), jnp.float32),
         ).compile()
-        ca = comp.cost_analysis()
+        ca = compat.normalize_cost_analysis(comp)
         cen = census_hlo(comp.as_text())
         assert abs(cen.flops - ca["flops"]) / ca["flops"] < 0.05
 
