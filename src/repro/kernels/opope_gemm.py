@@ -68,12 +68,16 @@ def _gemm_kernel(a_ref, b_ref, o_ref, acc_ref, *, k_steps: int):
 
 def _gemm_preload_kernel(a_ref, b_ref, c_ref, o_ref, acc_ref, *, k_steps: int):
     """As :func:`_gemm_kernel` but the accumulator is preloaded from C —
-    the paper's accumulator-preload path (Fig. 2/3)."""
+    the paper's accumulator-preload path (Fig. 2/3). The C tile is either a
+    full (bm, bn) block or a (1, bn) bias row broadcast down the M dimension
+    at preload time (no [M, N] operand ever materializes in HBM)."""
     k = pl.program_id(2)
 
     @pl.when(k == 0)
     def _init():
-        acc_ref[...] = c_ref[...].astype(jnp.float32)
+        acc_ref[...] = jnp.broadcast_to(
+            c_ref[...].astype(jnp.float32), acc_ref.shape
+        )
 
     acc_ref[...] += jnp.dot(
         a_ref[...], b_ref[...], preferred_element_type=jnp.float32
@@ -160,10 +164,19 @@ def opope_gemm(
     ]
     operands = [a_p, b_p]
     if c is not None:
-        if c.shape != (m, n):
-            raise ValueError(f"C preload shape {c.shape} != {(m, n)}")
-        in_specs.append(pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)))
-        operands.append(_pad2(c, mp, np_))
+        if c.ndim == 1:
+            # [N] bias: streamed as a single (1, bn) row per N tile and
+            # broadcast into the accumulator at preload — O(N) HBM traffic
+            # instead of an O(M*N) materialized C operand.
+            if c.shape != (n,):
+                raise ValueError(f"C preload shape {c.shape} != {(n,)} or {(m, n)}")
+            in_specs.append(pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)))
+            operands.append(_pad2(c[None, :], 1, np_))
+        else:
+            if c.shape != (m, n):
+                raise ValueError(f"C preload shape {c.shape} != {(m, n)}")
+            in_specs.append(pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)))
+            operands.append(_pad2(c, mp, np_))
         kernel = functools.partial(_gemm_preload_kernel, k_steps=k_steps)
     else:
         kernel = functools.partial(_gemm_kernel, k_steps=k_steps)

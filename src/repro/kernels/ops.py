@@ -250,6 +250,9 @@ def matmul(
 
     Leading batch dims of ``a`` are flattened into M (the engine sees one tall
     GEMM — exactly how the paper maps ML layers onto the engine, Table I).
+    ``c`` is either a full C operand matching ``a``'s batch dims x N, or a
+    1-D ``[N]`` bias row broadcast inside the backend at the accumulator
+    preload point (never materialized as an [M, N] array).
     """
     out_dtype = jnp.dtype(out_dtype or a.dtype)
     backend = resolve_backend(backend)
@@ -260,6 +263,8 @@ def matmul(
     a2 = a.reshape(m, a.shape[-1])
     if c is None:
         out = _matmul_nc(a2, b, backend, out_dtype)
+    elif c.ndim == 1:
+        out = _matmul_bias(a2, b, c, backend, out_dtype)
     else:
         out = _matmul(a2, b, c.reshape(m, b.shape[-1]), backend, out_dtype)
     return out.reshape(*batch_shape, b.shape[-1])
@@ -284,6 +289,26 @@ def _matmul_nc_bwd(backend, out_dtype, res, g):
 _matmul_nc.defvjp(_matmul_nc_fwd, _matmul_nc_bwd)
 
 
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def _matmul_bias(a, b, bias, backend, out_dtype):
+    return _matmul_impl(a, b, bias, backend, out_dtype)
+
+
+def _matmul_bias_fwd(a, b, bias, backend, out_dtype):
+    return _matmul_impl(a, b, bias, backend, out_dtype), (a, b)
+
+
+def _matmul_bias_bwd(backend, out_dtype, res, g):
+    a, b = res
+    da = _matmul_impl(g, b.T, None, backend, a.dtype)
+    db = _matmul_impl(a.T, g, None, backend, b.dtype)
+    dbias = g.sum(axis=0)  # the bias row enters every accumulator row once
+    return da, db, dbias
+
+
+_matmul_bias.defvjp(_matmul_bias_fwd, _matmul_bias_bwd)
+
+
 def linear(
     x: jax.Array,
     w: jax.Array,
@@ -292,13 +317,8 @@ def linear(
     backend: Optional[str] = None,
     out_dtype=None,
 ) -> jax.Array:
-    """Linear layer on the O-POPE path. Bias rides the C-preload operand —
-    the fused epilogue the paper's accumulator preload enables for free."""
-    if bias is not None:
-        batch = x.shape[:-1]
-        m = 1
-        for d in batch:
-            m *= d
-        c = jnp.broadcast_to(bias, (m, w.shape[-1])).reshape(*batch, w.shape[-1])
-        return matmul(x, w, c, backend=backend, out_dtype=out_dtype)
-    return matmul(x, w, backend=backend, out_dtype=out_dtype)
+    """Linear layer on the O-POPE path. The [N] bias rides the C-preload
+    operand — the fused epilogue the paper's accumulator preload enables for
+    free — and is broadcast inside the backend, so no [M, N] copy of it is
+    ever built (serving decode steps would otherwise pay O(M*N) per linear)."""
+    return matmul(x, w, bias, backend=backend, out_dtype=out_dtype)

@@ -28,6 +28,7 @@ def reference_matmul(
     accumulate in fp32 (the TPU MXU's ``preferred_element_type`` — the
     analogue of the paper's widening accumulation), optionally add the
     preloaded C operand into the accumulator, cast once at the end.
+    C is either [M, N] or an [N] bias row broadcast at the preload point.
     """
     out_dtype = out_dtype or a.dtype
     acc = jnp.dot(a, b, preferred_element_type=jnp.float32)

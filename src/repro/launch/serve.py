@@ -1,8 +1,15 @@
 """Serving driver: ``python -m repro.launch.serve --arch <id> [...]``.
 
-Batched prefill + decode through repro.serve.ServeEngine. Reduced configs
-run real tokens on CPU; production shapes are exercised (lowered+compiled)
-by the dry-run's decode cells.
+Two engines over the same compiled prefill/decode substrate:
+
+* ``--engine continuous`` (default) — the continuous-batching subsystem:
+  FIFO bucketed scheduler, slot-pooled KV cache, one fused masked decode
+  step; requests from a Poisson-ish arrival trace join and leave mid-flight.
+* ``--engine static`` — the lockstep ``ServeEngine`` baseline: one batch
+  enters and exits together.
+
+Reduced configs run real tokens on CPU; production shapes are exercised
+(lowered+compiled) by the dry-run's decode cells.
 """
 
 from __future__ import annotations
@@ -15,26 +22,16 @@ import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.models import api
-from repro.serve import ServeEngine
+from repro.serve import (
+    ContinuousEngine,
+    ServeEngine,
+    gen_len_spread,
+    poisson_trace,
+)
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=32)
-    ap.add_argument("--temperature", type=float, default=0.0)
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
-
-    cfg = get_config(args.arch)
-    if args.reduced:
-        cfg = cfg.reduced()
-
+def _static(cfg, params, args) -> None:
     key = jax.random.key(args.seed)
-    params = api.init_params(cfg, key)
     batch = {
         "tokens": jax.random.randint(
             key, (args.batch, args.prompt_len), 0, cfg.vocab
@@ -48,7 +45,6 @@ def main() -> None:
         batch["frames"] = jax.random.normal(
             key, (args.batch, cfg.enc_seq, cfg.d_model), jnp.float32
         )
-
     eng = ServeEngine(
         cfg=cfg,
         params=params,
@@ -62,6 +58,67 @@ def main() -> None:
     print(f"[serve] generated {toks.shape} in {dt:.2f}s "
           f"({args.batch * args.gen / dt:.1f} tok/s)")
     print("[serve] first sequence:", toks[0].tolist())
+
+
+def _continuous(cfg, params, args) -> None:
+    gens = gen_len_spread(args.gen)
+    trace = poisson_trace(
+        args.n_requests, seed=args.seed, vocab=cfg.vocab,
+        prompt_lens=(args.prompt_len // 4 or 1, args.prompt_len // 2 or 1,
+                     args.prompt_len),
+        gen_lens=gens, mean_interarrival=args.rate,
+    )
+    eng = ContinuousEngine(
+        cfg=cfg,
+        params=params,
+        n_slots=args.slots,
+        max_len=args.prompt_len + args.gen,
+        cache_dtype=jnp.float32 if cfg.param_dtype == "float32" else jnp.bfloat16,
+        temperature=args.temperature,
+    )
+    report = eng.timed_serve(trace, key=jax.random.key(args.seed))
+    print(f"[serve] {len(trace)} requests, {report.generated_tokens} tokens "
+          f"in {report.wall_time_s:.2f}s ({report.tokens_per_sec:.1f} tok/s)")
+    print(f"[serve] decode steps {report.decode_steps}, prefill batches "
+          f"{report.prefill_batches}, mean slot occupancy "
+          f"{report.mean_occupancy:.3f}")
+    first = trace[0]
+    print(f"[serve] first request ({len(first.prompt)} prompt tokens):",
+          report.outputs[first.rid])
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--engine", choices=("continuous", "static"),
+                    default="continuous")
+    ap.add_argument("--batch", type=int, default=4,
+                    help="static engine: lockstep batch size")
+    ap.add_argument("--slots", type=int, default=4,
+                    help="continuous engine: decode slot pool size")
+    ap.add_argument("--n-requests", type=int, default=12,
+                    help="continuous engine: trace length")
+    ap.add_argument("--rate", type=float, default=2.0,
+                    help="continuous engine: mean interarrival (decode steps)")
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+
+    params = api.init_params(cfg, jax.random.key(args.seed))
+    if args.engine == "static" or cfg.family in ("audio", "vlm"):
+        if args.engine == "continuous":
+            print(f"[serve] {cfg.family} family: falling back to the static "
+                  f"lockstep engine")
+        _static(cfg, params, args)
+    else:
+        _continuous(cfg, params, args)
 
 
 if __name__ == "__main__":

@@ -23,12 +23,15 @@ from repro.configs.base import ArchConfig
 from . import encdec as encdec_mod
 from . import transformer as tf_mod
 from . import vlm as vlm_mod
+from .attention import KVCache
 
 __all__ = [
     "init_params",
     "loss_fn",
     "prefill",
+    "prefill_bucketed",
     "decode",
+    "decode_at",
     "init_state",
     "param_count",
     "active_param_count",
@@ -115,6 +118,83 @@ def decode(
     )
     logits = tf_mod.lm_logits(params, hidden, cfg)[:, 0]
     return logits, caches
+
+
+def prefill_bucketed(
+    cfg: ArchConfig,
+    params,
+    tokens: jax.Array,
+    lengths: jax.Array,
+    cache_dtype=jnp.bfloat16,
+) -> Tuple[jax.Array, Any]:
+    """Prefill a right-padded prompt bucket: tokens [B, Lb], lengths [B].
+
+    Rows shorter than the bucket are right-padded; causal attention makes the
+    pad positions invisible to every real token, so the returned logits — read
+    at each row's ``lengths[b] - 1`` — are exactly the unpadded prefill
+    logits. The returned caches span the bucket length ``Lb`` (pad K/V beyond
+    a row's length is masked out by the per-slot decode mask downstream).
+
+    Token-prompt LM families only (audio needs encoder frames, vlm needs
+    image embeddings). Padding flows *through* recurrent state (mamba/
+    xlstm), so the serving scheduler uses exact-length buckets there.
+    """
+    if cfg.family in ("audio", "vlm"):
+        raise NotImplementedError(
+            f"bucketed prefill: token-prompt LM families only, not {cfg.family}"
+        )
+    b, lb = tokens.shape
+    caches = tf_mod.init_caches(cfg, b, lb, cache_dtype)
+    hidden, caches, _ = tf_mod.lm_forward(
+        params, tokens, cfg, mode="prefill", caches=caches
+    )
+    last = hidden[jnp.arange(b), lengths.astype(jnp.int32) - 1]
+    logits = tf_mod.lm_logits(params, last[:, None], cfg)[:, 0]
+    return logits, caches
+
+
+def decode_at(
+    cfg: ArchConfig, params, token: jax.Array, caches, pos: jax.Array
+) -> Tuple[jax.Array, Any]:
+    """Slot-indexed decode step: per-row positions. token [B,1], pos [B].
+
+    Row ``b`` appends its K/V at ``pos[b]`` and attends over its own history
+    (``kp <= pos[b]``) — the entry point the continuous-batching pool drives,
+    where each batch lane is an independently-positioned request slot. ``pos``
+    is the source of truth: per-layer cache fill counters are overwritten from
+    it, so a pool whose slots were joined/recycled by scatter stays coherent
+    without per-layer bookkeeping.
+    """
+    if cfg.family == "audio":
+        raise NotImplementedError(
+            "slot-indexed decode: decoder-only LM families only"
+        )
+    pos = pos.astype(jnp.int32)
+    caches = _with_slot_lengths(caches, pos)
+    hidden, caches, _ = tf_mod.lm_forward(
+        params, token, cfg, mode="decode", caches=caches,
+        positions=pos[:, None],
+    )
+    logits = tf_mod.lm_logits(params, hidden, cfg)[:, 0]
+    return logits, caches
+
+
+def _with_slot_lengths(caches, pos: jax.Array):
+    """Reset every stacked KVCache fill counter to the per-slot positions."""
+    out = []
+    for c in caches:
+        if isinstance(c, KVCache):
+            n_periods = c.k.shape[0]
+            out.append(
+                c._replace(
+                    length=jnp.broadcast_to(
+                        pos[None], (n_periods,) + pos.shape
+                    )
+                )
+            )
+        else:
+            out.append(c)
+    return tuple(out)
 
 
 def param_count(cfg: ArchConfig) -> int:

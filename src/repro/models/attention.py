@@ -40,7 +40,12 @@ NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
 
 
 class KVCache(NamedTuple):
-    """Decode-time cache. k/v: [B, S_max, H_kv * D]; length: [] current fill.
+    """Decode-time cache. k/v: [B, S_max, H_kv * D]; length: current fill.
+
+    ``length`` is a scalar when every row advances in lockstep (the static
+    ``ServeEngine`` path) or an int32 ``[B]`` vector when rows are
+    independently-positioned slots of the continuous-batching pool — each
+    row then appends at its own ``length[b]`` and masks its own history.
 
     The head dim is stored FUSED: ``H_kv * D`` always divides the 16-way
     model axis (individual head counts often don't), and the fused layout is
@@ -50,7 +55,7 @@ class KVCache(NamedTuple):
 
     k: jax.Array
     v: jax.Array
-    length: jax.Array  # scalar int32
+    length: jax.Array  # int32: [] lockstep, or [B] per-slot
 
     @staticmethod
     def zeros(batch: int, max_len: int, n_kv: int, head_dim: int, dtype):
@@ -245,10 +250,11 @@ def decode_attention(
     if attn_softcap is not None:
         s = attn_softcap * jnp.tanh(s / attn_softcap)
     kp = jnp.arange(t)
-    valid = kp < cache.length
+    ln = cache.length.reshape(-1)  # [] -> [1] (lockstep) or [B] (per-slot)
+    valid = kp[None, :] < ln[:, None]
     if window is not None:
-        valid &= kp > cache.length - 1 - window
-    s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+        valid &= kp[None, :] > ln[:, None] - 1 - window
+    s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     # bf16 x bf16 -> f32 accumulate (widening MAC); no f32 cache copy.
     o = jnp.einsum(
@@ -303,11 +309,25 @@ def attention_apply(
         idx = cache.length
         kf = k.reshape(b, 1, n_kv * head_dim).astype(cache.k.dtype)
         vf = v.reshape(b, 1, n_kv * head_dim).astype(cache.v.dtype)
-        new_cache = KVCache(
-            k=jax.lax.dynamic_update_slice_in_dim(cache.k, kf, idx, axis=1),
-            v=jax.lax.dynamic_update_slice_in_dim(cache.v, vf, idx, axis=1),
-            length=cache.length + 1,
-        )
+        if idx.ndim:
+            # Per-slot positions (continuous batching): each row writes at
+            # its own fill point. Positions stay < S_max in practice (a
+            # retired lane freezes at a valid position and its dead writes
+            # are masked, then overwritten by the next join); mode="drop" is
+            # defense-in-depth so an out-of-range position could never
+            # clobber position 0.
+            rows = jnp.arange(b)
+            new_cache = KVCache(
+                k=cache.k.at[rows, idx].set(kf[:, 0], mode="drop"),
+                v=cache.v.at[rows, idx].set(vf[:, 0], mode="drop"),
+                length=idx + 1,
+            )
+        else:
+            new_cache = KVCache(
+                k=jax.lax.dynamic_update_slice_in_dim(cache.k, kf, idx, axis=1),
+                v=jax.lax.dynamic_update_slice_in_dim(cache.v, vf, idx, axis=1),
+                length=cache.length + 1,
+            )
         o = decode_attention(
             q, new_cache, n_kv=n_kv, window=window, attn_softcap=attn_softcap
         )

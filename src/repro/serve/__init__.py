@@ -1,3 +1,36 @@
-"""Serving substrate: batched prefill/decode engine."""
+"""Serving subsystem: static lockstep engine + continuous-batching engine.
+
+* :class:`ServeEngine` — the simple path: one batch enters and exits
+  together (lockstep prefill + decode). Also the audio/VLM entry point.
+* :class:`ContinuousEngine` — the production path: a slot-pooled KV cache
+  (:class:`SlotPool`), a FIFO bucketed-admission :class:`Scheduler`, and one
+  fused masked decode step that requests join and leave mid-flight without
+  recompiling.
+"""
+from .cache import SlotPool, init_slot_caches, scatter_slots
+from .continuous import ContinuousEngine, ServingReport
 from .engine import ServeEngine, sample_token
-__all__ = ["ServeEngine", "sample_token"]
+from .scheduler import (
+    Request,
+    RequestState,
+    Scheduler,
+    bucket_length,
+    gen_len_spread,
+    poisson_trace,
+)
+
+__all__ = [
+    "ServeEngine",
+    "ContinuousEngine",
+    "ServingReport",
+    "SlotPool",
+    "init_slot_caches",
+    "scatter_slots",
+    "Scheduler",
+    "Request",
+    "RequestState",
+    "bucket_length",
+    "gen_len_spread",
+    "poisson_trace",
+    "sample_token",
+]

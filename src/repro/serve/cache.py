@@ -1,0 +1,184 @@
+"""Slot-pooled KV cache manager for continuous batching.
+
+The pool owns one set of decode buffers sized ``[n_slots, max_len]``
+(``models.api.init_state``) for the whole engine lifetime. Each serving
+request leases a *slot* — one batch lane of every cache buffer — for exactly
+as long as it is live:
+
+* **join**: a freshly prefilled request's caches (sized to its prompt
+  bucket) are scattered into its slot rows with one fused jit'd gather/
+  scatter (:func:`scatter_slots`); nothing else in the pool moves.
+* **decode**: every slot advances through ``models.api.decode_at`` with its
+  own position — per-slot fill counters mean a retiring request never
+  touches its neighbours.
+* **release**: freeing a slot is pure host bookkeeping (the lane's stale
+  K/V is dead weight masked off by the per-slot length mask until the next
+  join overwrites it) — zero device work.
+
+This is the serving analogue of the paper's output-stationary accumulator
+management: state stays resident where it is used, and only the minimal
+panel (one request's rows) streams in or out on a lifecycle event.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import api as model_api
+from repro.models.attention import KVCache
+
+__all__ = ["SlotPool", "init_slot_caches", "scatter_slots"]
+
+
+def init_slot_caches(cfg: ArchConfig, n_slots: int, max_len: int, dtype):
+    """Pool-shaped decode caches: per-slot fill counters from step zero.
+
+    Like ``api.init_state`` but (a) every stacked ``KVCache`` carries an
+    int32 ``[n_periods, n_slots]`` length vector instead of a scalar, and
+    (b) cache-less pattern positions hold the zero-size placeholder array the
+    layer-scan threads through — so the pytree structure (and therefore the
+    compiled decode step) is identical on step 1 and step 10 000.
+    """
+    caches = model_api.init_state(cfg, n_slots, max_len, dtype)
+    out = []
+    for c in caches:
+        if c is None:
+            out.append(jnp.zeros((cfg.n_periods, 0), jnp.float32))
+        elif isinstance(c, KVCache):
+            out.append(
+                c._replace(
+                    length=jnp.zeros((c.k.shape[0], n_slots), jnp.int32)
+                )
+            )
+        else:
+            out.append(c)
+    return tuple(out)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def scatter_slots(pool_caches, prefill_caches, slots: jax.Array):
+    """Scatter prefilled request state into pool slots. slots: [Bb] int32.
+
+    KV buffers copy only the prompt span ``[:, slots, :Lb]`` (the rest of the
+    lane stays dead until the length mask exposes it); recurrent states
+    (mamba conv/ssm, xlstm) copy their whole slot row. Prefill batches padded
+    up to a compile-friendly row count pass an out-of-range slot index for
+    the filler rows — those writes drop.
+    """
+    out = []
+    for pc, fc in zip(pool_caches, prefill_caches):
+        if pc is None or fc is None:
+            out.append(pc)
+        elif isinstance(pc, KVCache):
+            lb = fc.k.shape[2]
+            out.append(
+                pc._replace(
+                    k=pc.k.at[:, slots, :lb].set(
+                        fc.k.astype(pc.k.dtype), mode="drop"
+                    ),
+                    v=pc.v.at[:, slots, :lb].set(
+                        fc.v.astype(pc.v.dtype), mode="drop"
+                    ),
+                )
+            )
+        elif isinstance(pc, jax.Array):
+            out.append(pc)  # zero-size placeholder for cache-less layers
+        else:
+            out.append(
+                jax.tree.map(
+                    lambda p, f: p.at[:, slots].set(
+                        f.astype(p.dtype), mode="drop"
+                    ),
+                    pc,
+                    fc,
+                )
+            )
+    return tuple(out)
+
+
+@dataclasses.dataclass
+class SlotPool:
+    """Device caches + host-side slot lease bookkeeping."""
+
+    cfg: ArchConfig
+    n_slots: int
+    max_len: int
+    caches: Any
+    _free: List[int]
+    _owner: Dict[int, Any]  # slot -> request id
+
+    @classmethod
+    def create(
+        cls, cfg: ArchConfig, n_slots: int, max_len: int, dtype=jnp.bfloat16
+    ) -> "SlotPool":
+        return cls(
+            cfg=cfg,
+            n_slots=n_slots,
+            max_len=max_len,
+            caches=init_slot_caches(cfg, n_slots, max_len, dtype),
+            _free=list(range(n_slots)),
+            _owner={},
+        )
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_active(self) -> int:
+        return self.n_slots - len(self._free)
+
+    @property
+    def occupancy(self) -> float:
+        return self.n_active / self.n_slots
+
+    def owner_of(self, slot: int):
+        return self._owner.get(slot)
+
+    def active_slots(self) -> List[int]:
+        return sorted(self._owner)
+
+    def allocate(self, request_ids) -> List[int]:
+        """Lease one slot per request id (lowest-numbered slots first)."""
+        if len(request_ids) > len(self._free):
+            raise RuntimeError(
+                f"requested {len(request_ids)} slots, {len(self._free)} free"
+            )
+        self._free.sort()
+        slots = [self._free.pop(0) for _ in request_ids]
+        for s, rid in zip(slots, request_ids):
+            self._owner[s] = rid
+        return slots
+
+    def release(self, slot: int) -> None:
+        rid = self._owner.pop(slot, None)
+        if rid is None:
+            raise KeyError(f"slot {slot} is not leased")
+        self._free.append(slot)
+
+    def join(self, prefill_caches, slots: List[int]) -> None:
+        """Scatter a prefilled bucket into the leased ``slots`` (device op).
+
+        ``prefill_caches`` may hold more rows than ``slots`` (compile-width
+        padding); filler rows are routed to slot index ``n_slots`` and drop.
+        """
+        n_rows = _n_rows(prefill_caches)
+        idx = list(slots) + [self.n_slots] * (n_rows - len(slots))
+        self.caches = scatter_slots(
+            self.caches, prefill_caches, jnp.asarray(idx, jnp.int32)
+        )
+
+
+def _n_rows(prefill_caches) -> int:
+    for c in prefill_caches:
+        if isinstance(c, KVCache):
+            return c.k.shape[1]
+        if c is not None and not (isinstance(c, jax.Array) and c.size == 0):
+            return jax.tree.leaves(c)[0].shape[1]
+    raise ValueError("prefill caches contain no per-row state")

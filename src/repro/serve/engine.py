@@ -69,12 +69,21 @@ class ServeEngine:
         Returns generated tokens [B, n_tokens].
         """
         key = key if key is not None else jax.random.key(0)
+        sampling = self.temperature > 0
         logits, caches = self._prefill(self.params, batch)
-        tok = sample_token(logits, key, self.temperature)
+        # Split before the first sample: consuming `key` directly and then
+        # re-splitting it for step 0 correlates the first two sampled tokens
+        # at temperature > 0. (Greedy decoding ignores the key entirely.)
+        if sampling:
+            key, sub = jax.random.split(key)
+        else:
+            sub = key
+        tok = sample_token(logits, sub, self.temperature)
         pos = jnp.asarray(batch["tokens"].shape[1], jnp.int32)
         out = [tok]
         for i in range(n_tokens - 1):
-            key, sub = jax.random.split(key)
+            if sampling:
+                key, sub = jax.random.split(key)
             tok, caches = self._decode(self.params, tok, caches, pos + i, sub)
             out.append(tok)
         return jnp.concatenate(out, axis=1)

@@ -1,0 +1,106 @@
+"""Backend registry degradation chain: explicit-request fallback
+``pallas -> pallas_interpret -> xla`` with the RuntimeWarning contract, plus
+``set_default_backend("auto")`` round-trips. Probes are monkeypatched so the
+chain is exercised deterministically regardless of the host platform.
+"""
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops
+from repro.kernels.ref import reference_matmul
+
+
+def _force_unavailable(monkeypatch, *names):
+    for name in names:
+        b = ops._REGISTRY[name]
+        monkeypatch.setitem(
+            ops._REGISTRY, name, dataclasses.replace(b, available=lambda: False)
+        )
+
+
+def _force_available(monkeypatch, name):
+    b = ops._REGISTRY[name]
+    monkeypatch.setitem(
+        ops._REGISTRY, name, dataclasses.replace(b, available=lambda: True)
+    )
+
+
+def test_explicit_pallas_degrades_to_interpreter(monkeypatch):
+    _force_unavailable(monkeypatch, "pallas")
+    with pytest.warns(RuntimeWarning, match="degrading to 'pallas_interpret'"):
+        assert ops.resolve_backend("pallas") == "pallas_interpret"
+
+
+def test_explicit_request_degrades_past_interpreter_to_xla(monkeypatch):
+    _force_unavailable(monkeypatch, "pallas", "pallas_interpret")
+    with pytest.warns(RuntimeWarning, match="degrading to 'xla'"):
+        assert ops.resolve_backend("pallas") == "xla"
+    # a degraded interpreter request also lands on xla
+    with pytest.warns(RuntimeWarning, match="degrading to 'xla'"):
+        assert ops.resolve_backend("pallas_interpret") == "xla"
+
+
+def test_degraded_matmul_still_resolves_and_computes(monkeypatch):
+    _force_unavailable(monkeypatch, "pallas", "pallas_interpret")
+    a = jnp.asarray(np.arange(12, dtype=np.float32).reshape(3, 4))
+    b = jnp.asarray(np.ones((4, 2), np.float32))
+    with pytest.warns(RuntimeWarning):
+        got = ops.matmul(a, b, backend="pallas")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(reference_matmul(a, b)))
+
+
+def test_no_available_backend_raises(monkeypatch):
+    _force_unavailable(monkeypatch, "pallas", "pallas_interpret", "xla")
+    with pytest.raises(RuntimeError, match="no available matmul backend"):
+        ops.resolve_backend("pallas")
+
+
+def test_probe_exceptions_count_as_unavailable(monkeypatch):
+    def boom():
+        raise OSError("probe exploded")
+
+    b = ops._REGISTRY["pallas"]
+    monkeypatch.setitem(
+        ops._REGISTRY, "pallas", dataclasses.replace(b, available=boom)
+    )
+    with pytest.warns(RuntimeWarning):
+        assert ops.resolve_backend("pallas") == "pallas_interpret"
+    assert "pallas" not in ops.available_backends()
+
+
+def test_auto_follows_reregistered_probe(monkeypatch):
+    # "auto" consults the registry probe, so a re-registered pallas backend
+    # brings its own availability rule.
+    _force_available(monkeypatch, "pallas")
+    assert ops.resolve_backend("auto") == "pallas"
+    _force_unavailable(monkeypatch, "pallas")
+    assert ops.resolve_backend("auto") == "xla"
+
+
+def test_set_default_backend_auto_roundtrip():
+    assert ops.default_backend() in ops.registered_backends()
+    try:
+        ops.set_default_backend("xla")
+        assert ops.default_backend() == "xla"
+        assert ops.resolve_backend(None) == "xla"
+        ops.set_default_backend("auto")
+        # auto resolves to a real backend on every platform
+        assert ops.default_backend() in ("pallas", "xla")
+    finally:
+        ops.set_default_backend("auto")
+
+
+def test_unknown_backend_rejected():
+    with pytest.raises(ValueError, match="unknown matmul backend"):
+        ops.resolve_backend("tpu_v7")
+    with pytest.raises(ValueError, match="unknown matmul backend"):
+        ops.set_default_backend("tpu_v7")
+
+
+def test_register_backend_requires_callable():
+    with pytest.raises(TypeError):
+        ops.register_backend("broken", fn=None)

@@ -69,6 +69,35 @@ def test_gemm_fp8_widening():
     assert _err(got, want) < 0.25  # fp8 quantization noise
 
 
+@pytest.mark.parametrize("m,k,n", [(128, 256, 128), (100, 200, 96)])
+def test_gemm_bias_row_preload(m, k, n):
+    """[N] bias streams as one row per N tile and broadcasts at preload —
+    no [M, N] C operand is ever materialized."""
+    a, b = _rand((m, k), jnp.float32), _rand((k, n), jnp.float32)
+    bias = _rand((n,), jnp.float32)
+    got = opope_gemm(a, b, bias, block_m=64, block_n=128, block_k=128,
+                     interpret=True)
+    want = reference_matmul(a, b, bias)
+    assert _err(got, want) < 1e-4
+
+
+def test_linear_bias_grad_is_column_sum():
+    ops.set_default_backend("pallas_interpret")
+    try:
+        x = _rand((4, 8, 64), jnp.float32)
+        w = _rand((64, 48), jnp.float32)
+        bias = _rand((48,), jnp.float32)
+        f = lambda x, w, b: jnp.sum(ops.linear(x, w, b) ** 2)
+        gx, gw, gb = jax.grad(f, argnums=(0, 1, 2))(x, w, bias)
+        f2 = lambda x, w, b: jnp.sum((jnp.einsum("bsk,kn->bsn", x, w) + b) ** 2)
+        gx2, gw2, gb2 = jax.grad(f2, argnums=(0, 1, 2))(x, w, bias)
+        assert _err(gx, gx2) < 1e-2
+        assert _err(gw, gw2) < 1e-2
+        assert _err(gb, gb2) < 1e-3
+    finally:
+        ops.set_default_backend("auto")
+
+
 def test_ops_linear_bias_via_preload():
     ops.set_default_backend("pallas_interpret")
     try:
