@@ -60,5 +60,12 @@ def bench_kernel() -> List[Row]:
             err = float(jnp.max(jnp.abs(out - want)))
             rows.append((f"kernel/{backend}_us/{m}x{k}x{n}", us,
                          f"{note}; max_err={err:.2e}"))
-            assert err < 1e-3
+            if ops.grad_backend_of(backend) == backend:
+                # fp-contract backends reproduce the reference exactly (up
+                # to reassociation); quantized backends (those with a
+                # separate grad backend) carry int8 resolution error and are
+                # gated by their own benchmark (quant_bench).
+                assert err < 1e-3
+            else:
+                assert err < 0.05 * float(jnp.max(jnp.abs(want)))
     return rows

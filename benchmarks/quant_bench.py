@@ -1,0 +1,322 @@
+"""Mixed-precision benchmark: quantized GEMM backends, precision policy, and
+quantized-KV continuous serving. Emits ``BENCH_quant.json``.
+
+Sections:
+
+* **formats** — quantize/dequantize round-trip error per format (int8,
+  fp8_e4m3, fp8_e5m2) at 1 byte/value.
+* **gemm** — every quantized backend vs the fp32 ``xla`` reference on the
+  same operands: max-abs error, dtype-aware bytes moved
+  (:func:`repro.core.gemm_bytes` — int8 operands count 1 byte, scale
+  sidecars included), achieved arithmetic intensity, wall time.
+* **policy** — the mlp-q8 :class:`PrecisionPolicy` on the trained reduced
+  model: forward loss delta vs the all-fp32 reference (the accuracy price of
+  quantizing exactly the MLP linears).
+* **serving** — the PR 2 serving trace (same seeded generator, arrival
+  pattern, prompt lengths and generation budgets as
+  ``benchmarks/serving_bench.py``) through ``ContinuousEngine`` twice: fp32
+  K/V lanes vs ``kv_format="int8"``. Reports tokens/sec, tokens/step,
+  K/V bytes per slot for both, their ratio, and greedy-token agreement.
+
+**Why the model is trained first:** greedy-token agreement is only a
+meaningful accuracy metric when argmax margins are real. An untrained model
+emits near-uniform logits whose argmax flips under fp32-vs-fp32 reordering
+noise, let alone quantization. The bench therefore fits the reduced model on
+a deterministic cyclic-sequence task (seconds on CPU) and replays the PR 2
+trace with in-distribution prompt values — same trace structure, decisive
+logits — so disagreements measure quantization, not dice rolls.
+
+Run::
+
+    PYTHONPATH=src python benchmarks/quant_bench.py [--smoke] [--out PATH]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Dict, List
+
+
+def trained_model(cfg, *, steps: int, seed: int = 0, seq_len: int = 32):
+    """Fit the reduced model on cyclic sequences t[i] = (a + stride*i) % V.
+
+    ``seq_len`` must cover the positions serving will decode at (a model
+    trained on short sequences extrapolates RoPE positions with low
+    confidence, and argmax agreement degrades for position reasons unrelated
+    to quantization)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.models import api
+    from repro.optim.adamw import AdamWConfig, apply_updates, init_opt_state
+
+    params = api.init_params(cfg, jax.random.key(seed))
+    opt_cfg = AdamWConfig(peak_lr=5e-3, warmup_steps=20, total_steps=steps)
+    opt = init_opt_state(params, opt_cfg)
+
+    @jax.jit
+    def step(params, opt, batch):
+        loss, g = jax.value_and_grad(
+            lambda p: api.loss_fn(cfg, p, batch)
+        )(params)
+        params, opt, _ = apply_updates(params, g, opt, opt_cfg)
+        return params, opt, loss
+
+    def batch(key, b=16, s=seq_len + 1):
+        a = jax.random.randint(key, (b, 1), 0, cfg.vocab)
+        st = jax.random.randint(jax.random.fold_in(key, 1), (b, 1), 1, 5)
+        t = (a + st * jnp.arange(s)[None, :]) % cfg.vocab
+        return {"tokens": t[:, :-1], "labels": t[:, 1:]}
+
+    loss = None
+    for i in range(steps):
+        params, opt, loss = step(params, opt, batch(jax.random.key(100 + i)))
+    return params, float(loss)
+
+
+def cyclic_prompts(trace, vocab: int, seed: int):
+    """Rewrite a trace's prompt VALUES to the trained task's distribution,
+    keeping its structure (rids, arrivals, prompt lengths, budgets)."""
+    import dataclasses
+
+    import numpy as np
+
+    rng = np.random.default_rng(seed)
+    out = []
+    for r in trace:
+        a, s = int(rng.integers(0, vocab)), int(rng.integers(1, 5))
+        out.append(
+            dataclasses.replace(
+                r, prompt=[(a + s * t) % vocab for t in range(len(r.prompt))]
+            )
+        )
+    return out
+
+
+def bench_formats() -> Dict:
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro import quant
+
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((64, 64)), jnp.float32)
+    out = {}
+    for name in sorted(quant.FORMATS):
+        qt = quant.quantize(x, name)
+        err = float(jnp.max(jnp.abs(qt.dequantize() - x)))
+        out[name] = {
+            "roundtrip_max_err": err,
+            "bytes_per_value": jnp.dtype(quant.FORMATS[name].dtype).itemsize,
+        }
+    return out
+
+
+def bench_gemm(smoke: bool) -> List[Dict]:
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import gemm_bytes, gemm_intensity
+    from repro.kernels import ops
+    from repro.kernels.ref import reference_matmul
+
+    shapes = [(128, 256, 128)] if smoke else [(256, 512, 256), (512, 512, 512)]
+    rng = np.random.default_rng(0)
+    rows: List[Dict] = []
+    for m, k, n in shapes:
+        a = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+        b = jnp.asarray(rng.standard_normal((k, n)), jnp.float32)
+        want = jax.jit(lambda a, b: reference_matmul(a, b))(a, b)
+        # pallas_q8 resolves through the registry: compiled on TPU, else its
+        # interpret/xla_q8 degradation chain (with its RuntimeWarning).
+        import warnings
+
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", RuntimeWarning)
+            resolved_pallas_q8 = ops.resolve_backend("pallas_q8")
+        for backend in ["xla", "xla_q8", resolved_pallas_q8]:
+            quantized = backend.endswith("q8") or "q8" in backend
+            fn = jax.jit(
+                lambda a, b, _be=backend: ops.matmul(a, b, backend=_be)
+            )
+            out = fn(a, b)
+            out.block_until_ready()
+            t0 = time.perf_counter()
+            reps = 1 if "interpret" in backend else 5
+            for _ in range(reps):
+                fn(a, b).block_until_ready()
+            us = (time.perf_counter() - t0) / reps * 1e6
+            err = float(jnp.max(jnp.abs(out - want)))
+            bytes_moved = gemm_bytes(
+                m, k, n,
+                a_dtype=jnp.int8 if quantized else a.dtype,
+                b_dtype=jnp.int8 if quantized else b.dtype,
+                out_dtype=a.dtype,
+                scale_elems=(m + n) if quantized else 0,
+            )
+            rows.append(
+                {
+                    "backend": backend,
+                    "m": m, "k": k, "n": n,
+                    "max_abs_err_vs_fp32": err,
+                    "bytes_moved": bytes_moved,
+                    "intensity_flops_per_byte": gemm_intensity(
+                        m, k, n,
+                        a_dtype=jnp.int8 if quantized else a.dtype,
+                        b_dtype=jnp.int8 if quantized else b.dtype,
+                        out_dtype=a.dtype,
+                        scale_elems=(m + n) if quantized else 0,
+                    ),
+                    "wall_us": us,
+                }
+            )
+    return rows
+
+
+def bench_policy(cfg, params) -> Dict:
+    import jax.numpy as jnp
+
+    from repro.models import api
+    from repro.quant import mlp_q8_policy
+
+    pol = mlp_q8_policy()
+    t = (7 + 3 * jnp.arange(33)[None, :]) % cfg.vocab
+    batch = {
+        "tokens": jnp.broadcast_to(t[:, :-1], (4, 32)).astype(jnp.int32),
+        "labels": jnp.broadcast_to(t[:, 1:], (4, 32)).astype(jnp.int32),
+    }
+    l_fp = float(api.loss_fn(cfg, params, batch))
+    l_q = float(api.loss_fn(cfg, params, batch, backend=pol))
+    return {
+        "policy": pol.describe(),
+        "loss_fp32": l_fp,
+        "loss_quant": l_q,
+        "loss_abs_delta": abs(l_fp - l_q),
+    }
+
+
+def bench_serving(cfg, params, *, smoke: bool, seed: int, kv_format: str) -> Dict:
+    import jax.numpy as jnp
+
+    from repro.serve import ContinuousEngine, poisson_trace
+
+    if smoke:
+        n_requests, n_slots, max_len = 8, 2, 80
+        prompt_lens, gen_lens = (6, 12, 17), (4, 16, 48)
+    else:
+        n_requests, n_slots, max_len = 16, 4, 160
+        prompt_lens, gen_lens = (6, 12, 17, 24, 32), (8, 24, 64, 96)
+    # The PR 2 trace (same generator/seed/parameters as serving_bench), with
+    # prompt values rewritten into the trained task's distribution.
+    trace = poisson_trace(
+        n_requests, seed=seed, vocab=cfg.vocab,
+        prompt_lens=prompt_lens, gen_lens=gen_lens,
+    )
+    trace = cyclic_prompts(trace, cfg.vocab, seed)
+
+    common = dict(
+        cfg=cfg, params=params, n_slots=n_slots, max_len=max_len,
+        cache_dtype=jnp.float32,
+    )
+    eng_fp = ContinuousEngine(**common)
+    eng_q = ContinuousEngine(**common, kv_format=kv_format)
+    # Warmup absorbs compiles so wall-clock measures steady-state serving.
+    eng_fp.serve(trace)
+    eng_q.serve(trace)
+    rep_fp = eng_fp.timed_serve(trace)
+    rep_q = eng_q.timed_serve(trace)
+
+    agree = total = 0
+    for rid in rep_fp.outputs:
+        a, b = rep_fp.outputs[rid], rep_q.outputs[rid]
+        total += len(a)
+        agree += sum(1 for x, y in zip(a, b) if x == y)
+
+    def row(rep):
+        return {
+            "useful_tokens": rep.generated_tokens,
+            "decode_steps": rep.decode_steps,
+            "tokens_per_sec": rep.tokens_per_sec,
+            "tokens_per_step": rep.tokens_per_step,
+            "mean_occupancy": rep.mean_occupancy,
+            "kv_bytes_per_slot": rep.kv_bytes_per_slot,
+        }
+
+    return {
+        "kv_format": kv_format,
+        "n_requests": n_requests,
+        "n_slots": n_slots,
+        "max_len": max_len,
+        "fp32": row(rep_fp),
+        "quant": row(rep_q),
+        "kv_bytes_ratio": rep_fp.kv_bytes_per_slot / rep_q.kv_bytes_per_slot,
+        "greedy_agreement": agree / total if total else 0.0,
+        "compared_tokens": total,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="chatglm3-6b")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--kv-format", default="int8")
+    ap.add_argument("--train-steps", type=int, default=300)
+    ap.add_argument("--out", default="BENCH_quant.json")
+    ap.add_argument("--smoke", action="store_true",
+                    help="small trace for CI (still asserts the targets)")
+    args = ap.parse_args()
+
+    from repro.configs import get_config
+
+    cfg = get_config(args.arch).reduced()
+    max_len = 80 if args.smoke else 160
+    params, final_loss = trained_model(
+        cfg, steps=args.train_steps, seed=args.seed, seq_len=max_len
+    )
+
+    result = {
+        "arch": cfg.name,
+        "seed": args.seed,
+        "smoke": args.smoke,
+        "train_steps": args.train_steps,
+        "final_train_loss": final_loss,
+        "formats": bench_formats(),
+        "gemm": bench_gemm(args.smoke),
+        "policy": bench_policy(cfg, params),
+        "serving": bench_serving(
+            cfg, params, smoke=args.smoke, seed=args.seed,
+            kv_format=args.kv_format,
+        ),
+    }
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=2)
+
+    s = result["serving"]
+    print(f"[quant_bench] {cfg.name}: trained {args.train_steps} steps "
+          f"(loss {final_loss:.3f})")
+    for row in result["gemm"]:
+        print(f"  gemm {row['backend']:<20} {row['m']}x{row['k']}x{row['n']} "
+              f"err={row['max_abs_err_vs_fp32']:.2e} "
+              f"bytes={row['bytes_moved']:.3e} "
+              f"AI={row['intensity_flops_per_byte']:.1f} fl/B")
+    print(f"  policy loss delta: {result['policy']['loss_abs_delta']:.2e}")
+    print(f"  serving kv bytes/slot: fp32 {s['fp32']['kv_bytes_per_slot']:.0f} "
+          f"-> {s['kv_format']} {s['quant']['kv_bytes_per_slot']:.0f} "
+          f"({s['kv_bytes_ratio']:.2f}x smaller)")
+    print(f"  greedy agreement: {s['greedy_agreement']:.4f} "
+          f"over {s['compared_tokens']} tokens -> {args.out}")
+    if s["kv_bytes_ratio"] < 3.5:
+        raise SystemExit(
+            f"K/V bytes-per-slot ratio {s['kv_bytes_ratio']:.2f} < 3.5"
+        )
+    if s["greedy_agreement"] < 0.99:
+        raise SystemExit(
+            f"greedy-token agreement {s['greedy_agreement']:.4f} < 0.99"
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -17,7 +17,17 @@ from .engine import (
 )
 from .dataflows import ACCELERATORS, AcceleratorModel
 from .tiling import ClusterConfig, TilingPlan, choose_tile, tiled_gemm_cycles
-from .roofline import TPU_V5E, HardwareSpec, RooflineTerms, roofline_terms, model_flops
+from .roofline import (
+    TPU_V5E,
+    HardwareSpec,
+    RooflineTerms,
+    dtype_width,
+    gemm_bytes,
+    gemm_intensity,
+    model_flops,
+    roofline_terms,
+    tensor_bytes,
+)
 from .hlo_analysis import CollectiveStats, collective_bytes, parse_hlo_collectives
 
 __all__ = [
@@ -37,6 +47,10 @@ __all__ = [
     "RooflineTerms",
     "roofline_terms",
     "model_flops",
+    "dtype_width",
+    "tensor_bytes",
+    "gemm_bytes",
+    "gemm_intensity",
     "CollectiveStats",
     "collective_bytes",
     "parse_hlo_collectives",

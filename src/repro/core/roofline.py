@@ -26,6 +26,10 @@ __all__ = [
     "RooflineTerms",
     "roofline_terms",
     "model_flops",
+    "dtype_width",
+    "tensor_bytes",
+    "gemm_bytes",
+    "gemm_intensity",
 ]
 
 
@@ -124,6 +128,86 @@ def roofline_terms(
         hw=hw,
         model_flops_per_device=model_per_dev,
     )
+
+
+# ---------------------------------------------------------------------------
+# Dtype-aware byte accounting
+# ---------------------------------------------------------------------------
+#
+# Every byte term derives its operand width from the ACTUAL dtype — never an
+# assumed 4-byte word. With the mixed-precision subsystem a GEMM can stream
+# int8 A/B panels against an fp32 C and a bf16 output in one call; assuming
+# one width would overstate quantized traffic ~4x and make the reported
+# arithmetic intensity (and therefore the memory roofline term) meaningless.
+
+# Widths for string dtype names that numpy may not know without ml_dtypes.
+_NAMED_WIDTHS = {
+    "int8": 1, "uint8": 1, "bool": 1,
+    "float8_e4m3fn": 1, "float8_e5m2": 1, "float8_e4m3": 1,
+    "float8_e4m3fnuz": 1, "float8_e5m2fnuz": 1,
+    "bfloat16": 2, "float16": 2, "int16": 2, "uint16": 2,
+    "float32": 4, "int32": 4, "uint32": 4,
+    "float64": 8, "int64": 8, "uint64": 8,
+}
+
+
+def dtype_width(dtype) -> int:
+    """Bytes per element of ``dtype`` (a dtype object, array dtype, or name)."""
+    itemsize = getattr(dtype, "itemsize", None)
+    if itemsize:
+        return int(itemsize)
+    name = str(getattr(dtype, "name", dtype))
+    if name in _NAMED_WIDTHS:
+        return _NAMED_WIDTHS[name]
+    import numpy as np
+
+    return int(np.dtype(dtype).itemsize)
+
+
+def tensor_bytes(*arrays) -> int:
+    """Total bytes of arrays (or ShapeDtypeStructs) at their ACTUAL dtypes."""
+    total = 0
+    for a in arrays:
+        if a is None:
+            continue
+        size = getattr(a, "size", None)
+        if size is None:
+            size = 1
+            for d in a.shape:
+                size *= d
+        total += int(size) * dtype_width(a.dtype)
+    return total
+
+
+def gemm_bytes(
+    m: int,
+    k: int,
+    n: int,
+    *,
+    a_dtype,
+    b_dtype=None,
+    out_dtype=None,
+    c_dtype=None,
+    scale_elems: int = 0,
+) -> int:
+    """Minimal HBM traffic of one ``[M,K] @ [K,N] (+C) -> [M,N]`` GEMM:
+    each operand read once, the output written once, each at its own width.
+
+    ``scale_elems`` adds fp32 side-band elements (quantization scales —
+    ``M + N`` for the per-row/per-channel q8 backends).
+    """
+    a_w = dtype_width(a_dtype)
+    b_w = dtype_width(b_dtype if b_dtype is not None else a_dtype)
+    o_w = dtype_width(out_dtype if out_dtype is not None else a_dtype)
+    total = m * k * a_w + k * n * b_w + m * n * o_w
+    if c_dtype is not None:
+        total += m * n * dtype_width(c_dtype)
+    return total + 4 * scale_elems
+
+
+def gemm_intensity(m: int, k: int, n: int, **dtype_kw) -> float:
+    """Arithmetic intensity (FLOPs/byte) of the GEMM at honest widths."""
+    return (2.0 * m * k * n) / gemm_bytes(m, k, n, **dtype_kw)
 
 
 def model_flops(

@@ -14,17 +14,30 @@ gates selection). The default ``"auto"`` resolver probes whether the
 compiled Pallas path actually lowers on the current platform — once, lazily,
 cached — so model code is backend-agnostic and a platform where Mosaic is
 absent degrades to ``xla`` instead of raising at the first layer. An
-explicitly requested backend that is unavailable likewise degrades (to
-``pallas_interpret`` then ``xla``, with a warning) rather than raising.
+explicitly requested backend that is unavailable likewise degrades along its
+*fallback chain* (default ``pallas_interpret`` then ``xla``; a registered
+backend may declare its own chain — the quantized backends fall back to
+``xla_q8`` so degradation preserves quantized numerics) rather than raising.
+
+Quantized backends (``xla_q8``, ``pallas_q8`` — see :mod:`repro.quant`)
+register themselves on first use: an unknown backend name triggers one lazy
+``import repro.quant`` before resolution fails, so callers never import the
+quant package explicitly just to name its backends.
 
 The pallas backends pick block shapes through a per-``(M, N, K, dtype)``
 memoized tile selection (`opope_gemm.default_block_shape` — the VMEM-budget
 analogue of the paper's tile quantization rule), so repeated layer shapes pay
-the selection cost once.
+the selection cost once. The memo is LRU-bounded (``_TILE_CACHE_CAP``): a
+long-lived serving process that sees an unbounded stream of request shapes
+must not grow it without limit.
 
 A ``custom_vjp`` makes the backward pass run the same O-POPE dataflow (two
 more GEMMs: dA = dO @ B^T, dB = A^T @ dO) instead of whatever XLA would pick
-for the transposed dots.
+for the transposed dots. A backend registered with ``grad_backend=`` runs
+its backward GEMMs on that backend instead — how the quantized paths encode
+the paper's "accuracy-sensitive tasks such as training still require
+higher-precision floating-point formats": forward may be q8, gradients are
+always full-precision fp32-accumulated.
 """
 
 from __future__ import annotations
@@ -49,6 +62,9 @@ __all__ = [
     "resolve_backend",
     "available_backends",
     "registered_backends",
+    "grad_backend_of",
+    "tile_cache_info",
+    "clear_tile_cache",
 ]
 
 _DEFAULT_BACKEND = "auto"
@@ -67,11 +83,19 @@ class _Backend:
     name: str
     fn: BackendFn
     available: Callable[[], bool]
+    # Degradation order when this backend's probe fails (None = the default
+    # chain). Quantized backends fall back to other *quantized* backends so
+    # an unavailable accelerator path degrades without changing numerics.
+    fallback: Optional[Tuple[str, ...]] = None
+    # Backend for the custom_vjp backward GEMMs (None = same as forward).
+    # Quantized backends set a full-precision grad backend — the paper's
+    # "training still needs FP" rule, enforced at the registry.
+    grad_backend: Optional[str] = None
 
 
 _REGISTRY: Dict[str, _Backend] = {}
-# Degradation order when a requested backend's availability probe fails:
-# prefer the semantics-preserving interpreter, then the XLA reference.
+# Default degradation order when a requested backend's availability probe
+# fails: prefer the semantics-preserving interpreter, then the XLA reference.
 _FALLBACK_CHAIN = ("pallas_interpret", "xla")
 
 
@@ -80,16 +104,24 @@ def register_backend(
     fn: BackendFn,
     *,
     available: Union[bool, Callable[[], bool]] = True,
+    fallback: Optional[Tuple[str, ...]] = None,
+    grad_backend: Optional[str] = None,
 ) -> None:
     """Register (or replace) a matmul backend.
 
     ``available`` is either a bool or a zero-arg probe evaluated lazily at
     resolution time (never at import — see :func:`_pallas_compiles`).
+    ``fallback`` overrides the default degradation chain for this backend;
+    ``grad_backend`` names the backend the custom_vjp backward GEMMs run on
+    (quantized backends point it at a full-precision path).
     """
     if not callable(fn):
         raise TypeError(f"backend fn for {name!r} is not callable")
     probe = available if callable(available) else (lambda _a=bool(available): _a)
-    _REGISTRY[name] = _Backend(name, fn, probe)
+    _REGISTRY[name] = _Backend(
+        name, fn, probe, fallback=tuple(fallback) if fallback else None,
+        grad_backend=grad_backend,
+    )
 
 
 def registered_backends() -> List[str]:
@@ -127,10 +159,26 @@ def _pallas_compiles() -> bool:
         return False
 
 
-@functools.lru_cache(maxsize=4096)
+# Cap on the per-(M, N, K, dtype) tile-selection memo. A training run sees a
+# handful of layer shapes, but a long-lived serving process sees an unbounded
+# stream of (prompt-bucket x layer) shapes; LRU eviction keeps the memo from
+# growing without limit while still making repeated shapes free.
+_TILE_CACHE_CAP = 512
+
+
+@functools.lru_cache(maxsize=_TILE_CACHE_CAP)
 def _tile_for(m: int, k: int, n: int, itemsize: int) -> Tuple[int, int, int]:
-    """Memoized per-(M, N, K, dtype) block-shape selection."""
+    """Memoized (LRU-bounded) per-(M, N, K, dtype) block-shape selection."""
     return _kern.default_block_shape(m, k, n, elem_bytes=itemsize)
+
+
+def tile_cache_info():
+    """CacheInfo for the tile-selection memo (currsize never exceeds the cap)."""
+    return _tile_for.cache_info()
+
+
+def clear_tile_cache() -> None:
+    _tile_for.cache_clear()
 
 
 def _pallas_fn(interpret: bool) -> BackendFn:
@@ -156,12 +204,28 @@ register_backend("pallas_interpret", _pallas_fn(interpret=True))
 register_backend("xla", _xla_fn)
 
 
+@functools.lru_cache(maxsize=None)
+def _load_plugin_backends() -> None:
+    """One-shot lazy import of packages that register extra backends.
+
+    Resolving ``xla_q8``/``pallas_q8`` must not require callers to import
+    :mod:`repro.quant` themselves; ``kernels`` must also not import ``quant``
+    at module load (quant builds *on* the kernel layer). So the first
+    resolution of an unknown name triggers the import here, once.
+    """
+    try:
+        import repro.quant  # noqa: F401  (registers its backends on import)
+    except ImportError:
+        pass
+
+
 def resolve_backend(name: Optional[str] = None) -> str:
     """Resolve a backend request to the name of an available backend.
 
     ``None`` means the process default; ``"auto"`` picks ``pallas`` when the
     compiled path lowers here, else ``xla``. An unavailable explicit request
-    degrades along ``pallas_interpret`` -> ``xla`` with a warning.
+    degrades along the backend's fallback chain (default
+    ``pallas_interpret`` -> ``xla``) with a warning.
     """
     name = name or _DEFAULT_BACKEND
     if name == "auto":
@@ -170,13 +234,17 @@ def resolve_backend(name: Optional[str] = None) -> str:
         return "pallas" if _probe_ok(_REGISTRY["pallas"]) else "xla"
     backend = _REGISTRY.get(name)
     if backend is None:
+        _load_plugin_backends()
+        backend = _REGISTRY.get(name)
+    if backend is None:
         raise ValueError(
             f"unknown matmul backend {name!r}; registered: {registered_backends()}"
         )
     if _probe_ok(backend):
         return name
-    for fallback in _FALLBACK_CHAIN:
-        if fallback != name and _probe_ok(_REGISTRY[fallback]):
+    for fallback in backend.fallback or _FALLBACK_CHAIN:
+        fb = _REGISTRY.get(fallback)
+        if fallback != name and fb is not None and _probe_ok(fb):
             warnings.warn(
                 f"matmul backend {name!r} unavailable on this platform; "
                 f"degrading to {fallback!r}",
@@ -187,6 +255,12 @@ def resolve_backend(name: Optional[str] = None) -> str:
     raise RuntimeError(f"no available matmul backend (requested {name!r})")
 
 
+def grad_backend_of(name: str) -> str:
+    """Backend the backward GEMMs of ``name`` run on (itself by default)."""
+    b = _REGISTRY.get(name)
+    return b.grad_backend if b is not None and b.grad_backend else name
+
+
 def default_backend() -> str:
     return resolve_backend(None)
 
@@ -194,6 +268,8 @@ def default_backend() -> str:
 def set_default_backend(name: str) -> None:
     """Override backend globally (any registered name, or 'auto')."""
     global _DEFAULT_BACKEND
+    if name != "auto" and name not in _REGISTRY:
+        _load_plugin_backends()
     if name != "auto" and name not in _REGISTRY:
         raise ValueError(
             f"unknown matmul backend {name!r}; registered: {registered_backends()}"
@@ -228,7 +304,10 @@ def _matmul_fwd(a, b, c, backend, out_dtype):
 def _matmul_bwd(backend, out_dtype, res, g):
     a, b = res
     # Backward = two more O-POPE GEMMs in the same dataflow; gradients are
-    # accumulated in fp32 and cast back to the operand dtypes.
+    # accumulated in fp32 and cast back to the operand dtypes. Quantized
+    # forwards run their backward on their registered full-precision
+    # grad_backend (gradients always stay FP).
+    backend = grad_backend_of(backend)
     da = _matmul_impl(g, b.T, None, backend, a.dtype)
     db = _matmul_impl(a.T, g, None, backend, b.dtype)
     dc = g  # c enters the accumulator linearly
@@ -281,6 +360,7 @@ def _matmul_nc_fwd(a, b, backend, out_dtype):
 
 def _matmul_nc_bwd(backend, out_dtype, res, g):
     a, b = res
+    backend = grad_backend_of(backend)
     da = _matmul_impl(g, b.T, None, backend, a.dtype)
     db = _matmul_impl(a.T, g, None, backend, b.dtype)
     return da, db
@@ -300,6 +380,7 @@ def _matmul_bias_fwd(a, b, bias, backend, out_dtype):
 
 def _matmul_bias_bwd(backend, out_dtype, res, g):
     a, b = res
+    backend = grad_backend_of(backend)
     da = _matmul_impl(g, b.T, None, backend, a.dtype)
     db = _matmul_impl(a.T, g, None, backend, b.dtype)
     dbias = g.sum(axis=0)  # the bias row enters every accumulator row once

@@ -75,6 +75,7 @@ def _continuous(cfg, params, args) -> None:
         max_len=args.prompt_len + args.gen,
         cache_dtype=jnp.float32 if cfg.param_dtype == "float32" else jnp.bfloat16,
         temperature=args.temperature,
+        kv_format=args.kv_format,
     )
     report = eng.timed_serve(trace, key=jax.random.key(args.seed))
     print(f"[serve] {len(trace)} requests, {report.generated_tokens} tokens "
@@ -82,6 +83,10 @@ def _continuous(cfg, params, args) -> None:
     print(f"[serve] decode steps {report.decode_steps}, prefill batches "
           f"{report.prefill_batches}, mean slot occupancy "
           f"{report.mean_occupancy:.3f}")
+    if report.kv_bytes_per_slot:
+        fmt = args.kv_format or "full-width"
+        print(f"[serve] KV cache ({fmt}): "
+              f"{report.kv_bytes_per_slot / 1e3:.1f} kB/slot")
     first = trace[0]
     print(f"[serve] first request ({len(first.prompt)} prompt tokens):",
           report.outputs[first.rid])
@@ -104,6 +109,10 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--kv-format", default=None,
+                    choices=(None, "int8", "fp8_e4m3", "fp8_e5m2"),
+                    help="continuous engine: narrow K/V lanes (~4x less "
+                    "cache memory per slot)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 

@@ -46,16 +46,26 @@ def init_params(cfg: ArchConfig, key: jax.Array):
     return tf_mod.init_lm_params(cfg, key)
 
 
-def loss_fn(cfg: ArchConfig, params, batch: Dict[str, jax.Array]) -> jax.Array:
+def loss_fn(
+    cfg: ArchConfig, params, batch: Dict[str, jax.Array], *, backend=None
+) -> jax.Array:
+    """Training loss. ``backend`` is a matmul backend name or a
+    :class:`repro.quant.policy.PrecisionPolicy` (role-resolved per layer);
+    gradients through quantized backends run full-precision by registry rule,
+    so the fp32 master path of the train step is untouched by any policy."""
     if cfg.family == "audio":
         return encdec_mod.encdec_loss(
-            params, batch["frames"], batch["tokens"], batch["labels"], cfg
+            params, batch["frames"], batch["tokens"], batch["labels"], cfg,
+            backend=backend,
         )
     if cfg.family == "vlm":
         return vlm_mod.vlm_loss(
-            params, batch["tokens"], batch["patch_embeds"], batch["labels"], cfg
+            params, batch["tokens"], batch["patch_embeds"], batch["labels"],
+            cfg, backend=backend,
         )
-    return tf_mod.lm_loss(params, batch["tokens"], batch["labels"], cfg)
+    return tf_mod.lm_loss(
+        params, batch["tokens"], batch["labels"], cfg, backend=backend
+    )
 
 
 def init_state(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
@@ -180,10 +190,13 @@ def decode_at(
 
 
 def _with_slot_lengths(caches, pos: jax.Array):
-    """Reset every stacked KVCache fill counter to the per-slot positions."""
+    """Reset every stacked (Quant)KVCache fill counter to the per-slot
+    positions."""
+    from repro.quant.kvcache import QuantKVCache
+
     out = []
     for c in caches:
-        if isinstance(c, KVCache):
+        if isinstance(c, (KVCache, QuantKVCache)):
             n_periods = c.k.shape[0]
             out.append(
                 c._replace(

@@ -25,7 +25,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ops
-from .layers import Initializer, apply_rope, dense_init, softcap
+from .layers import Initializer, apply_rope, dense_init, role_backend, softcap
 
 __all__ = [
     "AttentionParams",
@@ -89,6 +89,7 @@ def _project_qkv(params, x, kv_x, n_heads, n_kv, head_dim, backend):
     """QKV projections on the O-POPE path (bias fused via C-preload)."""
     b, s, _ = x.shape
     t = kv_x.shape[1]
+    backend = role_backend(backend, "attn_qkv")
     q = ops.linear(x, params["wq"]["w"], params["wq"].get("b"), backend=backend)
     k = ops.linear(kv_x, params["wk"]["w"], params["wk"].get("b"), backend=backend)
     v = ops.linear(kv_x, params["wv"]["w"], params["wv"].get("b"), backend=backend)
@@ -306,30 +307,64 @@ def attention_apply(
     new_cache = None
     if cache is not None and s == 1:
         # Decode: append one token (fused-head layout), attend over the cache.
+        from repro.quant.kvcache import QuantKVCache
+
         idx = cache.length
-        kf = k.reshape(b, 1, n_kv * head_dim).astype(cache.k.dtype)
-        vf = v.reshape(b, 1, n_kv * head_dim).astype(cache.v.dtype)
-        if idx.ndim:
-            # Per-slot positions (continuous batching): each row writes at
-            # its own fill point. Positions stay < S_max in practice (a
-            # retired lane freezes at a valid position and its dead writes
-            # are masked, then overwritten by the next join); mode="drop" is
-            # defense-in-depth so an out-of-range position could never
-            # clobber position 0.
-            rows = jnp.arange(b)
-            new_cache = KVCache(
-                k=cache.k.at[rows, idx].set(kf[:, 0], mode="drop"),
-                v=cache.v.at[rows, idx].set(vf[:, 0], mode="drop"),
-                length=idx + 1,
+        if isinstance(cache, QuantKVCache):
+            # Narrow K/V lanes (serving): the appended token quantizes
+            # through the slot's fixed per-head scales, and attention reads
+            # a dequantized view built INSIDE this fused step — wide K/V
+            # never exists outside it.
+            kq, vq = cache.quantize_rows(
+                k.reshape(b, n_kv * head_dim), v.reshape(b, n_kv * head_dim)
+            )
+            if idx.ndim:
+                rows = jnp.arange(b)
+                new_cache = cache._replace(
+                    k=cache.k.at[rows, idx].set(kq, mode="drop"),
+                    v=cache.v.at[rows, idx].set(vq, mode="drop"),
+                    length=idx + 1,
+                )
+            else:
+                new_cache = cache._replace(
+                    k=jax.lax.dynamic_update_slice_in_dim(
+                        cache.k, kq[:, None], idx, axis=1
+                    ),
+                    v=jax.lax.dynamic_update_slice_in_dim(
+                        cache.v, vq[:, None], idx, axis=1
+                    ),
+                    length=cache.length + 1,
+                )
+            attend_over = KVCache(
+                k=new_cache.dequant_k(jnp.float32),
+                v=new_cache.dequant_v(jnp.float32),
+                length=new_cache.length,
             )
         else:
-            new_cache = KVCache(
-                k=jax.lax.dynamic_update_slice_in_dim(cache.k, kf, idx, axis=1),
-                v=jax.lax.dynamic_update_slice_in_dim(cache.v, vf, idx, axis=1),
-                length=cache.length + 1,
-            )
+            kf = k.reshape(b, 1, n_kv * head_dim).astype(cache.k.dtype)
+            vf = v.reshape(b, 1, n_kv * head_dim).astype(cache.v.dtype)
+            if idx.ndim:
+                # Per-slot positions (continuous batching): each row writes at
+                # its own fill point. Positions stay < S_max in practice (a
+                # retired lane freezes at a valid position and its dead writes
+                # are masked, then overwritten by the next join); mode="drop" is
+                # defense-in-depth so an out-of-range position could never
+                # clobber position 0.
+                rows = jnp.arange(b)
+                new_cache = KVCache(
+                    k=cache.k.at[rows, idx].set(kf[:, 0], mode="drop"),
+                    v=cache.v.at[rows, idx].set(vf[:, 0], mode="drop"),
+                    length=idx + 1,
+                )
+            else:
+                new_cache = KVCache(
+                    k=jax.lax.dynamic_update_slice_in_dim(cache.k, kf, idx, axis=1),
+                    v=jax.lax.dynamic_update_slice_in_dim(cache.v, vf, idx, axis=1),
+                    length=cache.length + 1,
+                )
+            attend_over = new_cache
         o = decode_attention(
-            q, new_cache, n_kv=n_kv, window=window, attn_softcap=attn_softcap
+            q, attend_over, n_kv=n_kv, window=window, attn_softcap=attn_softcap
         )
     else:
         q_offset = 0
@@ -346,6 +381,19 @@ def attention_apply(
             seq_shard=seq_shard,
         )
         if cache is not None:
+            from repro.quant.kvcache import QuantKVCache
+
+            if isinstance(cache, QuantKVCache):
+                # Prefill writes raw K/V; quantization happens at the join
+                # scatter (serve.cache), where per-slot scales are calibrated
+                # from the finished prompt span. Filling a quantized cache
+                # here would cast unscaled floats to int8 — corruption, not
+                # quantization — so refuse loudly.
+                raise NotImplementedError(
+                    "prefill into a QuantKVCache is unsupported: prefill "
+                    "full-precision caches and quantize at the slot-pool "
+                    "join (serve.cache.scatter_slots)"
+                )
             # Prefill: install computed K/V (fused-head layout, matching the
             # projection output sharding — no reshard).
             t = k.shape[1]
@@ -356,5 +404,8 @@ def attention_apply(
                 v=jax.lax.dynamic_update_slice_in_dim(cache.v, vf, 0, axis=1),
                 length=jnp.asarray(s, jnp.int32),
             )
-    out = ops.matmul(o.reshape(b, s, n_heads * head_dim), params["wo"]["w"], backend=backend)
+    out = ops.matmul(
+        o.reshape(b, s, n_heads * head_dim), params["wo"]["w"],
+        backend=role_backend(backend, "attn_out"),
+    )
     return out, new_cache

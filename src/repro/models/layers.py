@@ -18,6 +18,7 @@ from repro.kernels import ops
 
 __all__ = [
     "Initializer",
+    "role_backend",
     "dense_init",
     "embedding_init",
     "rmsnorm_init",
@@ -30,6 +31,21 @@ __all__ = [
     "mlp_init",
     "mlp_apply",
 ]
+
+
+def role_backend(backend, role: str):
+    """Resolve the matmul backend for one layer role.
+
+    ``backend`` is either a backend name (``str``/``None`` — applies to every
+    role, the pre-policy behaviour) or a precision policy exposing
+    ``backend_for(role)`` (:class:`repro.quant.policy.PrecisionPolicy`,
+    duck-typed so this module never imports the quant package). Every matmul
+    site in the model stack routes its ``backend=`` argument through here
+    with its role name, which is what lets one policy object drive
+    mixed-precision wiring across the whole model.
+    """
+    resolver = getattr(backend, "backend_for", None)
+    return resolver(role) if resolver is not None else backend
 
 
 @dataclasses.dataclass(frozen=True)
@@ -140,8 +156,15 @@ def mlp_init(key, d_model: int, d_ff: int, init: Initializer, *, gated: bool = T
     return p
 
 
-def mlp_apply(params, x: jax.Array, *, activation: str = "silu", backend=None):
-    """SwiGLU (default) / GeGLU / plain-GELU MLP on the O-POPE matmul path."""
+def mlp_apply(
+    params, x: jax.Array, *, activation: str = "silu", backend=None,
+    role: str = "mlp",
+):
+    """SwiGLU (default) / GeGLU / plain-GELU MLP on the O-POPE matmul path.
+
+    ``role`` keys the precision-policy lookup (the shared-expert MLP inside
+    MoE blocks passes ``role="moe"``)."""
+    backend = role_backend(backend, role)
     up = ops.matmul(x, params["w_up"], backend=backend)
     if "w_gate" in params:
         gate = ops.matmul(x, params["w_gate"], backend=backend)

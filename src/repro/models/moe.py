@@ -96,10 +96,17 @@ def moe_apply(
     decode matches teacher forcing exactly. Capacity-based dropping remains
     the default: it is what the production roofline models.
     """
+    from .layers import role_backend
+
     b, s, d = x.shape
     t = b * s
     xf = x.reshape(t, d)
-    logits = ops.matmul(xf, params["router"], backend=backend).astype(jnp.float32)
+    # Routing decisions are accuracy-critical: the router matmul carries its
+    # own policy role so a quantized-MoE policy can (and by default does)
+    # keep it full-precision.
+    logits = ops.matmul(
+        xf, params["router"], backend=role_backend(backend, "router")
+    ).astype(jnp.float32)
     gates = jax.nn.softmax(logits, axis=-1)  # [T, E]
     top_vals, top_idx = jax.lax.top_k(gates, top_k)  # [T, K]
     top_vals = top_vals / jnp.maximum(top_vals.sum(-1, keepdims=True), 1e-9)
@@ -128,7 +135,7 @@ def moe_apply(
     if "shared" in params:
         from .layers import mlp_apply
 
-        y = y + mlp_apply(params["shared"], xf, backend=backend)
+        y = y + mlp_apply(params["shared"], xf, backend=backend, role="moe")
 
     mask = jax.nn.one_hot(top_idx, n_experts, dtype=jnp.float32).sum(axis=1)
     aux = router_load_balancing_loss(gates, mask)

@@ -188,10 +188,15 @@ def _block_apply(
     backend=None,
 ):
     """One layer. Returns (x, new_cache, aux_loss)."""
+    from .layers import role_backend
+
     aux = jnp.zeros((), jnp.float32)
     new_cache = cache
     h = _norm(cfg, p["norm_mixer"], x)
     mixer_out = None
+    # attention / mlp / moe resolve their own precision-policy roles inside;
+    # the recurrent mixers take a plain backend name resolved here.
+    mixer_be = role_backend(backend, "mixer")
     if bd.mixer in ("attn", "attn_local"):
         mixer_out, new_cache = attn_mod.attention_apply(
             p["attn"],
@@ -213,11 +218,11 @@ def _block_apply(
     elif bd.mixer == "mamba":
         if cache is not None and x.shape[1] == 1:
             mixer_out, new_cache = mamba_mod.mamba_decode_step(
-                p["mamba"], h, cache, backend=backend
+                p["mamba"], h, cache, backend=mixer_be
             )
         else:
             mixer_out, state = mamba_mod.mamba_apply(
-                p["mamba"], h, chunk=cfg.scan_chunk, backend=backend,
+                p["mamba"], h, chunk=cfg.scan_chunk, backend=mixer_be,
                 return_state=True,
             )
             if cache is not None:
@@ -225,23 +230,23 @@ def _block_apply(
     elif bd.mixer == "mlstm":
         if cache is not None and x.shape[1] == 1:
             mixer_out, new_cache = xlstm_mod.mlstm_decode_step(
-                p["mlstm"], h, cache, n_heads=cfg.n_heads, backend=backend
+                p["mlstm"], h, cache, n_heads=cfg.n_heads, backend=mixer_be
             )
         else:
             mixer_out, state = xlstm_mod.mlstm_apply(
                 p["mlstm"], h, n_heads=cfg.n_heads, chunk=cfg.scan_chunk,
-                backend=backend, return_state=True,
+                backend=mixer_be, return_state=True,
             )
             if cache is not None:
                 new_cache = state
     elif bd.mixer == "slstm":
         if cache is not None and x.shape[1] == 1:
             mixer_out, new_cache = xlstm_mod.slstm_decode_step(
-                p["slstm"], h, cache, n_heads=cfg.n_heads, backend=backend
+                p["slstm"], h, cache, n_heads=cfg.n_heads, backend=mixer_be
             )
         else:
             mixer_out, state = xlstm_mod.slstm_apply(
-                p["slstm"], h, n_heads=cfg.n_heads, backend=backend,
+                p["slstm"], h, n_heads=cfg.n_heads, backend=mixer_be,
                 return_state=True,
             )
             if cache is not None:

@@ -1,0 +1,66 @@
+"""Mixed-precision subsystem: quantizers, quantized O-POPE backends,
+precision policies, and quantized serving KV lanes.
+
+The paper opens on the trade-off this package makes expressible in software:
+quantization mitigates computational and data-movement costs, while
+accuracy-sensitive work (training, routing, logits) stays in floating point.
+
+* :mod:`repro.quant.quantize` — int8 / emulated-fp8 quantizers, per-tensor
+  and per-channel scales, calibration from sample batches.
+* :mod:`repro.quant.backends` — ``xla_q8`` and ``pallas_q8`` GEMM backends,
+  registered through the ``repro.kernels.ops`` registry on import (the
+  registry also imports this package lazily when either name is requested).
+* :mod:`repro.quant.pallas_q8` — the int8 O-POPE Pallas kernel (int32
+  resident accumulator, dequant at the writeback boundary).
+* :mod:`repro.quant.policy` — :class:`PrecisionPolicy`, mapping model layer
+  roles to backends; gradients stay fp32 by registry rule.
+* :mod:`repro.quant.kvcache` — :class:`QuantKVCache`: narrow K/V lanes with
+  per-slot, per-head scales for the continuous-batching slot pool.
+"""
+
+from . import backends as _backends  # registers xla_q8 / pallas_q8
+from .backends import register_quant_backends
+from .kvcache import (
+    DEFAULT_KV_MARGIN,
+    QuantKVCache,
+    kv_bytes_per_slot,
+    quantize_kv,
+    quantize_kv_rows,
+)
+from .pallas_q8 import opope_gemm_q8, q8_block_shape
+from .policy import ROLES, PrecisionPolicy, mlp_q8_policy, preferred_q8_backend
+from .quantize import (
+    FORMATS,
+    QuantFormat,
+    QuantizedTensor,
+    amax_scale,
+    calibrate_scale,
+    dequantize,
+    format_of,
+    quantize,
+    quantize_with_scale,
+)
+
+__all__ = [
+    "FORMATS",
+    "QuantFormat",
+    "QuantizedTensor",
+    "amax_scale",
+    "calibrate_scale",
+    "dequantize",
+    "format_of",
+    "quantize",
+    "quantize_with_scale",
+    "opope_gemm_q8",
+    "q8_block_shape",
+    "register_quant_backends",
+    "PrecisionPolicy",
+    "mlp_q8_policy",
+    "preferred_q8_backend",
+    "ROLES",
+    "QuantKVCache",
+    "quantize_kv",
+    "quantize_kv_rows",
+    "kv_bytes_per_slot",
+    "DEFAULT_KV_MARGIN",
+]

@@ -1,0 +1,116 @@
+"""Quantized GEMM backends, registered through ``repro.kernels.ops``.
+
+Two execution paths, one numerics contract (int8 dynamic symmetric
+quantization — per-row scales on A, per-output-channel scales on B — exact
+int32 accumulation, scales and the optional C operand applied in fp32 at the
+accumulator, single final cast):
+
+* ``xla_q8``   — ``lax.dot_general`` on the int8 values with
+  ``preferred_element_type=int32``; the portable reference, available
+  everywhere.
+* ``pallas_q8`` — the O-POPE kernel with int8 operand streams and an int32
+  resident accumulator (:mod:`repro.quant.pallas_q8`): same outer-product
+  dataflow, a quarter of the fp32 path's operand traffic. Degrades to
+  ``pallas_q8_interpret`` (same body, CPU interpreter) and then ``xla_q8`` —
+  never to a full-precision path, so a degraded quantized request keeps
+  quantized numerics.
+
+Because int32 accumulation of int8 products is exact (no reassociation
+error), ``xla_q8`` and ``pallas_q8`` agree bit-for-bit on the accumulator and
+to fp32 rounding on the output — asserted in tests.
+
+Both register ``grad_backend="xla"``: a backward pass through a quantized
+matmul runs full-precision fp32-accumulated GEMMs on the saved (unquantized)
+residuals. That is the paper's "training still requires higher-precision
+floating-point" rule, enforced structurally — no caller can accidentally
+backpropagate through int8.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.lax as lax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+from .pallas_q8 import opope_gemm_q8, q8_block_shape
+from .quantize import quantize
+
+__all__ = ["register_quant_backends"]
+
+
+def _quantize_operands(a: jax.Array, b: jax.Array):
+    """Dynamic per-row (A) / per-output-channel (B) int8 quantization.
+
+    Row/column granularity is the finest that still factorizes out of the
+    GEMM: ``C[m,n] = sa[m] * sb[n] * sum_k qa[m,k] * qb[k,n]``.
+    """
+    aq = quantize(a, "int8", axis=0)  # scale [M, 1]
+    bq = quantize(b, "int8", axis=1)  # scale [1, N]
+    return aq, bq
+
+
+def _xla_q8(a, b, c, out_dtype):
+    aq, bq = _quantize_operands(a, b)
+    acc = lax.dot_general(
+        aq.q, bq.q, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    out = acc.astype(jnp.float32) * (aq.scale * bq.scale)
+    if c is not None:
+        out = out + c.astype(jnp.float32)  # [M, N] tile or [N] bias row
+    return out.astype(out_dtype)
+
+
+def _pallas_q8_fn(interpret: bool):
+    def run(a, b, c, out_dtype):
+        aq, bq = _quantize_operands(a, b)
+        bm, bn, bk = q8_block_shape(a.shape[0], a.shape[1], b.shape[1])
+        return opope_gemm_q8(
+            aq.q, aq.scale, bq.q, bq.scale, c,
+            block_m=bm, block_n=bn, block_k=bk,
+            out_dtype=out_dtype, interpret=interpret,
+        )
+
+    return run
+
+
+@functools.lru_cache(maxsize=None)
+def _pallas_q8_compiles() -> bool:
+    """Probe once whether the compiled int8 Pallas path lowers here."""
+    try:
+        if jax.devices()[0].platform != "tpu":
+            return False
+        a = jnp.zeros((32, 128), jnp.int8)
+        sa = jnp.ones((32, 1), jnp.float32)
+        b = jnp.zeros((128, 128), jnp.int8)
+        sb = jnp.ones((1, 128), jnp.float32)
+        opope_gemm_q8.lower(a, sa, b, sb, interpret=False).compile()
+        return True
+    except Exception:
+        return False
+
+
+def register_quant_backends() -> None:
+    """Register (or re-register) the quantized backends. Idempotent."""
+    ops.register_backend("xla_q8", _xla_q8, grad_backend="xla")
+    ops.register_backend(
+        "pallas_q8",
+        _pallas_q8_fn(interpret=False),
+        available=_pallas_q8_compiles,
+        fallback=("pallas_q8_interpret", "xla_q8"),
+        grad_backend="xla",
+    )
+    ops.register_backend(
+        "pallas_q8_interpret",
+        _pallas_q8_fn(interpret=True),
+        fallback=("xla_q8",),
+        grad_backend="xla",
+    )
+
+
+register_quant_backends()

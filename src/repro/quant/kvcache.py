@@ -1,0 +1,192 @@
+"""Quantized K/V lanes for the slot-pooled serving cache.
+
+Serving memory is dominated by the decode KV cache: per slot the pool holds
+``2 * max_len * n_kv * head_dim`` elements per attention layer. Narrowing
+those lanes to one byte drops per-slot cache memory ~4x (vs fp32 lanes), so
+an engine with the same HBM budget admits proportionally more concurrent
+requests — the data-movement side of the paper's quantization trade-off,
+applied to the serving state instead of the GEMM operands.
+
+Layout (mirrors :class:`repro.models.attention.KVCache`, fused head dim):
+
+* ``k`` / ``v`` — narrow values ``[..., S_max, n_kv * head_dim]`` (int8 or an
+  fp8 storage dtype),
+* ``k_scale`` / ``v_scale`` — fp32 **per-slot, per-head** scales
+  ``[..., n_kv]``: calibrated once per request at *join* time from its
+  prefilled K/V (per-head amax over the prompt span, with headroom margin
+  for later decode tokens), then fixed for the request's lifetime so every
+  append and every read dequantizes consistently,
+* ``length`` — the fill counter, exactly as in ``KVCache``.
+
+Dequantization happens **inside the fused decode step** (the attention layer
+widens the narrow lanes right before the score/PV einsums — see
+``repro.models.attention``); nothing outside the step ever sees wide K/V.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from .quantize import QuantFormat, format_of
+
+__all__ = [
+    "QuantKVCache",
+    "quantize_kv",
+    "quantize_kv_rows",
+    "kv_bytes_per_slot",
+    "DEFAULT_KV_MARGIN",
+]
+
+# Join-time calibration headroom: decode-time K/V can exceed the prompt-span
+# amax; 1.25x costs ~a third of a bit of resolution and makes clipping rare.
+DEFAULT_KV_MARGIN = 1.25
+
+_TINY = 1e-12
+
+
+class QuantKVCache(NamedTuple):
+    """Narrow-lane decode cache with per-slot, per-head fp32 scales.
+
+    Structurally a drop-in for ``KVCache`` in every cache pytree (same
+    ``length`` contract, same leading axes), so the layer-scan, the slot
+    scatter, and the donation machinery treat it identically.
+    """
+
+    k: jax.Array  # [..., S_max, n_kv * head_dim], narrow dtype
+    v: jax.Array
+    k_scale: jax.Array  # [..., n_kv] fp32
+    v_scale: jax.Array
+    length: jax.Array  # int32: [] lockstep, or [B] per-slot
+
+    @property
+    def n_kv(self) -> int:
+        return self.k_scale.shape[-1]
+
+    @property
+    def fmt(self) -> QuantFormat:
+        return format_of(self.k.dtype)
+
+    @staticmethod
+    def zeros(
+        batch: int, max_len: int, n_kv: int, head_dim: int,
+        fmt: Union[str, QuantFormat] = "int8",
+    ) -> "QuantKVCache":
+        f = format_of(fmt)
+        shape = (batch, max_len, n_kv * head_dim)
+        return QuantKVCache(
+            k=jnp.zeros(shape, f.dtype),
+            v=jnp.zeros(shape, f.dtype),
+            k_scale=jnp.ones((batch, n_kv), jnp.float32),
+            v_scale=jnp.ones((batch, n_kv), jnp.float32),
+            length=jnp.zeros((), jnp.int32),
+        )
+
+    # -- dequant (inside the fused decode step) -----------------------------
+
+    def dequant_k(self, dtype=jnp.float32) -> jax.Array:
+        return _dequant(self.k, self.k_scale, dtype)
+
+    def dequant_v(self, dtype=jnp.float32) -> jax.Array:
+        return _dequant(self.v, self.v_scale, dtype)
+
+    # -- append (decode step writes through the fixed slot scales) ----------
+
+    def quantize_rows(self, kf: jax.Array, vf: jax.Array):
+        """Quantize one appended token per row: kf/vf [..., n_kv * head_dim]
+        with this cache's per-slot scales. Values beyond the calibrated
+        range clip (the margin makes that rare)."""
+        return (
+            _quant_rows(kf, self.k_scale, self.fmt),
+            _quant_rows(vf, self.v_scale, self.fmt),
+        )
+
+
+def _dequant(q: jax.Array, scale: jax.Array, dtype) -> jax.Array:
+    *lead, s, f = q.shape
+    n_kv = scale.shape[-1]
+    x = q.reshape(*lead, s, n_kv, f // n_kv).astype(jnp.float32)
+    x = x * scale[..., None, :, None]
+    return x.reshape(*lead, s, f).astype(dtype)
+
+
+def _quant_rows(x: jax.Array, scale: jax.Array, fmt: QuantFormat) -> jax.Array:
+    *lead, f = x.shape
+    n_kv = scale.shape[-1]
+    xs = x.reshape(*lead, n_kv, f // n_kv).astype(jnp.float32) / scale[..., :, None]
+    return fmt.cast(xs).reshape(*lead, f)
+
+
+def quantize_kv_rows(
+    k: jax.Array,
+    v: jax.Array,
+    n_kv: int,
+    *,
+    fmt: Union[str, QuantFormat] = "int8",
+    margin: float = DEFAULT_KV_MARGIN,
+):
+    """Calibrate per-(slot, head) scales from full-precision K/V rows and
+    quantize them. k/v: [..., S, n_kv * head_dim] (the prefilled prompt
+    span); amax reduces over positions and head-dim, keeping heads.
+
+    Returns ``(k_q, v_q, k_scale, v_scale)`` with scales shaped [..., n_kv].
+    """
+    f = format_of(fmt)
+
+    def one(x):
+        *lead, s, fused = x.shape
+        xh = x.reshape(*lead, s, n_kv, fused // n_kv).astype(jnp.float32)
+        amax = jnp.max(jnp.abs(xh), axis=(-3, -1))  # [..., n_kv]
+        scale = jnp.maximum(amax * margin, _TINY) / f.qmax
+        q = f.cast(xh / scale[..., None, :, None]).reshape(*lead, s, fused)
+        return q, scale
+
+    k_q, k_scale = one(k)
+    v_q, v_scale = one(v)
+    return k_q, v_q, k_scale, v_scale
+
+
+def quantize_kv(
+    cache,
+    n_kv: Optional[int] = None,
+    *,
+    fmt: Union[str, QuantFormat] = "int8",
+    margin: float = DEFAULT_KV_MARGIN,
+) -> QuantKVCache:
+    """Quantize a full-precision KVCache-like (``.k``/``.v``/``.length``)
+    into a :class:`QuantKVCache` with freshly calibrated per-row, per-head
+    scales. ``n_kv`` defaults to treating the whole fused head dim as one
+    head (a single per-row scale)."""
+    n_kv = n_kv if n_kv is not None else 1
+    k_q, v_q, k_scale, v_scale = quantize_kv_rows(
+        cache.k, cache.v, n_kv, fmt=fmt, margin=margin
+    )
+    return QuantKVCache(
+        k=k_q, v=v_q, k_scale=k_scale, v_scale=v_scale, length=cache.length
+    )
+
+
+def kv_bytes_per_slot(caches) -> float:
+    """Mean K/V-cache bytes held per slot across a pool cache pytree.
+
+    Counts k/v value lanes plus scale sidecars of every (Quant)KVCache entry
+    (stacked [n_periods, n_slots, ...]); recurrent states and placeholders
+    are excluded — the comparison is about the attention cache lanes. Pools
+    with no attention layers (pure-SSM families) report 0.0.
+    """
+    total = 0.0
+    n_slots = None
+    for c in caches:
+        if isinstance(c, QuantKVCache):
+            arrs = (c.k, c.v, c.k_scale, c.v_scale)
+        elif hasattr(c, "k") and hasattr(c, "v"):
+            arrs = (c.k, c.v)
+        else:
+            continue
+        n_slots = c.k.shape[1]
+        total += sum(a.size * jnp.dtype(a.dtype).itemsize for a in arrs)
+    if not n_slots:
+        return 0.0
+    return total / n_slots

@@ -1,0 +1,195 @@
+"""O-POPE GEMM, int8 operands: same dataflow, quarter the operand traffic.
+
+This is the quantized variant of :func:`repro.kernels.opope_gemm.opope_gemm`
+(the OpenGeMM observation — arXiv:2411.09543 — that the paper's utilization
+story replays at int8). The dataflow is identical:
+
+* the grid is ``(m, n, k)`` with ``k`` innermost/sequential,
+* the accumulator tile stays resident in VMEM scratch across the K loop —
+  but as **int32** (the exact sum of int8 products; integer accumulation is
+  associative, so this backend is bit-deterministic across tilings),
+* A/B panels stream as **int8** — 1 byte/element where the fp path moves 2-4,
+* dequantization happens only at the accumulator boundary: the per-row /
+  per-column fp32 scales multiply the finished int32 tile at **writeback**,
+  and the optional C operand (full tile or [N] bias row) is added there in
+  fp32 — the same accumulator preload/writeback points the paper fuses its
+  epilogue into, so no dequantized copy of A or B ever exists.
+
+Block shapes are rounded to the int8 sublane tile (32) so the compiled path
+lines up with the MXU's int8 layout; the interpreter path (CPU tests) runs
+the same body.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro import compat
+
+__all__ = ["opope_gemm_q8", "q8_block_shape"]
+
+
+def _q8_kernel(aq_ref, as_ref, bq_ref, bs_ref, o_ref, acc_ref, *, k_steps: int):
+    """One (m, n, k) grid step: rank-block_k int8 panel update, int32 resident."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        aq_ref[...], bq_ref[...], preferred_element_type=jnp.int32
+    )
+
+    @pl.when(k == k_steps - 1)
+    def _writeback():
+        # Dequant at the accumulator writeback point: one fp32 multiply by
+        # the rank-1 scale outer product, single final cast.
+        scaled = acc_ref[...].astype(jnp.float32) * (as_ref[...] * bs_ref[...])
+        o_ref[...] = scaled.astype(o_ref.dtype)
+
+
+def _q8_preload_kernel(
+    aq_ref, as_ref, bq_ref, bs_ref, c_ref, o_ref, acc_ref, *, k_steps: int
+):
+    """As :func:`_q8_kernel` with the C operand fused at the same boundary.
+
+    The integer accumulator cannot hold the fp32 C tile during the K loop, so
+    the preload moves to the writeback: ``O = deq(acc) + C`` — numerically
+    identical (C enters the sum linearly) and still zero extra HBM round-trip.
+    C is a full (bm, bn) tile or a (1, bn) bias row broadcast down M.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        aq_ref[...], bq_ref[...], preferred_element_type=jnp.int32
+    )
+
+    @pl.when(k == k_steps - 1)
+    def _writeback():
+        scaled = acc_ref[...].astype(jnp.float32) * (as_ref[...] * bs_ref[...])
+        scaled = scaled + jnp.broadcast_to(
+            c_ref[...].astype(jnp.float32), scaled.shape
+        )
+        o_ref[...] = scaled.astype(o_ref.dtype)
+
+
+def q8_block_shape(m: int, k: int, n: int):
+    """Block shapes for int8 operands: the fp selection at elem_bytes=1 with
+    the M block rounded to the int8 sublane tile (32).
+
+    The sole owner of q8 tile selection (the registered backend calls this);
+    it goes through ``ops._tile_for`` so int8 shapes share the same bounded
+    LRU memo as the fp backends (keyed by itemsize=1).
+    """
+    from repro.kernels import ops
+
+    bm, bn, bk = ops._tile_for(m, k, n, 1)
+    return _rup(bm, 32), bn, bk
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_m", "block_n", "block_k", "out_dtype", "interpret"),
+)
+def opope_gemm_q8(
+    a_q: jax.Array,
+    a_scale: jax.Array,
+    b_q: jax.Array,
+    b_scale: jax.Array,
+    c: Optional[jax.Array] = None,
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 256,
+    out_dtype: Optional[jnp.dtype] = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """``O = (a_q @ b_q) * (a_scale * b_scale) (+ C)`` on the O-POPE grid.
+
+    a_q: [M, K] int8 with per-row scales a_scale [M, 1] (fp32);
+    b_q: [K, N] int8 with per-column scales b_scale [1, N] (fp32).
+    ``interpret=True`` runs the body in the Pallas interpreter (CPU tests).
+    """
+    if a_q.ndim != 2 or b_q.ndim != 2 or a_q.shape[1] != b_q.shape[0]:
+        raise ValueError(f"bad GEMM shapes {a_q.shape} @ {b_q.shape}")
+    m, k = a_q.shape
+    _, n = b_q.shape
+    if a_scale.shape != (m, 1):
+        raise ValueError(f"a_scale shape {a_scale.shape} != {(m, 1)}")
+    if b_scale.shape != (1, n):
+        raise ValueError(f"b_scale shape {b_scale.shape} != {(1, n)}")
+    out_dtype = jnp.dtype(out_dtype or jnp.float32)
+
+    # M blocks stay 32-aligned (int8 sublane tile) whatever the caller asked.
+    bm = _rup(min(block_m, _rup(m, 32)), 32)
+    bn = min(block_n, _rup(n, 128))
+    bk = min(block_k, _rup(k, 128))
+    mp, kp, np_ = _rup(m, bm), _rup(k, bk), _rup(n, bn)
+    a_p = _pad2(a_q, mp, kp)
+    b_p = _pad2(b_q, kp, np_)
+    # Pad scales with ones: padded rows/cols contribute zero products, and a
+    # nonzero pad keeps the writeback multiply well-defined.
+    as_p = _pad2(a_scale.astype(jnp.float32), mp, 1, value=1.0)
+    bs_p = _pad2(b_scale.astype(jnp.float32), 1, np_, value=1.0)
+    k_steps = kp // bk
+
+    grid = (mp // bm, np_ // bn, k_steps)
+    in_specs = [
+        pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+        pl.BlockSpec((bm, 1), lambda i, j, kk: (i, 0)),
+        pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+    ]
+    operands = [a_p, as_p, b_p, bs_p]
+    if c is not None:
+        if c.ndim == 1:
+            if c.shape != (n,):
+                raise ValueError(f"C preload shape {c.shape} != {(n,)} or {(m, n)}")
+            in_specs.append(pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)))
+            operands.append(_pad2(c[None, :].astype(jnp.float32), 1, np_))
+        else:
+            if c.shape != (m, n):
+                raise ValueError(f"C preload shape {c.shape} != {(m, n)}")
+            in_specs.append(pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)))
+            operands.append(_pad2(c.astype(jnp.float32), mp, np_))
+        kernel = functools.partial(_q8_preload_kernel, k_steps=k_steps)
+    else:
+        kernel = functools.partial(_q8_kernel, k_steps=k_steps)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        compiler_params=compat.tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(*operands)
+    return out[:m, :n]
+
+
+def _rup(x: int, mult: int) -> int:
+    return mult * math.ceil(x / mult)
+
+
+def _pad2(x: jax.Array, d0: int, d1: int, value=0) -> jax.Array:
+    if x.shape == (d0, d1):
+        return x
+    return jnp.pad(
+        x, ((0, d0 - x.shape[0]), (0, d1 - x.shape[1])), constant_values=value
+    )

@@ -1,0 +1,100 @@
+"""Precision policies: which layer roles run on which matmul backend.
+
+A :class:`PrecisionPolicy` is passed anywhere the models accept a
+``backend=`` (it duck-types via ``backend_for``; see
+``repro.models.layers.role_backend``). Each matmul site in the model stack
+declares a *role* and the policy maps roles to registered backend names:
+
+==============  ============================================================
+role            matmul sites
+==============  ============================================================
+``attn_qkv``    attention Q/K/V projections
+``attn_out``    attention output projection
+``mlp``         dense MLP up/gate/down projections
+``moe``         the MoE shared-expert MLP (routed expert FFNs batch their
+                per-expert GEMMs as einsums outside the registry and stay
+                full-precision — ROADMAP open item)
+``router``      MoE router logits (routing decisions are accuracy-critical)
+``mixer``       mamba / xLSTM in/out projections
+==============  ============================================================
+
+Unlisted roles fall through to ``default`` (``None`` = the process default
+backend, i.e. full precision). Logits, norms and softmaxes never route
+through the registry and always compute in fp32 — so "attention/logits stay
+high-precision, MLP linears go q8" is::
+
+    PrecisionPolicy(rules={"mlp": "xla_q8", "moe": "xla_q8"})
+
+Gradients are not a role: every quantized backend registers
+``grad_backend="xla"`` (see :mod:`repro.quant.backends`), so the backward
+pass of ANY policy runs full-precision fp32-accumulated GEMMs — the paper's
+"accuracy-sensitive tasks such as training still require higher-precision
+floating-point formats", enforced below the policy layer where it cannot be
+misconfigured.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Mapping, Optional
+
+__all__ = ["PrecisionPolicy", "preferred_q8_backend", "mlp_q8_policy", "ROLES"]
+
+ROLES = ("attn_qkv", "attn_out", "mlp", "moe", "router", "mixer")
+
+
+def preferred_q8_backend() -> str:
+    """The best available quantized GEMM backend on this platform: the
+    compiled Pallas q8 kernel where it lowers, else the XLA int8 path (never
+    the interpreter — a model-wide policy must not fall into the Python
+    executor)."""
+    from repro.kernels import ops
+
+    b = ops._REGISTRY.get("pallas_q8")
+    if b is not None and ops._probe_ok(b):
+        return "pallas_q8"
+    return "xla_q8"
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionPolicy:
+    """Role -> backend mapping. ``None`` means the process default backend.
+
+    The special backend value ``"q8"`` resolves to
+    :func:`preferred_q8_backend` at call time, so one policy object serves
+    TPU (compiled kernel) and CPU (XLA int8) hosts.
+    """
+
+    rules: Mapping[str, Optional[str]] = dataclasses.field(default_factory=dict)
+    default: Optional[str] = None
+    name: str = "policy"
+
+    def __post_init__(self) -> None:
+        unknown = set(self.rules) - set(ROLES)
+        if unknown:
+            raise ValueError(
+                f"policy {self.name!r}: unknown roles {sorted(unknown)}; "
+                f"known: {list(ROLES)}"
+            )
+
+    def backend_for(self, role: str) -> Optional[str]:
+        backend = self.rules.get(role, self.default)
+        if backend == "q8":
+            backend = preferred_q8_backend()
+        return backend
+
+    def describe(self) -> Dict[str, str]:
+        """role -> resolved backend table (for reports and benchmarks)."""
+        return {
+            role: (self.backend_for(role) or "<default>") for role in ROLES
+        }
+
+
+def mlp_q8_policy(*, moe: bool = True) -> PrecisionPolicy:
+    """The paper's serving-side split: MLP GEMMs (and the MoE shared-expert
+    MLP) quantize; attention / router / mixers / logits stay full-precision,
+    gradients are fp32 by registry rule."""
+    rules: Dict[str, Optional[str]] = {"mlp": "q8"}
+    if moe:
+        rules["moe"] = "q8"
+    return PrecisionPolicy(rules=rules, name="mlp-q8")

@@ -1,0 +1,185 @@
+"""Quantizers: int8 and emulated fp8 (e4m3 / e5m2), per-tensor or per-channel.
+
+The paper's opening trade-off — quantization cuts compute *and data
+movement* cost, while accuracy-sensitive work stays in floating point — needs
+a software embodiment of "narrow format + scale". This module provides it:
+
+* **Formats** — ``int8`` (symmetric, qmax 127), ``fp8_e4m3`` (max 448) and
+  ``fp8_e5m2`` (max 57344). The fp8 formats are *emulated*: values are stored
+  in JAX's native ``float8_*`` dtypes (1 byte — the storage/traffic win is
+  real) but arithmetic on them happens after widening to fp32, mirroring the
+  widening-MAC configurations of the paper's PE (fp8 multiply feeding a wider
+  accumulator).
+* **Scales** — fp32, per-tensor (scalar) or per-channel (``axis=`` keeps that
+  axis; e.g. per-output-channel weights use ``axis=1`` on a ``[K, N]``
+  matrix, giving a ``[1, N]`` scale that broadcasts in the dequant).
+* **Calibration** — :func:`calibrate_scale` folds an amax estimate over
+  sample batches so static (serving-time) quantization can fix its scales
+  from representative data instead of per-call dynamics.
+
+The format of a :class:`QuantizedTensor` is carried by its storage dtype
+(``q.dtype``), keeping the pytree leaves pure arrays — a QuantizedTensor
+jits, scans, and donates like any other cache state.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, NamedTuple, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "QuantFormat",
+    "FORMATS",
+    "QuantizedTensor",
+    "format_of",
+    "quantize",
+    "quantize_with_scale",
+    "dequantize",
+    "amax_scale",
+    "calibrate_scale",
+]
+
+_TINY = 1e-12  # amax floor: all-zero tensors quantize to zeros, not NaNs
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantFormat:
+    """One storage format: name, storage dtype, and largest representable
+    magnitude (the value an amax maps onto)."""
+
+    name: str
+    dtype: jnp.dtype
+    qmax: float
+    integer: bool
+
+    def cast(self, x: jax.Array) -> jax.Array:
+        if self.integer:
+            return jnp.clip(jnp.round(x), -self.qmax, self.qmax).astype(self.dtype)
+        return jnp.clip(x, -self.qmax, self.qmax).astype(self.dtype)
+
+
+FORMATS = {
+    "int8": QuantFormat("int8", jnp.dtype(jnp.int8), 127.0, True),
+    "fp8_e4m3": QuantFormat(
+        "fp8_e4m3", jnp.dtype(jnp.float8_e4m3fn), 448.0, False
+    ),
+    "fp8_e5m2": QuantFormat(
+        "fp8_e5m2", jnp.dtype(jnp.float8_e5m2), 57344.0, False
+    ),
+}
+
+_BY_DTYPE = {f.dtype: f for f in FORMATS.values()}
+
+
+def format_of(fmt_or_dtype: Union[str, jnp.dtype, "QuantFormat"]) -> QuantFormat:
+    """Resolve a format name, storage dtype, or QuantFormat to a QuantFormat."""
+    if isinstance(fmt_or_dtype, QuantFormat):
+        return fmt_or_dtype
+    if isinstance(fmt_or_dtype, str) and fmt_or_dtype in FORMATS:
+        return FORMATS[fmt_or_dtype]
+    f = _BY_DTYPE.get(jnp.dtype(fmt_or_dtype))
+    if f is None:
+        raise ValueError(
+            f"unknown quant format {fmt_or_dtype!r}; known: {sorted(FORMATS)}"
+        )
+    return f
+
+
+class QuantizedTensor(NamedTuple):
+    """Narrow values + fp32 scale. ``dequant = q.astype(f32) * scale``.
+
+    ``scale`` is a scalar (per-tensor) or keepdims-shaped (per-channel) so it
+    broadcasts against ``q`` without bookkeeping. The format is recoverable
+    from ``q.dtype`` (see :func:`format_of`), so the pytree holds only arrays.
+    """
+
+    q: jax.Array
+    scale: jax.Array
+
+    @property
+    def fmt(self) -> QuantFormat:
+        return format_of(self.q.dtype)
+
+    def dequantize(self, dtype=jnp.float32) -> jax.Array:
+        return dequantize(self, dtype)
+
+    @property
+    def nbytes(self) -> int:
+        return (
+            self.q.size * jnp.dtype(self.q.dtype).itemsize
+            + self.scale.size * jnp.dtype(self.scale.dtype).itemsize
+        )
+
+
+def amax_scale(
+    x: jax.Array, fmt: Union[str, QuantFormat] = "int8",
+    axis: Optional[int] = None,
+) -> jax.Array:
+    """Symmetric scale mapping the observed amax onto the format's qmax.
+
+    ``axis=None`` gives a per-tensor scalar; an integer axis keeps that axis
+    (per-channel), reducing over all others with keepdims so the scale
+    broadcasts against ``x``.
+    """
+    f = format_of(fmt)
+    xf = jnp.abs(x.astype(jnp.float32))
+    if axis is None:
+        amax = jnp.max(xf)
+    else:
+        reduce_axes = tuple(i for i in range(x.ndim) if i != axis % x.ndim)
+        amax = jnp.max(xf, axis=reduce_axes, keepdims=True)
+    return jnp.maximum(amax, _TINY) / f.qmax
+
+
+def quantize_with_scale(
+    x: jax.Array, scale: jax.Array, fmt: Union[str, QuantFormat] = "int8"
+) -> QuantizedTensor:
+    """Quantize with a fixed (e.g. calibrated) scale; out-of-range clips."""
+    f = format_of(fmt)
+    q = f.cast(x.astype(jnp.float32) / scale)
+    return QuantizedTensor(q=q, scale=jnp.asarray(scale, jnp.float32))
+
+
+def quantize(
+    x: jax.Array,
+    fmt: Union[str, QuantFormat] = "int8",
+    *,
+    axis: Optional[int] = None,
+) -> QuantizedTensor:
+    """Dynamic symmetric quantization (scale from this tensor's own amax)."""
+    return quantize_with_scale(x, amax_scale(x, fmt, axis=axis), fmt)
+
+
+def dequantize(qt: QuantizedTensor, dtype=jnp.float32) -> jax.Array:
+    return (qt.q.astype(jnp.float32) * qt.scale).astype(dtype)
+
+
+def calibrate_scale(
+    batches: Iterable[jax.Array],
+    fmt: Union[str, QuantFormat] = "int8",
+    *,
+    axis: Optional[int] = None,
+    margin: float = 1.0,
+) -> jax.Array:
+    """Scale from the running amax over sample batches (static quantization).
+
+    ``margin > 1`` leaves headroom for values the calibration set did not
+    exhibit (later decode tokens, unseen activations) at the cost of one
+    ``log2(margin)`` bit of resolution.
+    """
+    f = format_of(fmt)
+    amax = None
+    for x in batches:
+        xf = jnp.abs(jnp.asarray(x).astype(jnp.float32))
+        if axis is None:
+            a = jnp.max(xf)
+        else:
+            reduce_axes = tuple(i for i in range(xf.ndim) if i != axis % xf.ndim)
+            a = jnp.max(xf, axis=reduce_axes, keepdims=True)
+        amax = a if amax is None else jnp.maximum(amax, a)
+    if amax is None:
+        raise ValueError("calibrate_scale: no batches provided")
+    return jnp.maximum(amax * margin, _TINY) / f.qmax

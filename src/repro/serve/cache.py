@@ -18,13 +18,23 @@ as long as it is live:
 This is the serving analogue of the paper's output-stationary accumulator
 management: state stays resident where it is used, and only the minimal
 panel (one request's rows) streams in or out on a lifecycle event.
+
+**Quantized K/V lanes** (``kv_format="int8"`` / an fp8 format name): the
+pool's attention caches become :class:`repro.quant.QuantKVCache` — 1-byte
+K/V values with fp32 per-slot, per-head scales. Scales are calibrated at
+*join* time from each request's prefilled K/V (inside the jit'd scatter),
+fixed for the request's lifetime, and the decode step dequantizes inside the
+fused attention. Per-slot cache memory drops ~4x vs fp32 lanes, so the same
+HBM budget admits proportionally more concurrent requests. Recurrent states
+(mamba conv/ssm, xlstm) stay full-width — they are rewritten wholesale every
+step, not appended-and-reread like KV history.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Dict, List
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -32,11 +42,19 @@ import jax.numpy as jnp
 from repro.configs.base import ArchConfig
 from repro.models import api as model_api
 from repro.models.attention import KVCache
+from repro.quant.kvcache import (
+    DEFAULT_KV_MARGIN,
+    QuantKVCache,
+    quantize_kv_rows,
+)
 
 __all__ = ["SlotPool", "init_slot_caches", "scatter_slots"]
 
 
-def init_slot_caches(cfg: ArchConfig, n_slots: int, max_len: int, dtype):
+def init_slot_caches(
+    cfg: ArchConfig, n_slots: int, max_len: int, dtype,
+    kv_format: Optional[str] = None,
+):
     """Pool-shaped decode caches: per-slot fill counters from step zero.
 
     Like ``api.init_state`` but (a) every stacked ``KVCache`` carries an
@@ -44,18 +62,36 @@ def init_slot_caches(cfg: ArchConfig, n_slots: int, max_len: int, dtype):
     (b) cache-less pattern positions hold the zero-size placeholder array the
     layer-scan threads through — so the pytree structure (and therefore the
     compiled decode step) is identical on step 1 and step 10 000.
+
+    ``kv_format`` (a :data:`repro.quant.FORMATS` name) narrows the attention
+    K/V lanes to that storage format with per-slot, per-head scales.
     """
     caches = model_api.init_state(cfg, n_slots, max_len, dtype)
+    lengths = jnp.zeros((cfg.n_periods, n_slots), jnp.int32)
     out = []
     for c in caches:
         if c is None:
             out.append(jnp.zeros((cfg.n_periods, 0), jnp.float32))
         elif isinstance(c, KVCache):
-            out.append(
-                c._replace(
-                    length=jnp.zeros((c.k.shape[0], n_slots), jnp.int32)
+            if kv_format is not None:
+                q = QuantKVCache.zeros(
+                    n_slots, max_len, cfg.n_kv, cfg.head_dim_, fmt=kv_format
                 )
-            )
+                out.append(
+                    QuantKVCache(
+                        k=jnp.broadcast_to(q.k[None], (cfg.n_periods,) + q.k.shape),
+                        v=jnp.broadcast_to(q.v[None], (cfg.n_periods,) + q.v.shape),
+                        k_scale=jnp.broadcast_to(
+                            q.k_scale[None], (cfg.n_periods,) + q.k_scale.shape
+                        ),
+                        v_scale=jnp.broadcast_to(
+                            q.v_scale[None], (cfg.n_periods,) + q.v_scale.shape
+                        ),
+                        length=lengths,
+                    )
+                )
+            else:
+                out.append(c._replace(length=lengths))
         else:
             out.append(c)
     return tuple(out)
@@ -75,6 +111,24 @@ def scatter_slots(pool_caches, prefill_caches, slots: jax.Array):
     for pc, fc in zip(pool_caches, prefill_caches):
         if pc is None or fc is None:
             out.append(pc)
+        elif isinstance(pc, QuantKVCache):
+            # Join-time calibration: per-(row, head) scales from the
+            # request's own prefilled K/V (amax over the prompt span, with
+            # headroom for decode-time values), then quantize and scatter.
+            # The scales land in the slot's scale sidecar and stay fixed
+            # until the next join overwrites the lane.
+            lb = fc.k.shape[2]
+            k_q, v_q, k_s, v_s = quantize_kv_rows(
+                fc.k, fc.v, pc.n_kv, fmt=pc.k.dtype, margin=DEFAULT_KV_MARGIN
+            )
+            out.append(
+                pc._replace(
+                    k=pc.k.at[:, slots, :lb].set(k_q, mode="drop"),
+                    v=pc.v.at[:, slots, :lb].set(v_q, mode="drop"),
+                    k_scale=pc.k_scale.at[:, slots].set(k_s, mode="drop"),
+                    v_scale=pc.v_scale.at[:, slots].set(v_s, mode="drop"),
+                )
+            )
         elif isinstance(pc, KVCache):
             lb = fc.k.shape[2]
             out.append(
@@ -115,16 +169,23 @@ class SlotPool:
 
     @classmethod
     def create(
-        cls, cfg: ArchConfig, n_slots: int, max_len: int, dtype=jnp.bfloat16
+        cls, cfg: ArchConfig, n_slots: int, max_len: int, dtype=jnp.bfloat16,
+        kv_format: Optional[str] = None,
     ) -> "SlotPool":
         return cls(
             cfg=cfg,
             n_slots=n_slots,
             max_len=max_len,
-            caches=init_slot_caches(cfg, n_slots, max_len, dtype),
+            caches=init_slot_caches(cfg, n_slots, max_len, dtype, kv_format),
             _free=list(range(n_slots)),
             _owner={},
         )
+
+    def kv_bytes_per_slot(self) -> float:
+        """K/V cache bytes held per slot (values + scale sidecars)."""
+        from repro.quant.kvcache import kv_bytes_per_slot
+
+        return kv_bytes_per_slot(self.caches)
 
     @property
     def n_free(self) -> int:

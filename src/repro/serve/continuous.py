@@ -55,6 +55,7 @@ class ServingReport:
     prefill_batches: int
     mean_occupancy: float  # mean active-slot fraction per decode step
     wall_time_s: float
+    kv_bytes_per_slot: float = 0.0  # K/V pool bytes per slot (+ quant scales)
 
     @property
     def tokens_per_sec(self) -> float:
@@ -85,6 +86,11 @@ class ContinuousEngine:
     temperature: float = 0.0
     eos_id: Optional[int] = None
     exact_buckets: Optional[bool] = None  # None = auto (exact iff recurrent)
+    # Narrow K/V lanes for the slot pool ("int8" / "fp8_e4m3" / "fp8_e5m2"):
+    # ~4x less cache memory per slot (vs fp32 lanes), so the same HBM budget
+    # admits proportionally more slots. Prefill stays full-precision; the
+    # join scatter calibrates per-slot scales and quantizes (see serve.cache).
+    kv_format: Optional[str] = None
 
     def __post_init__(self) -> None:
         cfg = self.cfg
@@ -168,8 +174,10 @@ class ContinuousEngine:
         for r in requests:
             sched.submit(r)
         pool = SlotPool.create(
-            self.cfg, self.n_slots, self.max_len, self.cache_dtype
+            self.cfg, self.n_slots, self.max_len, self.cache_dtype,
+            kv_format=self.kv_format,
         )
+        self._last_kv_bytes_per_slot = pool.kv_bytes_per_slot()
 
         b = self.n_slots
         tok = jnp.zeros((b, 1), jnp.int32)
@@ -278,6 +286,7 @@ class ContinuousEngine:
             prefill_batches=prefill_batches,
             mean_occupancy=(occupancy_acc / decode_steps) if decode_steps else 0.0,
             wall_time_s=0.0,  # stamped by timed_serve
+            kv_bytes_per_slot=self._last_kv_bytes_per_slot,
         )
 
     def timed_serve(self, requests: List[Request], **kw) -> ServingReport:

@@ -59,16 +59,23 @@ def make_train_step(
     *,
     donate: bool = True,
     jit: bool = True,
+    policy=None,
 ) -> Callable:
     """Returns jit'd ``(params, opt_state, batch) -> (params, opt_state, metrics)``.
 
     With ``cfg.grad_accum > 1`` the global batch's leading dim is split into
     microbatches scanned sequentially, accumulating fp32 grads — the
     activation-memory lever that fits grok-1's 1M-token steps.
+
+    ``policy`` (a backend name or :class:`repro.quant.PrecisionPolicy`)
+    selects per-role forward matmul precision. The fp32 master path is
+    untouched by any policy: gradients route through each backend's
+    registered full-precision grad backend, accumulation stays fp32, and the
+    optimizer moments/updates never see a quantized value.
     """
 
     def loss(params, batch):
-        return model_api.loss_fn(cfg, params, batch)
+        return model_api.loss_fn(cfg, params, batch, backend=policy)
 
     def step(params, opt_state, batch):
         n_micro = cfg.grad_accum
@@ -131,6 +138,7 @@ def train(
     init_key: Optional[jax.Array] = None,
     params: Any = None,
     log: Callable[[str], None] = print,
+    policy=None,
 ) -> TrainResult:
     """Run (or resume) training. ``batch_fn(step)`` must be deterministic."""
     if params is None:
@@ -157,7 +165,7 @@ def train(
             resumed_from = last
             log(f"[train] resumed from step {last}")
 
-    step_fn = make_train_step(cfg, opt_cfg)
+    step_fn = make_train_step(cfg, opt_cfg, policy=policy)
     wd = _Watchdog(loop.watchdog_factor)
     losses = []
     try:

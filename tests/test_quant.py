@@ -1,0 +1,364 @@
+"""Mixed-precision subsystem: quant numerics, registry behaviour, policy
+wiring, and quantized-KV serving agreement.
+
+Covers the contracts the quant package advertises:
+
+* quantize/dequantize round-trip error bounds per format;
+* q8 matmul error vs the fp32 ``ref.py`` contract, and bit-agreement between
+  ``xla_q8`` and the Pallas q8 kernel (int32 accumulation is exact, so the
+  two paths may differ only by fp32 scale-multiply rounding);
+* quantized backends resolve through the registry, degrade inside the
+  quantized family, and backpropagate through their full-precision
+  grad backend;
+* ``PrecisionPolicy`` role wiring through the model stack;
+* greedy-decode token agreement between fp32-KV and quantized-KV continuous
+  serving on the reduced test model (trained first — argmax agreement on an
+  untrained model measures dice rolls, not quantization).
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import quant
+from repro.kernels import ops
+from repro.kernels.ref import reference_matmul
+from repro.quant import (
+    PrecisionPolicy,
+    QuantKVCache,
+    mlp_q8_policy,
+    quantize,
+    quantize_kv,
+)
+
+
+# ---------------------------------------------------------------------------
+# quantize / dequantize round trips
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "fmt,rel_bound",
+    [
+        # int8: half a step of amax/127; fp8: half-ulp ~ 2^-(mantissa+1),
+        # asserted with a 2x cushion at 2^-mantissa of amax.
+        ("int8", 0.5 / 127.0),
+        ("fp8_e4m3", 2.0**-3),
+        ("fp8_e5m2", 2.0**-2),
+    ],
+)
+def test_roundtrip_error_bound(fmt, rel_bound):
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((48, 33)), jnp.float32)
+    qt = quantize(x, fmt)
+    err = jnp.max(jnp.abs(qt.dequantize() - x))
+    amax = jnp.max(jnp.abs(x))
+    assert float(err) <= float(amax) * rel_bound * 1.0001
+    assert qt.q.dtype == quant.FORMATS[fmt].dtype
+    assert qt.fmt.name == fmt
+
+
+def test_per_channel_beats_per_tensor_on_skewed_scales():
+    # A small-magnitude channel next to a large one: per-tensor scaling
+    # crushes the small channel into a handful of int8 steps; per-channel
+    # scaling gives every channel its own full range.
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((64, 8)), jnp.float32)
+    x = x * jnp.asarray([0.01, 0.1, 1, 10, 100, 0.5, 5, 50])[None, :]
+    err_t = jnp.abs(quantize(x, "int8").dequantize() - x)[:, 0].max()
+    err_c = jnp.abs(quantize(x, "int8", axis=1).dequantize() - x)[:, 0].max()
+    assert float(err_c) < float(err_t) / 10
+
+
+def test_calibrated_scale_covers_all_batches():
+    batches = [jnp.full((4, 4), v, jnp.float32) for v in (1.0, 3.0, 2.0)]
+    scale = quant.calibrate_scale(batches, "int8")
+    assert float(scale) == pytest.approx(3.0 / 127.0)
+    # margin leaves headroom
+    scale_m = quant.calibrate_scale(batches, "int8", margin=1.25)
+    assert float(scale_m) == pytest.approx(1.25 * 3.0 / 127.0)
+
+
+def test_zero_tensor_quantizes_to_zero():
+    x = jnp.zeros((8, 8), jnp.float32)
+    qt = quantize(x, "int8")
+    out = qt.dequantize()
+    assert np.all(np.isfinite(np.asarray(out)))
+    np.testing.assert_array_equal(np.asarray(out), 0.0)
+
+
+# ---------------------------------------------------------------------------
+# q8 matmul vs the fp32 reference contract
+# ---------------------------------------------------------------------------
+
+
+def _operands(m=96, k=128, n=64, seed=0):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((k, n)), jnp.float32)
+    return a, b
+
+
+def test_q8_matmul_error_vs_fp32_reference():
+    a, b = _operands()
+    want = reference_matmul(a, b)
+    got = ops.matmul(a, b, backend="xla_q8")
+    # Per-element error bound: |C_err| <= sum_k |a*db| + |da*b| + |da*db|
+    # ~ K * (amax*sb/2 + sa/2*bmax). Empirically ~1% of the column norms;
+    # assert a conservative 3% of the output's max magnitude.
+    tol = 0.03 * float(jnp.max(jnp.abs(want)))
+    assert float(jnp.max(jnp.abs(got - want))) < tol
+
+
+def test_pallas_q8_matches_xla_q8_bitwise_on_accumulator():
+    # int32 accumulation is associative -> both paths compute the same sums;
+    # only the fp32 scale multiply can round differently (allow 1 ulp-ish).
+    a, b = _operands(m=40, k=96, n=72, seed=3)
+    x = ops.matmul(a, b, backend="xla_q8")
+    p = ops.matmul(a, b, backend="pallas_q8_interpret")
+    np.testing.assert_allclose(np.asarray(x), np.asarray(p), rtol=1e-6, atol=1e-5)
+
+
+def test_q8_bias_rides_the_accumulator():
+    a, b = _operands(m=16, k=64, n=48, seed=4)
+    bias = jnp.asarray(np.random.default_rng(5).standard_normal(48), jnp.float32)
+    no_bias = ops.matmul(a, b, backend="xla_q8")
+    with_bias = ops.matmul(a, b, bias, backend="xla_q8")
+    np.testing.assert_allclose(
+        np.asarray(with_bias), np.asarray(no_bias + bias[None, :]), rtol=1e-6
+    )
+    pl = ops.matmul(a, b, bias, backend="pallas_q8_interpret")
+    np.testing.assert_allclose(
+        np.asarray(pl), np.asarray(with_bias), rtol=1e-6, atol=1e-5
+    )
+
+
+def test_q8_gradients_run_full_precision():
+    # The registry's grad_backend rule: backward of a q8 forward == backward
+    # of the fp32 path, bit for bit (same ops on the same saved residuals).
+    a, b = _operands(m=24, k=48, n=32, seed=6)
+    g_q = jax.grad(lambda a: ops.matmul(a, b, backend="xla_q8").sum())(a)
+    g_f = jax.grad(lambda a: ops.matmul(a, b, backend="xla").sum())(a)
+    np.testing.assert_array_equal(np.asarray(g_q), np.asarray(g_f))
+    assert ops.grad_backend_of("xla_q8") == "xla"
+    assert ops.grad_backend_of("pallas_q8") == "xla"
+    assert ops.grad_backend_of("xla") == "xla"
+
+
+# ---------------------------------------------------------------------------
+# registry behaviour
+# ---------------------------------------------------------------------------
+
+
+def _force_unavailable(monkeypatch, *names):
+    for name in names:
+        b = ops._REGISTRY[name]
+        monkeypatch.setitem(
+            ops._REGISTRY, name, dataclasses.replace(b, available=lambda: False)
+        )
+
+
+def test_quant_backends_registered_and_resolve():
+    for name in ("xla_q8", "pallas_q8", "pallas_q8_interpret"):
+        assert name in ops.registered_backends()
+    assert ops.resolve_backend("xla_q8") == "xla_q8"
+
+
+def test_pallas_q8_degrades_inside_the_quant_family(monkeypatch):
+    # An unavailable quantized backend must degrade to another QUANTIZED
+    # backend (never silently to full precision).
+    _force_unavailable(monkeypatch, "pallas_q8")
+    with pytest.warns(RuntimeWarning, match="degrading to 'pallas_q8_interpret'"):
+        assert ops.resolve_backend("pallas_q8") == "pallas_q8_interpret"
+    _force_unavailable(monkeypatch, "pallas_q8_interpret")
+    with pytest.warns(RuntimeWarning, match="degrading to 'xla_q8'"):
+        assert ops.resolve_backend("pallas_q8") == "xla_q8"
+
+
+def test_tile_selection_memo_is_bounded():
+    ops.clear_tile_cache()
+    try:
+        for i in range(ops._TILE_CACHE_CAP + 64):
+            ops._tile_for(8 * (i + 1), 128, 128, 4)
+        info = ops.tile_cache_info()
+        assert info.currsize <= ops._TILE_CACHE_CAP
+        assert info.maxsize == ops._TILE_CACHE_CAP
+    finally:
+        ops.clear_tile_cache()
+
+
+# ---------------------------------------------------------------------------
+# precision policy wiring
+# ---------------------------------------------------------------------------
+
+
+def test_policy_rejects_unknown_roles():
+    with pytest.raises(ValueError, match="unknown roles"):
+        PrecisionPolicy(rules={"flux_capacitor": "xla_q8"})
+
+
+def test_policy_role_resolution():
+    pol = mlp_q8_policy()
+    assert pol.backend_for("mlp") in ("xla_q8", "pallas_q8")
+    assert pol.backend_for("attn_qkv") is None  # attention stays full-width
+    assert pol.backend_for("router") is None  # routing stays full-width
+    table = pol.describe()
+    assert set(table) == set(quant.ROLES)
+
+
+def test_policy_through_model_loss_is_close_to_fp32():
+    from repro.configs import get_config
+    from repro.models import api
+
+    cfg = get_config("chatglm3-6b").reduced()
+    params = api.init_params(cfg, jax.random.key(0))
+    batch = {
+        "tokens": jnp.ones((2, 16), jnp.int32),
+        "labels": jnp.ones((2, 16), jnp.int32),
+    }
+    l_fp = float(api.loss_fn(cfg, params, batch))
+    l_q = float(api.loss_fn(cfg, params, batch, backend=mlp_q8_policy()))
+    assert abs(l_fp - l_q) < 0.05 * abs(l_fp) + 1e-3
+    # gradients flow (and stay fp32) through the policy path
+    g = jax.grad(lambda p: api.loss_fn(cfg, p, batch, backend=mlp_q8_policy()))(
+        params
+    )
+    assert all(np.all(np.isfinite(np.asarray(x))) for x in jax.tree.leaves(g))
+
+
+# ---------------------------------------------------------------------------
+# quantized KV cache
+# ---------------------------------------------------------------------------
+
+
+def test_quant_kv_roundtrip_error_bound():
+    from repro.models.attention import KVCache
+
+    rng = np.random.default_rng(0)
+    b, s, hkv, d = 3, 16, 2, 8
+    kv = KVCache(
+        k=jnp.asarray(rng.standard_normal((b, s, hkv * d)), jnp.float32),
+        v=jnp.asarray(rng.standard_normal((b, s, hkv * d)), jnp.float32),
+        length=jnp.full((b,), s, jnp.int32),
+    )
+    qkv = quantize_kv(kv, n_kv=hkv, margin=1.25)
+    assert isinstance(qkv, QuantKVCache)
+    assert qkv.k.dtype == jnp.int8
+    assert qkv.k_scale.shape == (b, hkv)
+    # per-(row, head) bound: margin * amax / 127 / 2 per element
+    for deq, orig, scale in (
+        (qkv.dequant_k(), kv.k, qkv.k_scale),
+        (qkv.dequant_v(), kv.v, qkv.v_scale),
+    ):
+        err = jnp.abs(deq - orig).reshape(b, s, hkv, d)
+        bound = (scale * 0.5)[:, None, :, None]
+        assert bool(jnp.all(err <= bound * 1.0001))
+
+
+def test_prefill_into_quant_cache_refuses():
+    # Prefill writes raw K/V; filling a QuantKVCache would int8-cast unscaled
+    # floats. The attention layer must refuse rather than corrupt silently.
+    from repro.models.attention import attention_apply, attention_init
+    from repro.models.layers import Initializer
+
+    params = attention_init(
+        jax.random.key(0), 32, 2, 2, 16, Initializer(dtype=jnp.float32)
+    )
+    x = jnp.zeros((1, 4, 32), jnp.float32)
+    qc = QuantKVCache.zeros(1, 8, 2, 16)
+    with pytest.raises(NotImplementedError, match="prefill into a QuantKVCache"):
+        attention_apply(params, x, n_heads=2, n_kv=2, head_dim=16, cache=qc)
+
+
+def test_q8_block_shape_is_sublane_aligned():
+    from repro.quant import q8_block_shape
+
+    for m in (8, 40, 100, 256, 1000):
+        bm, bn, bk = q8_block_shape(m, 256, 256)
+        assert bm % 32 == 0
+        assert bn % 128 == 0 and bk % 128 == 0
+
+
+def test_quant_kv_append_then_dequant():
+    qkv = QuantKVCache.zeros(2, 8, 2, 4)
+    qkv = qkv._replace(
+        k_scale=jnp.full((2, 2), 0.01, jnp.float32),
+        v_scale=jnp.full((2, 2), 0.01, jnp.float32),
+        length=jnp.zeros((2,), jnp.int32),
+    )
+    kf = jnp.full((2, 8), 0.5, jnp.float32)
+    kq, vq = qkv.quantize_rows(kf, -kf)
+    np.testing.assert_array_equal(np.asarray(kq), 50)
+    np.testing.assert_array_equal(np.asarray(vq), -50)
+
+
+def test_slot_pool_quant_bytes_ratio():
+    from repro.configs import get_config
+    from repro.serve.cache import SlotPool
+
+    cfg = get_config("chatglm3-6b").reduced()
+    fp = SlotPool.create(cfg, 4, 64, jnp.float32)
+    q = SlotPool.create(cfg, 4, 64, jnp.float32, kv_format="int8")
+    ratio = fp.kv_bytes_per_slot() / q.kv_bytes_per_slot()
+    assert ratio >= 3.5
+
+
+# ---------------------------------------------------------------------------
+# fp32-KV vs quantized-KV serving agreement (the subsystem end to end)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def trained_reduced_model():
+    import sys
+
+    sys.path.insert(0, "benchmarks")
+    try:
+        from quant_bench import trained_model
+    finally:
+        sys.path.pop(0)
+    from repro.configs import get_config
+
+    cfg = get_config("chatglm3-6b").reduced()
+    # seq_len covers every position the serving test decodes at (max 13+24).
+    params, loss = trained_model(cfg, steps=250, seed=0, seq_len=48)
+    assert loss < 0.5  # the model actually learned the task
+    return cfg, params
+
+
+@pytest.mark.slow
+def test_greedy_agreement_fp32_vs_quant_kv_serving(trained_reduced_model):
+    from repro.serve import ContinuousEngine
+    from repro.serve.scheduler import Request
+
+    cfg, params = trained_reduced_model
+    rng = np.random.default_rng(0)
+    trace = []
+    for rid, (plen, gen) in enumerate(
+        [(6, 8), (9, 16), (13, 12), (7, 24), (11, 8), (5, 16)]
+    ):
+        a, s = int(rng.integers(0, cfg.vocab)), int(rng.integers(1, 5))
+        trace.append(
+            Request(
+                rid=rid,
+                prompt=[(a + s * t) % cfg.vocab for t in range(plen)],
+                max_new_tokens=gen,
+            )
+        )
+    common = dict(
+        cfg=cfg, params=params, n_slots=3, max_len=64, cache_dtype=jnp.float32
+    )
+    rep_fp = ContinuousEngine(**common).serve(trace)
+    rep_q = ContinuousEngine(**common, kv_format="int8").serve(trace)
+    agree = total = 0
+    for rid in rep_fp.outputs:
+        a, b = rep_fp.outputs[rid], rep_q.outputs[rid]
+        assert len(a) == len(b)
+        total += len(a)
+        agree += sum(1 for x, y in zip(a, b) if x == y)
+    assert total >= 80
+    assert agree / total >= 0.99
+    assert rep_fp.kv_bytes_per_slot / rep_q.kv_bytes_per_slot >= 3.5
