@@ -9,9 +9,16 @@ Sections:
   same operands: max-abs error, dtype-aware bytes moved
   (:func:`repro.core.gemm_bytes` — int8 operands count 1 byte, scale
   sidecars included), achieved arithmetic intensity, wall time.
+* **grouped** — every grouped backend (``grouped_matmul``: the MoE-expert
+  shape family) vs the fp32 grouped reference: max-abs error, dtype-aware
+  bytes with per-group scale side-bands, intensity, wall time.
 * **policy** — the mlp-q8 :class:`PrecisionPolicy` on the trained reduced
   model: forward loss delta vs the all-fp32 reference (the accuracy price of
   quantizing exactly the MLP linears).
+* **moe** — quantized experts end to end: the reduced deepseek MoE trained
+  on the same cyclic task, ``PrecisionPolicy(moe="q8")`` loss delta and
+  greedy-decode token agreement (the policy now reaches the routed
+  per-expert grouped GEMMs).
 * **serving** — the PR 2 serving trace (same seeded generator, arrival
   pattern, prompt lengths and generation budgets as
   ``benchmarks/serving_bench.py``) through ``ContinuousEngine`` twice: fp32
@@ -74,6 +81,50 @@ def trained_model(cfg, *, steps: int, seed: int = 0, seq_len: int = 32):
     for i in range(steps):
         params, opt, loss = step(params, opt, batch(jax.random.key(100 + i)))
     return params, float(loss)
+
+
+def cyclic_prompt_batch(vocab: int, n_prompts: int, prompt_len: int, seed: int):
+    """[n_prompts, prompt_len] int32 prompts from the trained cyclic task."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    rng = np.random.default_rng(seed)
+    starts = rng.integers(0, vocab, size=n_prompts)
+    strides = rng.integers(1, 5, size=n_prompts)
+    return jnp.asarray(
+        (starts[:, None] + strides[:, None] * np.arange(prompt_len)[None, :])
+        % vocab,
+        jnp.int32,
+    )
+
+
+def greedy_decode(cfg, params, prompts, gen: int, backend=None):
+    """Greedy-decode ``gen`` tokens per prompt row through the policy-aware
+    prefill/decode path; returns [B, gen]. Shared by the MoE bench section
+    and the quantized-expert regression test (one agreement contract, one
+    decode loop)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.models import api
+
+    decode = jax.jit(
+        lambda params, tok, caches, pos: api.decode(
+            cfg, params, tok, caches, pos, backend=backend
+        )
+    )
+    logits, caches = api.prefill(
+        cfg, params, {"tokens": prompts}, max_len=prompts.shape[1] + gen + 1,
+        cache_dtype=jnp.float32, backend=backend,
+    )
+    tok = jnp.argmax(logits, -1)[:, None]
+    out = [tok]
+    pos = jnp.asarray(prompts.shape[1], jnp.int32)
+    for i in range(gen - 1):
+        logits, caches = decode(params, tok, caches, pos + i)
+        tok = jnp.argmax(logits, -1)[:, None]
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)
 
 
 def cyclic_prompts(trace, vocab: int, seed: int):
@@ -174,6 +225,112 @@ def bench_gemm(smoke: bool) -> List[Dict]:
                 }
             )
     return rows
+
+
+def bench_grouped(smoke: bool) -> List[Dict]:
+    """Every grouped backend vs the fp32 grouped reference: one launch for G
+    same-shape GEMMs (the MoE expert shape family), per-group q8 scales
+    counted as fp32 side-band bytes (G * (M + N) elements)."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import gemm_bytes, gemm_intensity
+    from repro.kernels import ops
+    from repro.kernels.ref import reference_grouped_matmul
+
+    shapes = [(4, 64, 128, 128)] if smoke else [(8, 128, 256, 128)]
+    rng = np.random.default_rng(0)
+    rows: List[Dict] = []
+    for g, m, k, n in shapes:
+        a = jnp.asarray(rng.standard_normal((g, m, k)), jnp.float32)
+        b = jnp.asarray(rng.standard_normal((g, k, n)), jnp.float32)
+        want = jax.jit(lambda a, b: reference_grouped_matmul(a, b))(a, b)
+        import warnings
+
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", RuntimeWarning)
+            resolved_pallas = ops.resolve_grouped_backend("pallas")
+            resolved_pallas_q8 = ops.resolve_grouped_backend("pallas_q8")
+        backends = ["xla", "xla_q8"]
+        for extra in (resolved_pallas, resolved_pallas_q8):
+            if extra not in backends:
+                backends.append(extra)
+        for backend in backends:
+            quantized = ops.family_of(backend) == "q8"
+            fn = jax.jit(
+                lambda a, b, _be=backend: ops.grouped_matmul(a, b, backend=_be)
+            )
+            out = fn(a, b)
+            out.block_until_ready()
+            t0 = time.perf_counter()
+            reps = 1 if "interpret" in backend else 5
+            for _ in range(reps):
+                fn(a, b).block_until_ready()
+            us = (time.perf_counter() - t0) / reps * 1e6
+            per_group = dict(
+                a_dtype=jnp.int8 if quantized else a.dtype,
+                b_dtype=jnp.int8 if quantized else b.dtype,
+                out_dtype=a.dtype,
+                scale_elems=(m + n) if quantized else 0,
+            )
+            rows.append(
+                {
+                    "backend": backend,
+                    "g": g, "m": m, "k": k, "n": n,
+                    "max_abs_err_vs_fp32": float(jnp.max(jnp.abs(out - want))),
+                    "bytes_moved": g * gemm_bytes(m, k, n, **per_group),
+                    "intensity_flops_per_byte": gemm_intensity(m, k, n, **per_group),
+                    "wall_us": us,
+                }
+            )
+    return rows
+
+
+def bench_moe(*, smoke: bool, train_steps: int, seed: int = 0) -> Dict:
+    """Quantized MoE experts end to end: train the reduced deepseek MoE on
+    the cyclic task, then compare the all-fp32 path against
+    ``PrecisionPolicy(moe="q8")`` — which now reaches the routed per-expert
+    grouped GEMMs, not just the shared-expert MLP — on forward loss and on
+    greedy decode agreement (prefill + step decode through the policy)."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.models import api
+    from repro.quant import PrecisionPolicy
+
+    cfg = get_config("deepseek-moe-16b").reduced()
+    params, final_loss = trained_model(
+        cfg, steps=train_steps, seed=seed, seq_len=48
+    )
+    pol = PrecisionPolicy(rules={"moe": "q8"}, name="moe-q8")
+
+    t = (11 + 3 * jnp.arange(33)[None, :]) % cfg.vocab
+    batch = {
+        "tokens": jnp.broadcast_to(t[:, :-1], (4, 32)).astype(jnp.int32),
+        "labels": jnp.broadcast_to(t[:, 1:], (4, 32)).astype(jnp.int32),
+    }
+    l_fp = float(api.loss_fn(cfg, params, batch))
+    l_q = float(api.loss_fn(cfg, params, batch, backend=pol))
+
+    n_prompts, gen = (4, 8) if smoke else (8, 16)
+    prompts = cyclic_prompt_batch(cfg.vocab, n_prompts, 12, seed)
+    got_fp = np.asarray(greedy_decode(cfg, params, prompts, gen))
+    got_q = np.asarray(greedy_decode(cfg, params, prompts, gen, backend=pol))
+    total = got_fp.size
+    agree = int((got_fp == got_q).sum())
+    return {
+        "arch": cfg.name,
+        "train_steps": train_steps,
+        "final_train_loss": final_loss,
+        "policy": pol.describe(),
+        "loss_fp32": l_fp,
+        "loss_quant": l_q,
+        "loss_abs_delta": abs(l_fp - l_q),
+        "greedy_agreement": agree / total if total else 0.0,
+        "compared_tokens": total,
+    }
 
 
 def bench_policy(cfg, params) -> Dict:
@@ -285,7 +442,12 @@ def main() -> None:
         "final_train_loss": final_loss,
         "formats": bench_formats(),
         "gemm": bench_gemm(args.smoke),
+        "grouped": bench_grouped(args.smoke),
         "policy": bench_policy(cfg, params),
+        "moe": bench_moe(
+            smoke=args.smoke, train_steps=max(args.train_steps * 2 // 3, 50),
+            seed=args.seed,
+        ),
         "serving": bench_serving(
             cfg, params, smoke=args.smoke, seed=args.seed,
             kv_format=args.kv_format,
@@ -302,7 +464,18 @@ def main() -> None:
               f"err={row['max_abs_err_vs_fp32']:.2e} "
               f"bytes={row['bytes_moved']:.3e} "
               f"AI={row['intensity_flops_per_byte']:.1f} fl/B")
+    for row in result["grouped"]:
+        print(f"  grouped {row['backend']:<18} {row['g']}x[{row['m']}x{row['k']}"
+              f"x{row['n']}] err={row['max_abs_err_vs_fp32']:.2e} "
+              f"bytes={row['bytes_moved']:.3e} "
+              f"AI={row['intensity_flops_per_byte']:.1f} fl/B")
     print(f"  policy loss delta: {result['policy']['loss_abs_delta']:.2e}")
+    mo = result["moe"]
+    print(f"  moe {mo['arch']}: trained {mo['train_steps']} steps "
+          f"(loss {mo['final_train_loss']:.3f}), "
+          f"q8-expert loss delta {mo['loss_abs_delta']:.2e}, "
+          f"greedy agreement {mo['greedy_agreement']:.4f} "
+          f"over {mo['compared_tokens']} tokens")
     print(f"  serving kv bytes/slot: fp32 {s['fp32']['kv_bytes_per_slot']:.0f} "
           f"-> {s['kv_format']} {s['quant']['kv_bytes_per_slot']:.0f} "
           f"({s['kv_bytes_ratio']:.2f}x smaller)")
@@ -315,6 +488,10 @@ def main() -> None:
     if s["greedy_agreement"] < 0.99:
         raise SystemExit(
             f"greedy-token agreement {s['greedy_agreement']:.4f} < 0.99"
+        )
+    if mo["greedy_agreement"] < 0.99:
+        raise SystemExit(
+            f"quantized-MoE greedy agreement {mo['greedy_agreement']:.4f} < 0.99"
         )
 
 

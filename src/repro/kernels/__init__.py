@@ -2,15 +2,19 @@
 
 * opope_gemm      — the paper's GEMM dataflow (VMEM-resident accumulator,
                     K-innermost panel streaming, C-preload epilogue).
+* opope_grouped   — the grouped/batched member of the same dataflow: one
+                    launch for G same-shape GEMMs (MoE expert FFNs).
 * opope_attention — flash attention with the same accumulator-resident
                     structure (beyond-paper, §Perf).
 * opope_scan      — state-resident chunked linear scan (mamba/xLSTM).
 * ref             — pure-jnp oracles for all of the above.
-* ops             — the backend-routed matmul every model layer calls.
+* ops             — the backend-routed matmul / grouped_matmul every model
+                    layer calls.
 """
 
 from . import ops, ref
 from .opope_gemm import opope_gemm
+from .opope_grouped import opope_gemm_grouped
 from .opope_attention import opope_attention, opope_attention_bhsd
 from .opope_scan import opope_chunked_scan
 
@@ -18,6 +22,7 @@ __all__ = [
     "ops",
     "ref",
     "opope_gemm",
+    "opope_gemm_grouped",
     "opope_attention",
     "opope_attention_bhsd",
     "opope_chunked_scan",

@@ -1,0 +1,179 @@
+"""Grouped O-POPE GEMM: one kernel launch for a whole family of same-shape
+GEMMs (MoE expert FFNs, multi-head projections folded per-head, LoRA branch
+stacks).
+
+``O[g] = A[g] @ B[g] (+ C[g])`` for ``g`` in ``0..G-1`` — the batched-GEMM
+shape family OpenGeMM (arXiv:2411.09543) identifies as the one that collapses
+utilization when it bypasses the tuned engine. The dataflow per group is
+exactly :func:`repro.kernels.opope_gemm.opope_gemm`:
+
+* the grid is ``(G, m, n, k)`` with ``k`` innermost/sequential — the group
+  axis is one more ``parallel`` grid dimension, so groups pipeline through
+  the same MXU schedule instead of launching G kernels;
+* one fp32 accumulator tile stays resident in VMEM scratch across the K loop
+  of each group; it is written back exactly once per ``(g, m, n)`` tile;
+* A/B panels stream under Mosaic's automatic multiple-buffering — while
+  group ``g`` finishes its last K step, the first panels of group ``g+1``
+  are already in flight (the paper's "pipeline is the buffer", now across
+  group boundaries too);
+* the optional C operand preloads the accumulator: a full ``[G, M, N]``
+  operand or a ``[G, N]`` per-group bias row broadcast down M at preload
+  (never materialized as ``[G, M, N]``).
+
+Because every group shares (M, K, N), tile selection is the plain
+:func:`repro.kernels.opope_gemm.default_block_shape` choice for one group's
+GEMM — the registry memoizes it per shape exactly like the 2-D path.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro import compat
+
+__all__ = ["opope_gemm_grouped"]
+
+
+def _grouped_kernel(a_ref, b_ref, o_ref, acc_ref, *, k_steps: int):
+    """One (g, m, n, k) grid step: rank-block_k update of group g's tile."""
+    k = pl.program_id(3)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        a_ref[0], b_ref[0], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == k_steps - 1)
+    def _writeback():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)[None]
+
+
+def _grouped_preload_kernel(a_ref, b_ref, c_ref, o_ref, acc_ref, *, k_steps: int):
+    """As :func:`_grouped_kernel` with the accumulator preloaded from C.
+
+    The C block is either a full (1, bm, bn) tile of group g or a (1, 1, bn)
+    per-group bias row broadcast down M at preload time.
+    """
+    k = pl.program_id(3)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.broadcast_to(
+            c_ref[0].astype(jnp.float32), acc_ref.shape
+        )
+
+    acc_ref[...] += jnp.dot(
+        a_ref[0], b_ref[0], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == k_steps - 1)
+    def _writeback():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)[None]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_m", "block_n", "block_k", "out_dtype", "interpret"),
+)
+def opope_gemm_grouped(
+    a: jax.Array,
+    b: jax.Array,
+    c: Optional[jax.Array] = None,
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 256,
+    out_dtype: Optional[jnp.dtype] = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """``O[g] = A[g] @ B[g] (+ C[g])``. a: [G, M, K], b: [G, K, N].
+
+    ``c`` is ``None``, a full ``[G, M, N]`` preload, or a ``[G, N]`` per-group
+    bias row. ``interpret=True`` runs the body in the Pallas interpreter (CPU
+    tests); on a real TPU the same call lowers through Mosaic.
+    """
+    if a.ndim != 3 or b.ndim != 3 or a.shape[0] != b.shape[0] or a.shape[2] != b.shape[1]:
+        raise ValueError(f"bad grouped GEMM shapes {a.shape} @ {b.shape}")
+    g, m, k = a.shape
+    _, _, n = b.shape
+    out_dtype = jnp.dtype(out_dtype or a.dtype)
+
+    bm, bn, bk = min(block_m, _rup(m, 8)), min(block_n, _rup(n, 128)), min(
+        block_k, _rup(k, 128)
+    )
+    mp, kp, np_ = _rup(m, bm), _rup(k, bk), _rup(n, bn)
+    a_p = _pad3(a, g, mp, kp)
+    b_p = _pad3(b, g, kp, np_)
+    k_steps = kp // bk
+
+    grid = (g, mp // bm, np_ // bn, k_steps)
+    in_specs = [
+        pl.BlockSpec((1, bm, bk), lambda gg, i, j, kk: (gg, i, kk)),
+        pl.BlockSpec((1, bk, bn), lambda gg, i, j, kk: (gg, kk, j)),
+    ]
+    operands = [a_p, b_p]
+    if c is not None:
+        if c.ndim == 2:
+            # [G, N] per-group bias rows: streamed as (1, 1, bn) blocks and
+            # broadcast into the accumulator at preload — O(G*N) HBM traffic
+            # instead of an O(G*M*N) materialized C operand.
+            if c.shape != (g, n):
+                raise ValueError(
+                    f"C preload shape {c.shape} != {(g, n)} or {(g, m, n)}"
+                )
+            in_specs.append(pl.BlockSpec((1, 1, bn), lambda gg, i, j, kk: (gg, 0, j)))
+            operands.append(_pad3(c[:, None, :], g, 1, np_))
+        else:
+            if c.shape != (g, m, n):
+                raise ValueError(
+                    f"C preload shape {c.shape} != {(g, n)} or {(g, m, n)}"
+                )
+            in_specs.append(pl.BlockSpec((1, bm, bn), lambda gg, i, j, kk: (gg, i, j)))
+            operands.append(_pad3(c, g, mp, np_))
+        kernel = functools.partial(_grouped_preload_kernel, k_steps=k_steps)
+    else:
+        kernel = functools.partial(_grouped_kernel, k_steps=k_steps)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, bm, bn), lambda gg, i, j, kk: (gg, i, j)),
+        out_shape=jax.ShapeDtypeStruct((g, mp, np_), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        compiler_params=compat.tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(*operands)
+    return out[:, :m, :n]
+
+
+def _rup(x: int, mult: int) -> int:
+    return mult * math.ceil(x / mult)
+
+
+def _pad3(x: jax.Array, d0: int, d1: int, d2: int, value=0) -> jax.Array:
+    """Zero-pad (or ``value``-pad: q8 scale operands pad with ones) a 3-D
+    operand up to (d0, d1, d2). Shared with the grouped q8 kernel."""
+    if x.shape == (d0, d1, d2):
+        return x
+    return jnp.pad(
+        x,
+        (
+            (0, d0 - x.shape[0]),
+            (0, d1 - x.shape[1]),
+            (0, d2 - x.shape[2]),
+        ),
+        constant_values=value,
+    )

@@ -38,6 +38,16 @@ its backward GEMMs on that backend instead — how the quantized paths encode
 the paper's "accuracy-sensitive tasks such as training still require
 higher-precision floating-point formats": forward may be q8, gradients are
 always full-precision fp32-accumulated.
+
+Each backend is a **family**: alongside the 2-D ``fn`` it may register a
+``grouped`` member (``[G, M, K] @ [G, K, N]`` — :func:`grouped_matmul`), so
+batched shape families (MoE expert FFNs) route through the same names,
+resolver, fallback chains and grad-backend rule as single GEMMs. Backends
+also declare a numerics ``family`` tag (``"fp"``/``"q8"``): a fallback chain
+may change the execution engine but must land on a terminal of the same
+family — degradation never silently changes quantization behaviour
+(asserted registry-wide by ``tests/test_backend_conformance.py`` and the CI
+introspection step).
 """
 
 from __future__ import annotations
@@ -51,18 +61,24 @@ import jax
 import jax.numpy as jnp
 
 from . import opope_gemm as _kern
+from . import opope_grouped as _gkern
 from . import ref as _ref
 
 __all__ = [
     "matmul",
+    "grouped_matmul",
     "linear",
     "default_backend",
     "set_default_backend",
     "register_backend",
     "resolve_backend",
+    "resolve_grouped_backend",
     "available_backends",
     "registered_backends",
+    "grouped_backends",
     "grad_backend_of",
+    "fallback_chain_of",
+    "family_of",
     "tile_cache_info",
     "clear_tile_cache",
 ]
@@ -76,6 +92,10 @@ _DEFAULT_BACKEND = "auto"
 # A backend is fn(a, b, c_or_None, out_dtype) -> [M, N] array with fp32
 # accumulation and a single final cast (the repo-wide numerics contract).
 BackendFn = Callable[[jax.Array, jax.Array, Optional[jax.Array], jnp.dtype], jax.Array]
+# The grouped member of a backend family: fn(a [G,M,K], b [G,K,N], c_or_None,
+# out_dtype) -> [G, M, N], same accumulation/cast contract per group. ``c``
+# is None, a full [G, M, N] preload, or a [G, N] per-group bias row.
+GroupedFn = Callable[[jax.Array, jax.Array, Optional[jax.Array], jnp.dtype], jax.Array]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -91,6 +111,19 @@ class _Backend:
     # Quantized backends set a full-precision grad backend — the paper's
     # "training still needs FP" rule, enforced at the registry.
     grad_backend: Optional[str] = None
+    # Grouped/batched GEMM implementation (None = this backend has no grouped
+    # member; grouped_matmul degrades along the fallback chain to one that
+    # does).
+    grouped: Optional[GroupedFn] = None
+    # Separate availability probe for the grouped member (None = the grouped
+    # member is available whenever the backend is). Per-member probing keeps
+    # a grouped-only lowering failure from disabling the 2-D matmul path:
+    # dense models keep their compiled kernels, only grouped_matmul degrades.
+    grouped_available: Optional[Callable[[], bool]] = None
+    # Numerics family ("fp" full-precision, "q8" int8-quantized, ...): the
+    # invariant a fallback chain must preserve — degradation may change the
+    # execution engine, never the numerics family.
+    family: str = "fp"
 
 
 _REGISTRY: Dict[str, _Backend] = {}
@@ -106,6 +139,9 @@ def register_backend(
     available: Union[bool, Callable[[], bool]] = True,
     fallback: Optional[Tuple[str, ...]] = None,
     grad_backend: Optional[str] = None,
+    grouped: Optional[GroupedFn] = None,
+    grouped_available: Optional[Union[bool, Callable[[], bool]]] = None,
+    family: str = "fp",
 ) -> None:
     """Register (or replace) a matmul backend.
 
@@ -113,14 +149,26 @@ def register_backend(
     resolution time (never at import — see :func:`_pallas_compiles`).
     ``fallback`` overrides the default degradation chain for this backend;
     ``grad_backend`` names the backend the custom_vjp backward GEMMs run on
-    (quantized backends point it at a full-precision path).
+    (quantized backends point it at a full-precision path). ``grouped`` is
+    the backend family's grouped/batched GEMM member (``[G,M,K] @ [G,K,N]``)
+    served by :func:`grouped_matmul`, with its own optional
+    ``grouped_available`` probe (default: available whenever the backend
+    is) so a grouped-only failure never disables the 2-D path; ``family``
+    names the numerics family (``"fp"``/``"q8"``) a degradation chain must
+    preserve.
     """
     if not callable(fn):
         raise TypeError(f"backend fn for {name!r} is not callable")
     probe = available if callable(available) else (lambda _a=bool(available): _a)
+    gprobe = (
+        grouped_available
+        if grouped_available is None or callable(grouped_available)
+        else (lambda _a=bool(grouped_available): _a)
+    )
     _REGISTRY[name] = _Backend(
         name, fn, probe, fallback=tuple(fallback) if fallback else None,
-        grad_backend=grad_backend,
+        grad_backend=grad_backend, grouped=grouped, grouped_available=gprobe,
+        family=family,
     )
 
 
@@ -132,9 +180,50 @@ def available_backends() -> List[str]:
     return [n for n, b in _REGISTRY.items() if _probe_ok(b)]
 
 
+def grouped_backends() -> List[str]:
+    """Names of registered backends that declare a grouped GEMM member
+    (regardless of the grouped probe's outcome on this platform)."""
+    _load_plugin_backends()
+    return [n for n, b in _REGISTRY.items() if b.grouped is not None]
+
+
+def fallback_chain_of(name: str) -> Tuple[str, ...]:
+    """The degradation chain a backend resolves along when unavailable."""
+    _load_plugin_backends()
+    b = _REGISTRY.get(name)
+    if b is None:
+        raise ValueError(
+            f"unknown matmul backend {name!r}; registered: {registered_backends()}"
+        )
+    return b.fallback or _FALLBACK_CHAIN
+
+
+def family_of(name: str) -> str:
+    """Numerics family of a backend ("fp", "q8"): what degradation preserves."""
+    _load_plugin_backends()
+    b = _REGISTRY.get(name)
+    if b is None:
+        raise ValueError(
+            f"unknown matmul backend {name!r}; registered: {registered_backends()}"
+        )
+    return b.family
+
+
 def _probe_ok(backend: _Backend) -> bool:
     try:
         return bool(backend.available())
+    except Exception:
+        return False
+
+
+def _grouped_ok(backend: _Backend) -> bool:
+    """Whether the backend's grouped member is usable (declared + probed)."""
+    if backend.grouped is None:
+        return False
+    if backend.grouped_available is None:
+        return True
+    try:
+        return bool(backend.grouped_available())
     except Exception:
         return False
 
@@ -154,6 +243,26 @@ def _pallas_compiles() -> bool:
         a = jax.ShapeDtypeStruct((8, 128), jnp.float32)
         b = jax.ShapeDtypeStruct((128, 128), jnp.float32)
         _kern.opope_gemm.lower(a, b, interpret=False).compile()
+        return True
+    except Exception:
+        return False
+
+
+@functools.lru_cache(maxsize=None)
+def _pallas_grouped_compiles() -> bool:
+    """Probe once whether the compiled grouped (G, m, n, k) grid lowers here.
+
+    A separate probe from :func:`_pallas_compiles` on purpose: a platform
+    where only the grouped grid fails keeps its compiled 2-D kernels for
+    every dense matmul and degrades ``grouped_matmul`` alone (with the
+    resolver's warning) instead of demoting the whole backend to ``xla``.
+    """
+    try:
+        if not _pallas_compiles():
+            return False
+        ag = jax.ShapeDtypeStruct((2, 8, 128), jnp.float32)
+        bg = jax.ShapeDtypeStruct((2, 128, 128), jnp.float32)
+        _gkern.opope_gemm_grouped.lower(ag, bg, interpret=False).compile()
         return True
     except Exception:
         return False
@@ -195,13 +304,40 @@ def _pallas_fn(interpret: bool) -> BackendFn:
     return run
 
 
+def _pallas_grouped_fn(interpret: bool) -> GroupedFn:
+    def run(a, b, c, out_dtype):
+        # Every group shares (M, K, N): tile selection is the single-group
+        # choice, through the same bounded memo as the 2-D path.
+        bm, bn, bk = _tile_for(
+            a.shape[1], a.shape[2], b.shape[2], jnp.dtype(a.dtype).itemsize
+        )
+        return _gkern.opope_gemm_grouped(
+            a, b, c,
+            block_m=bm, block_n=bn, block_k=bk,
+            out_dtype=out_dtype, interpret=interpret,
+        )
+
+    return run
+
+
 def _xla_fn(a, b, c, out_dtype):
     return _ref.reference_matmul(a, b, c, out_dtype=out_dtype)
 
 
-register_backend("pallas", _pallas_fn(interpret=False), available=_pallas_compiles)
-register_backend("pallas_interpret", _pallas_fn(interpret=True))
-register_backend("xla", _xla_fn)
+def _xla_grouped_fn(a, b, c, out_dtype):
+    return _ref.reference_grouped_matmul(a, b, c, out_dtype=out_dtype)
+
+
+register_backend(
+    "pallas", _pallas_fn(interpret=False), available=_pallas_compiles,
+    grouped=_pallas_grouped_fn(interpret=False),
+    grouped_available=_pallas_grouped_compiles,
+)
+register_backend(
+    "pallas_interpret", _pallas_fn(interpret=True),
+    grouped=_pallas_grouped_fn(interpret=True),
+)
+register_backend("xla", _xla_fn, grouped=_xla_grouped_fn)
 
 
 @functools.lru_cache(maxsize=None)
@@ -225,7 +361,9 @@ def resolve_backend(name: Optional[str] = None) -> str:
     ``None`` means the process default; ``"auto"`` picks ``pallas`` when the
     compiled path lowers here, else ``xla``. An unavailable explicit request
     degrades along the backend's fallback chain (default
-    ``pallas_interpret`` -> ``xla``) with a warning.
+    ``pallas_interpret`` -> ``xla``) with a warning — but only onto members
+    of the same numerics family: rather than silently change quantization
+    behaviour, resolution raises.
     """
     name = name or _DEFAULT_BACKEND
     if name == "auto":
@@ -244,7 +382,16 @@ def resolve_backend(name: Optional[str] = None) -> str:
         return name
     for fallback in backend.fallback or _FALLBACK_CHAIN:
         fb = _REGISTRY.get(fallback)
-        if fallback != name and fb is not None and _probe_ok(fb):
+        # The family guard makes "degradation never changes numerics" a
+        # runtime invariant, not just a registration convention: a backend
+        # that inherited the default (fp) chain can never land a q8 request
+        # on a full-precision engine — it raises instead.
+        if (
+            fallback != name
+            and fb is not None
+            and fb.family == backend.family
+            and _probe_ok(fb)
+        ):
             warnings.warn(
                 f"matmul backend {name!r} unavailable on this platform; "
                 f"degrading to {fallback!r}",
@@ -253,6 +400,44 @@ def resolve_backend(name: Optional[str] = None) -> str:
             )
             return fallback
     raise RuntimeError(f"no available matmul backend (requested {name!r})")
+
+
+def resolve_grouped_backend(name: Optional[str] = None) -> str:
+    """Resolve a backend request to one that has a grouped GEMM member.
+
+    The request first resolves exactly like :func:`resolve_backend`
+    (availability probes, fallback chains, the ``auto`` rule); if the
+    resolved backend declares no grouped implementation, resolution continues
+    along its fallback chain — with the same degradation warning — to the
+    first available backend that does. Chains preserve the numerics family,
+    so a grouped request never silently changes quantization behaviour.
+    """
+    resolved = resolve_backend(name)
+    backend = _REGISTRY[resolved]
+    if _grouped_ok(backend):
+        return resolved
+    for fallback in backend.fallback or _FALLBACK_CHAIN:
+        fb = _REGISTRY.get(fallback)
+        # Same family guard as resolve_backend: a q8 backend missing its
+        # grouped member raises rather than silently running grouped GEMMs
+        # full-precision through the default (fp) chain.
+        if (
+            fallback != resolved
+            and fb is not None
+            and _grouped_ok(fb)
+            and fb.family == backend.family
+            and _probe_ok(fb)
+        ):
+            warnings.warn(
+                f"matmul backend {resolved!r} has no usable grouped GEMM "
+                f"member; degrading to {fallback!r}",
+                RuntimeWarning,
+                stacklevel=2,
+            )
+            return fallback
+    raise RuntimeError(
+        f"no available grouped matmul backend (requested {name or resolved!r})"
+    )
 
 
 def grad_backend_of(name: str) -> str:
@@ -403,3 +588,112 @@ def linear(
     free — and is broadcast inside the backend, so no [M, N] copy of it is
     ever built (serving decode steps would otherwise pay O(M*N) per linear)."""
     return matmul(x, w, bias, backend=backend, out_dtype=out_dtype)
+
+
+# --------------------------------------------------------------------------
+# grouped matmul entry point (the batched-GEMM member of each backend family)
+# --------------------------------------------------------------------------
+
+
+def _grouped_impl(a, b, c, backend, out_dtype):
+    return _REGISTRY[backend].grouped(a, b, c, out_dtype)
+
+
+def _grouped_bwd_gemms(backend, res, g):
+    """dA[g] = dO[g] @ B[g]^T, dB[g] = A[g]^T @ dO[g] — two more grouped
+    GEMMs in the same dataflow, on the forward backend's grad backend (so a
+    quantized grouped forward backpropagates full-precision, like the 2-D
+    path)."""
+    a, b = res
+    backend = resolve_grouped_backend(grad_backend_of(backend))
+    da = _grouped_impl(g, b.transpose(0, 2, 1), None, backend, a.dtype)
+    db = _grouped_impl(a.transpose(0, 2, 1), g, None, backend, b.dtype)
+    return da, db
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def _grouped_nc(a, b, backend, out_dtype):
+    return _grouped_impl(a, b, None, backend, out_dtype)
+
+
+def _grouped_nc_fwd(a, b, backend, out_dtype):
+    return _grouped_impl(a, b, None, backend, out_dtype), (a, b)
+
+
+def _grouped_nc_bwd(backend, out_dtype, res, g):
+    return _grouped_bwd_gemms(backend, res, g)
+
+
+_grouped_nc.defvjp(_grouped_nc_fwd, _grouped_nc_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def _grouped_bias(a, b, bias, backend, out_dtype):
+    return _grouped_impl(a, b, bias, backend, out_dtype)
+
+
+def _grouped_bias_fwd(a, b, bias, backend, out_dtype):
+    return _grouped_impl(a, b, bias, backend, out_dtype), (a, b)
+
+
+def _grouped_bias_bwd(backend, out_dtype, res, g):
+    da, db = _grouped_bwd_gemms(backend, res, g)
+    # each group's bias row enters every accumulator row of that group once
+    return da, db, g.sum(axis=1)
+
+
+_grouped_bias.defvjp(_grouped_bias_fwd, _grouped_bias_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def _grouped_c(a, b, c, backend, out_dtype):
+    return _grouped_impl(a, b, c, backend, out_dtype)
+
+
+def _grouped_c_fwd(a, b, c, backend, out_dtype):
+    return _grouped_impl(a, b, c, backend, out_dtype), (a, b)
+
+
+def _grouped_c_bwd(backend, out_dtype, res, g):
+    da, db = _grouped_bwd_gemms(backend, res, g)
+    return da, db, g  # c enters the accumulator linearly
+
+
+_grouped_c.defvjp(_grouped_c_fwd, _grouped_c_bwd)
+
+
+def grouped_matmul(
+    a: jax.Array,
+    b: jax.Array,
+    c: Optional[jax.Array] = None,
+    *,
+    backend: Optional[str] = None,
+    out_dtype=None,
+) -> jax.Array:
+    """``O[g] = A[g] @ B[g] (+ C[g])``; a: [G, M, K], b: [G, K, N].
+
+    The grouped/batched-GEMM entry point of the backend registry — one
+    launch for a whole family of same-shape GEMMs (MoE expert FFNs run their
+    per-expert SwiGLU through here). Resolution, fallback chains, precision
+    policies and the ``grad_backend`` rule are shared with :func:`matmul`:
+    the same backend names select the grouped member of the same family, and
+    a quantized grouped forward backpropagates through full-precision
+    grouped GEMMs.
+
+    ``c`` is ``None``, a full ``[G, M, N]`` preload, or a ``[G, N]``
+    per-group bias row broadcast inside the backend at the accumulator
+    preload point (never materialized as ``[G, M, N]``).
+    """
+    if a.ndim != 3 or b.ndim != 3:
+        raise ValueError(
+            f"grouped_matmul wants a [G, M, K] @ [G, K, N]; got {a.shape} @ {b.shape}"
+        )
+    if a.shape[0] != b.shape[0] or a.shape[2] != b.shape[1]:
+        raise ValueError(f"bad grouped GEMM shapes {a.shape} @ {b.shape}")
+    out_dtype = jnp.dtype(out_dtype or a.dtype)
+    backend = resolve_grouped_backend(backend)
+    if c is None:
+        return _grouped_nc(a, b, backend, out_dtype)
+    if c.ndim == 2:
+        return _grouped_bias(a, b, c, backend, out_dtype)
+    return _grouped_c(a, b, c, backend, out_dtype)

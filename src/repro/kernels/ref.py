@@ -12,7 +12,12 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-__all__ = ["reference_matmul", "reference_attention", "reference_chunked_scan"]
+__all__ = [
+    "reference_matmul",
+    "reference_grouped_matmul",
+    "reference_attention",
+    "reference_chunked_scan",
+]
 
 
 def reference_matmul(
@@ -34,6 +39,31 @@ def reference_matmul(
     acc = jnp.dot(a, b, preferred_element_type=jnp.float32)
     if c is not None:
         acc = acc + c.astype(jnp.float32)
+    return acc.astype(out_dtype)
+
+
+def reference_grouped_matmul(
+    a: jax.Array,
+    b: jax.Array,
+    c: Optional[jax.Array] = None,
+    *,
+    out_dtype: Optional[jnp.dtype] = None,
+) -> jax.Array:
+    """Oracle for :func:`repro.kernels.opope_grouped.opope_gemm_grouped`.
+
+    ``O[g] = A[g] @ B[g] (+ C[g])`` with the same per-group contract as
+    :func:`reference_matmul`: multiply in the input format, accumulate in
+    fp32, optionally add the preloaded C operand (a full [G, M, N] tile or a
+    [G, N] per-group bias row broadcast at the preload point), cast once.
+    a: [G, M, K], b: [G, K, N].
+    """
+    out_dtype = out_dtype or a.dtype
+    acc = jax.lax.dot_general(
+        a, b, (((2,), (1,)), ((0,), (0,))), preferred_element_type=jnp.float32
+    )
+    if c is not None:
+        cf = c.astype(jnp.float32)
+        acc = acc + (cf[:, None, :] if c.ndim == 2 else cf)
     return acc.astype(out_dtype)
 
 

@@ -77,17 +77,22 @@ def init_state(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
 
 def prefill(
     cfg: ArchConfig, params, batch: Dict[str, jax.Array], max_len: int,
-    cache_dtype=jnp.bfloat16,
+    cache_dtype=jnp.bfloat16, *, backend=None,
 ) -> Tuple[jax.Array, Any]:
-    """Process the full prompt; return (last-token logits [B,V], caches)."""
+    """Process the full prompt; return (last-token logits [B,V], caches).
+
+    ``backend`` is a matmul backend name or a
+    :class:`repro.quant.policy.PrecisionPolicy` (role-resolved per layer) —
+    the serving-side entry points accept the same precision plumbing as
+    :func:`loss_fn`."""
     if cfg.family == "audio":
-        enc_out = encdec_mod.encode(params, batch["frames"], cfg)
+        enc_out = encdec_mod.encode(params, batch["frames"], cfg, backend=backend)
         caches = encdec_mod.init_decoder_caches(
             cfg, batch["tokens"].shape[0], max_len, cache_dtype
         )
         hidden, caches = encdec_mod.decoder_forward(
             params, batch["tokens"], cfg, enc_out=enc_out, caches=caches,
-            mode="prefill",
+            mode="prefill", backend=backend,
         )
         logits = jnp.einsum(
             "bd,vd->bv", hidden[:, -1], params["embed"]["table"],
@@ -102,19 +107,20 @@ def prefill(
         extra = vlm_mod.project_image(params, batch["patch_embeds"])
     hidden, caches, _ = tf_mod.lm_forward(
         params, batch["tokens"], cfg, mode="prefill", caches=caches,
-        extra_embeds=extra,
+        extra_embeds=extra, backend=backend,
     )
     logits = tf_mod.lm_logits(params, hidden[:, -1:], cfg)[:, 0]
     return logits, caches
 
 
 def decode(
-    cfg: ArchConfig, params, token: jax.Array, caches, pos: jax.Array
+    cfg: ArchConfig, params, token: jax.Array, caches, pos: jax.Array,
+    *, backend=None,
 ) -> Tuple[jax.Array, Any]:
     """One decode step. token: [B, 1] -> (logits [B, V], new caches)."""
     if cfg.family == "audio":
         hidden, caches = encdec_mod.decoder_forward(
-            params, token, cfg, caches=caches, mode="decode"
+            params, token, cfg, caches=caches, mode="decode", backend=backend
         )
         logits = jnp.einsum(
             "bd,vd->bv", hidden[:, 0], params["embed"]["table"],
@@ -124,7 +130,8 @@ def decode(
     b = token.shape[0]
     positions = jnp.broadcast_to(pos.astype(jnp.int32), (b, 1))
     hidden, caches, _ = tf_mod.lm_forward(
-        params, token, cfg, mode="decode", caches=caches, positions=positions
+        params, token, cfg, mode="decode", caches=caches, positions=positions,
+        backend=backend,
     )
     logits = tf_mod.lm_logits(params, hidden, cfg)[:, 0]
     return logits, caches
@@ -136,6 +143,8 @@ def prefill_bucketed(
     tokens: jax.Array,
     lengths: jax.Array,
     cache_dtype=jnp.bfloat16,
+    *,
+    backend=None,
 ) -> Tuple[jax.Array, Any]:
     """Prefill a right-padded prompt bucket: tokens [B, Lb], lengths [B].
 
@@ -156,7 +165,7 @@ def prefill_bucketed(
     b, lb = tokens.shape
     caches = tf_mod.init_caches(cfg, b, lb, cache_dtype)
     hidden, caches, _ = tf_mod.lm_forward(
-        params, tokens, cfg, mode="prefill", caches=caches
+        params, tokens, cfg, mode="prefill", caches=caches, backend=backend
     )
     last = hidden[jnp.arange(b), lengths.astype(jnp.int32) - 1]
     logits = tf_mod.lm_logits(params, last[:, None], cfg)[:, 0]
@@ -164,7 +173,8 @@ def prefill_bucketed(
 
 
 def decode_at(
-    cfg: ArchConfig, params, token: jax.Array, caches, pos: jax.Array
+    cfg: ArchConfig, params, token: jax.Array, caches, pos: jax.Array,
+    *, backend=None,
 ) -> Tuple[jax.Array, Any]:
     """Slot-indexed decode step: per-row positions. token [B,1], pos [B].
 
@@ -183,7 +193,7 @@ def decode_at(
     caches = _with_slot_lengths(caches, pos)
     hidden, caches, _ = tf_mod.lm_forward(
         params, token, cfg, mode="decode", caches=caches,
-        positions=pos[:, None],
+        positions=pos[:, None], backend=backend,
     )
     logits = tf_mod.lm_logits(params, hidden, cfg)[:, 0]
     return logits, caches

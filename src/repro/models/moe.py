@@ -14,6 +14,13 @@ Both honor capacity: assignments past ``capacity_factor * T * top_k / E`` per
 expert are dropped (standard token-dropping semantics). Expert weights are
 stacked [E, ...] so EP sharding is a single spec on axis 0 (or TP inside the
 expert when E doesn't divide the model axis — grok's E=8, DESIGN.md §4).
+
+The per-expert SwiGLU itself (:func:`_expert_ffn`) runs as **grouped O-POPE
+GEMMs** through the ``kernels.ops`` registry (``grouped_matmul``, expert axis
+= group axis): the hottest MoE compute honors ``backend=`` and
+``PrecisionPolicy`` role ``moe`` like every other matmul site, and its fp32
+accumulation/final-cast discipline lives in the backend, not in caller-side
+upcasts.
 """
 
 from __future__ import annotations
@@ -55,12 +62,26 @@ def moe_init(
     return p
 
 
-def _expert_ffn(p, xs: jax.Array) -> jax.Array:
-    """xs: [E, C, D] -> [E, C, D]; batched per-expert SwiGLU on stacked weights."""
-    gate = jnp.einsum("ecd,edf->ecf", xs, p["w_gate"])
-    up = jnp.einsum("ecd,edf->ecf", xs, p["w_up"])
+def _expert_ffn(
+    p, xs: jax.Array, *, backend=None, out_dtype=None
+) -> jax.Array:
+    """xs: [E, C, D] -> [E, C, D]; batched per-expert SwiGLU on stacked weights.
+
+    All three per-expert GEMMs run as grouped O-POPE GEMMs through the
+    backend registry (one launch per projection, the expert axis as the
+    group axis), so the hottest MoE compute honors ``backend=`` /
+    ``PrecisionPolicy`` role ``moe`` exactly like every dense matmul site.
+    ``backend`` arrives role-resolved from :func:`moe_apply`. ``out_dtype``
+    is the dtype of the final down-projection writeback — dispatch paths
+    that combine in fp32 request fp32 straight from the accumulator (single
+    final cast in the backend, not an upcast after the fact).
+    """
+    gate = ops.grouped_matmul(xs, p["w_gate"], backend=backend)
+    up = ops.grouped_matmul(xs, p["w_up"], backend=backend)
     h = jax.nn.silu(gate.astype(jnp.float32)).astype(xs.dtype) * up
-    return jnp.einsum("ecf,efd->ecd", h, p["w_down"])
+    return ops.grouped_matmul(
+        h, p["w_down"], backend=backend, out_dtype=out_dtype
+    )
 
 
 def router_load_balancing_loss(gates: jax.Array, expert_mask: jax.Array) -> jax.Array:
@@ -124,10 +145,13 @@ def moe_apply(
     vg = top_vals.reshape(n_groups, g, top_k)
     ig = top_idx.reshape(n_groups, g, top_k)
 
+    # The routed expert FFNs carry the "moe" policy role (the same role the
+    # shared-expert MLP uses below): one policy line quantizes all of them.
+    expert_be = role_backend(backend, "moe")
     if dispatch == "onehot":
-        y = _dispatch_onehot(params, xg, vg, ig, n_experts, capacity)
+        y = _dispatch_onehot(params, xg, vg, ig, n_experts, capacity, expert_be)
     elif dispatch == "sort":
-        y = _dispatch_sort(params, xg, vg, ig, n_experts, capacity)
+        y = _dispatch_sort(params, xg, vg, ig, n_experts, capacity, expert_be)
     else:
         raise ValueError(f"unknown MoE dispatch {dispatch!r}")
     y = y.reshape(t, d)
@@ -152,7 +176,7 @@ def _positions_in_expert(ig: jax.Array, n_experts: int) -> jax.Array:
     return (pos * ohf).sum(-1).reshape(gshape)  # [G, g, K]
 
 
-def _dispatch_onehot(params, xg, vg, ig, n_experts, capacity):
+def _dispatch_onehot(params, xg, vg, ig, n_experts, capacity, backend=None):
     """GShard one-hot dispatch/combine einsums (dense baseline).
 
     Every routing op is a GEMM on the O-POPE path — simple and fully static,
@@ -174,15 +198,17 @@ def _dispatch_onehot(params, xg, vg, ig, n_experts, capacity):
     )
     expert_in = jnp.einsum("gsec,gsd->gecd", disp, xg)
     e, c, d = n_experts, capacity, xg.shape[-1]
+    # The fp32 the combine einsum consumes comes straight from the expert
+    # GEMM's accumulator (out_dtype=fp32 at the writeback), not from an
+    # upcast of an already-rounded narrow output.
     expert_out = _expert_ffn(
-        params, expert_in.transpose(1, 0, 2, 3).reshape(e, -1, d)
-    ).reshape(e, -1, c, d).transpose(1, 0, 2, 3)  # [G,E,C,D]
-    return jnp.einsum("gsec,gecd->gsd", comb, expert_out.astype(jnp.float32)).astype(
-        xg.dtype
-    )
+        params, expert_in.transpose(1, 0, 2, 3).reshape(e, -1, d),
+        backend=backend, out_dtype=jnp.float32,
+    ).reshape(e, -1, c, d).transpose(1, 0, 2, 3)  # [G,E,C,D] fp32
+    return jnp.einsum("gsec,gecd->gsd", comb, expert_out).astype(xg.dtype)
 
 
-def _dispatch_sort(params, xg, vg, ig, n_experts, capacity):
+def _dispatch_sort(params, xg, vg, ig, n_experts, capacity, backend=None):
     """Per-group sort-scatter dispatch (beyond-paper optimized path).
 
     Routing is pure data movement (argsort + scatter + gather within each
@@ -212,18 +238,19 @@ def _dispatch_sort(params, xg, vg, ig, n_experts, capacity):
 
     expert_in = jax.vmap(scatter_group)(xg, tok_sorted, dest)  # [G, E*C, D]
     expert_in = expert_in.reshape(n_groups, n_experts, capacity, d)
+    # fp32 combine reads the expert GEMM's accumulator directly
+    # (out_dtype=fp32 at the writeback), as in the onehot path.
     expert_out = _expert_ffn(
-        params, expert_in.transpose(1, 0, 2, 3).reshape(n_experts, -1, d)
+        params, expert_in.transpose(1, 0, 2, 3).reshape(n_experts, -1, d),
+        backend=backend, out_dtype=jnp.float32,
     ).reshape(n_experts, n_groups, capacity, d).transpose(1, 0, 2, 3)
 
     def gather_group(out_g, dest_g, tok_g, w_g):
         flat = jnp.concatenate(
             [out_g.reshape(n_experts * capacity, d), jnp.zeros((1, d), out_g.dtype)]
         )
-        y_sorted = flat[dest_g] * w_g[:, None].astype(out_g.dtype)
-        return jnp.zeros((g, d), jnp.float32).at[tok_g].add(
-            y_sorted.astype(jnp.float32)
-        )
+        y_sorted = flat[dest_g] * w_g[:, None]
+        return jnp.zeros((g, d), jnp.float32).at[tok_g].add(y_sorted)
 
     y = jax.vmap(gather_group)(expert_out, dest, tok_sorted, w_sorted)
     return y.astype(xg.dtype)

@@ -27,7 +27,7 @@ from .kvcache import (
     quantize_kv,
     quantize_kv_rows,
 )
-from .pallas_q8 import opope_gemm_q8, q8_block_shape
+from .pallas_q8 import opope_gemm_q8, opope_gemm_q8_grouped, q8_block_shape
 from .policy import ROLES, PrecisionPolicy, mlp_q8_policy, preferred_q8_backend
 from .quantize import (
     FORMATS,
@@ -52,6 +52,7 @@ __all__ = [
     "quantize",
     "quantize_with_scale",
     "opope_gemm_q8",
+    "opope_gemm_q8_grouped",
     "q8_block_shape",
     "register_quant_backends",
     "PrecisionPolicy",

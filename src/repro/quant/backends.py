@@ -24,6 +24,12 @@ matmul runs full-precision fp32-accumulated GEMMs on the saved (unquantized)
 residuals. That is the paper's "training still requires higher-precision
 floating-point" rule, enforced structurally — no caller can accidentally
 backpropagate through int8.
+
+Each backend also registers its **grouped member** (``[G,M,K] @ [G,K,N]``,
+served by :func:`repro.kernels.ops.grouped_matmul`) with **per-group scales**
+(A per-(group, row), B per-(group, column)): quantization error inside group
+``g`` is bounded by group ``g``'s own amax, so one outlier expert in an MoE
+stack cannot crush every other expert's resolution.
 """
 
 from __future__ import annotations
@@ -37,7 +43,7 @@ import jax.numpy as jnp
 
 from repro.kernels import ops
 
-from .pallas_q8 import opope_gemm_q8, q8_block_shape
+from .pallas_q8 import opope_gemm_q8, opope_gemm_q8_grouped, q8_block_shape
 from .quantize import quantize
 
 __all__ = ["register_quant_backends"]
@@ -54,6 +60,20 @@ def _quantize_operands(a: jax.Array, b: jax.Array):
     return aq, bq
 
 
+def _quantize_grouped_operands(a: jax.Array, b: jax.Array):
+    """Per-group dynamic quantization of a grouped operand pair.
+
+    A [G, M, K] gets per-(group, row) scales [G, M, 1]; B [G, K, N] gets
+    per-(group, column) scales [G, 1, N] — the grouped generalization of the
+    2-D granularity: within each group the scale outer product still
+    factorizes out of the GEMM, and no amax is shared across groups (one
+    outlier expert must not crush every other expert's resolution).
+    """
+    aq = quantize(a, "int8", axis=(0, 1))  # scale [G, M, 1]
+    bq = quantize(b, "int8", axis=(0, 2))  # scale [G, 1, N]
+    return aq, bq
+
+
 def _xla_q8(a, b, c, out_dtype):
     aq, bq = _quantize_operands(a, b)
     acc = lax.dot_general(
@@ -66,11 +86,37 @@ def _xla_q8(a, b, c, out_dtype):
     return out.astype(out_dtype)
 
 
+def _xla_q8_grouped(a, b, c, out_dtype):
+    aq, bq = _quantize_grouped_operands(a, b)
+    acc = lax.dot_general(
+        aq.q, bq.q, (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.int32,
+    )
+    out = acc.astype(jnp.float32) * (aq.scale * bq.scale)
+    if c is not None:
+        cf = c.astype(jnp.float32)
+        out = out + (cf[:, None, :] if c.ndim == 2 else cf)
+    return out.astype(out_dtype)
+
+
 def _pallas_q8_fn(interpret: bool):
     def run(a, b, c, out_dtype):
         aq, bq = _quantize_operands(a, b)
         bm, bn, bk = q8_block_shape(a.shape[0], a.shape[1], b.shape[1])
         return opope_gemm_q8(
+            aq.q, aq.scale, bq.q, bq.scale, c,
+            block_m=bm, block_n=bn, block_k=bk,
+            out_dtype=out_dtype, interpret=interpret,
+        )
+
+    return run
+
+
+def _pallas_q8_grouped_fn(interpret: bool):
+    def run(a, b, c, out_dtype):
+        aq, bq = _quantize_grouped_operands(a, b)
+        bm, bn, bk = q8_block_shape(a.shape[1], a.shape[2], b.shape[2])
+        return opope_gemm_q8_grouped(
             aq.q, aq.scale, bq.q, bq.scale, c,
             block_m=bm, block_n=bn, block_k=bk,
             out_dtype=out_dtype, interpret=interpret,
@@ -95,21 +141,56 @@ def _pallas_q8_compiles() -> bool:
         return False
 
 
+@functools.lru_cache(maxsize=None)
+def _pallas_q8_grouped_compiles() -> bool:
+    """Probe the compiled grouped int8 grid separately (per-member
+    availability): a grouped-only lowering failure degrades grouped_matmul
+    along the q8 chain without demoting the 2-D pallas_q8 member."""
+    try:
+        if not _pallas_q8_compiles():
+            return False
+        ag = jnp.zeros((2, 32, 128), jnp.int8)
+        sag = jnp.ones((2, 32, 1), jnp.float32)
+        bg = jnp.zeros((2, 128, 128), jnp.int8)
+        sbg = jnp.ones((2, 1, 128), jnp.float32)
+        opope_gemm_q8_grouped.lower(ag, sag, bg, sbg, interpret=False).compile()
+        return True
+    except Exception:
+        return False
+
+
 def register_quant_backends() -> None:
-    """Register (or re-register) the quantized backends. Idempotent."""
-    ops.register_backend("xla_q8", _xla_q8, grad_backend="xla")
+    """Register (or re-register) the quantized backends. Idempotent.
+
+    Every member declares ``family="q8"`` and a fallback chain that stays
+    inside the family (``xla_q8`` — the always-available terminal — falls
+    back to the interpreter q8 kernel, never to a full-precision path), plus
+    a grouped GEMM member with per-group scales.
+    """
+    ops.register_backend(
+        "xla_q8", _xla_q8,
+        fallback=("pallas_q8_interpret",),
+        grad_backend="xla",
+        grouped=_xla_q8_grouped,
+        family="q8",
+    )
     ops.register_backend(
         "pallas_q8",
         _pallas_q8_fn(interpret=False),
         available=_pallas_q8_compiles,
         fallback=("pallas_q8_interpret", "xla_q8"),
         grad_backend="xla",
+        grouped=_pallas_q8_grouped_fn(interpret=False),
+        grouped_available=_pallas_q8_grouped_compiles,
+        family="q8",
     )
     ops.register_backend(
         "pallas_q8_interpret",
         _pallas_q8_fn(interpret=True),
         fallback=("xla_q8",),
         grad_backend="xla",
+        grouped=_pallas_q8_grouped_fn(interpret=True),
+        family="q8",
     )
 
 

@@ -32,8 +32,9 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro import compat
+from repro.kernels.opope_grouped import _pad3
 
-__all__ = ["opope_gemm_q8", "q8_block_shape"]
+__all__ = ["opope_gemm_q8", "opope_gemm_q8_grouped", "q8_block_shape"]
 
 
 def _q8_kernel(aq_ref, as_ref, bq_ref, bs_ref, o_ref, acc_ref, *, k_steps: int):
@@ -181,6 +182,148 @@ def opope_gemm_q8(
         interpret=interpret,
     )(*operands)
     return out[:m, :n]
+
+
+def _q8_grouped_kernel(
+    aq_ref, as_ref, bq_ref, bs_ref, o_ref, acc_ref, *, k_steps: int
+):
+    """One (g, m, n, k) grid step: int8 panel update of group g's int32 tile.
+
+    Scales are per-group (rank-1 outer product within each group) — the
+    dequant multiply at writeback uses only group g's rows/columns, so no
+    amax is ever shared across a group boundary.
+    """
+    k = pl.program_id(3)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        aq_ref[0], bq_ref[0], preferred_element_type=jnp.int32
+    )
+
+    @pl.when(k == k_steps - 1)
+    def _writeback():
+        scaled = acc_ref[...].astype(jnp.float32) * (as_ref[0] * bs_ref[0])
+        o_ref[...] = scaled.astype(o_ref.dtype)[None]
+
+
+def _q8_grouped_preload_kernel(
+    aq_ref, as_ref, bq_ref, bs_ref, c_ref, o_ref, acc_ref, *, k_steps: int
+):
+    """As :func:`_q8_grouped_kernel` with group g's C operand fused at the
+    writeback boundary (full (1, bm, bn) tile or (1, 1, bn) bias row)."""
+    k = pl.program_id(3)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        aq_ref[0], bq_ref[0], preferred_element_type=jnp.int32
+    )
+
+    @pl.when(k == k_steps - 1)
+    def _writeback():
+        scaled = acc_ref[...].astype(jnp.float32) * (as_ref[0] * bs_ref[0])
+        scaled = scaled + jnp.broadcast_to(
+            c_ref[0].astype(jnp.float32), scaled.shape
+        )
+        o_ref[...] = scaled.astype(o_ref.dtype)[None]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_m", "block_n", "block_k", "out_dtype", "interpret"),
+)
+def opope_gemm_q8_grouped(
+    a_q: jax.Array,
+    a_scale: jax.Array,
+    b_q: jax.Array,
+    b_scale: jax.Array,
+    c: Optional[jax.Array] = None,
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 256,
+    out_dtype: Optional[jnp.dtype] = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """``O[g] = (a_q[g] @ b_q[g]) * (a_scale[g] * b_scale[g]) (+ C[g])``.
+
+    a_q: [G, M, K] int8 with per-(group, row) scales a_scale [G, M, 1] (fp32);
+    b_q: [G, K, N] int8 with per-(group, column) scales b_scale [G, 1, N].
+    ``c`` is ``None``, a full ``[G, M, N]`` operand, or a ``[G, N]``
+    per-group bias row. The grid is ``(G, m, n, k)`` with ``k`` innermost —
+    the grouped analogue of :func:`opope_gemm_q8` with an int32 resident
+    accumulator per (g, m, n) tile.
+    """
+    if a_q.ndim != 3 or b_q.ndim != 3 or a_q.shape[0] != b_q.shape[0] \
+            or a_q.shape[2] != b_q.shape[1]:
+        raise ValueError(f"bad grouped GEMM shapes {a_q.shape} @ {b_q.shape}")
+    g, m, k = a_q.shape
+    _, _, n = b_q.shape
+    if a_scale.shape != (g, m, 1):
+        raise ValueError(f"a_scale shape {a_scale.shape} != {(g, m, 1)}")
+    if b_scale.shape != (g, 1, n):
+        raise ValueError(f"b_scale shape {b_scale.shape} != {(g, 1, n)}")
+    out_dtype = jnp.dtype(out_dtype or jnp.float32)
+
+    bm = _rup(min(block_m, _rup(m, 32)), 32)
+    bn = min(block_n, _rup(n, 128))
+    bk = min(block_k, _rup(k, 128))
+    mp, kp, np_ = _rup(m, bm), _rup(k, bk), _rup(n, bn)
+    a_p = _pad3(a_q, g, mp, kp)
+    b_p = _pad3(b_q, g, kp, np_)
+    as_p = _pad3(a_scale.astype(jnp.float32), g, mp, 1, value=1.0)
+    bs_p = _pad3(b_scale.astype(jnp.float32), g, 1, np_, value=1.0)
+    k_steps = kp // bk
+
+    grid = (g, mp // bm, np_ // bn, k_steps)
+    in_specs = [
+        pl.BlockSpec((1, bm, bk), lambda gg, i, j, kk: (gg, i, kk)),
+        pl.BlockSpec((1, bm, 1), lambda gg, i, j, kk: (gg, i, 0)),
+        pl.BlockSpec((1, bk, bn), lambda gg, i, j, kk: (gg, kk, j)),
+        pl.BlockSpec((1, 1, bn), lambda gg, i, j, kk: (gg, 0, j)),
+    ]
+    operands = [a_p, as_p, b_p, bs_p]
+    if c is not None:
+        if c.ndim == 2:
+            if c.shape != (g, n):
+                raise ValueError(
+                    f"C preload shape {c.shape} != {(g, n)} or {(g, m, n)}"
+                )
+            in_specs.append(
+                pl.BlockSpec((1, 1, bn), lambda gg, i, j, kk: (gg, 0, j))
+            )
+            operands.append(_pad3(c[:, None, :].astype(jnp.float32), g, 1, np_))
+        else:
+            if c.shape != (g, m, n):
+                raise ValueError(
+                    f"C preload shape {c.shape} != {(g, n)} or {(g, m, n)}"
+                )
+            in_specs.append(
+                pl.BlockSpec((1, bm, bn), lambda gg, i, j, kk: (gg, i, j))
+            )
+            operands.append(_pad3(c.astype(jnp.float32), g, mp, np_))
+        kernel = functools.partial(_q8_grouped_preload_kernel, k_steps=k_steps)
+    else:
+        kernel = functools.partial(_q8_grouped_kernel, k_steps=k_steps)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, bm, bn), lambda gg, i, j, kk: (gg, i, j)),
+        out_shape=jax.ShapeDtypeStruct((g, mp, np_), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        compiler_params=compat.tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(*operands)
+    return out[:, :m, :n]
 
 
 def _rup(x: int, mult: int) -> int:

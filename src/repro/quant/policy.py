@@ -11,9 +11,9 @@ role            matmul sites
 ``attn_qkv``    attention Q/K/V projections
 ``attn_out``    attention output projection
 ``mlp``         dense MLP up/gate/down projections
-``moe``         the MoE shared-expert MLP (routed expert FFNs batch their
-                per-expert GEMMs as einsums outside the registry and stay
-                full-precision — ROADMAP open item)
+``moe``         all MoE expert compute: the routed per-expert SwiGLU (three
+                grouped GEMMs through ``ops.grouped_matmul`` — per-group
+                scales when quantized) and the shared-expert MLP
 ``router``      MoE router logits (routing decisions are accuracy-critical)
 ``mixer``       mamba / xLSTM in/out projections
 ==============  ============================================================
@@ -91,8 +91,9 @@ class PrecisionPolicy:
 
 
 def mlp_q8_policy(*, moe: bool = True) -> PrecisionPolicy:
-    """The paper's serving-side split: MLP GEMMs (and the MoE shared-expert
-    MLP) quantize; attention / router / mixers / logits stay full-precision,
+    """The paper's serving-side split: MLP GEMMs (and, with ``moe=True``, the
+    routed expert FFNs plus the shared-expert MLP — the whole ``moe`` role)
+    quantize; attention / router / mixers / logits stay full-precision,
     gradients are fp32 by registry rule."""
     rules: Dict[str, Optional[str]] = {"mlp": "q8"}
     if moe:

@@ -25,7 +25,9 @@ jits, scans, and donates like any other cache state.
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterable, NamedTuple, Optional, Union
+from typing import Iterable, NamedTuple, Optional, Tuple, Union
+
+Axes = Union[int, Tuple[int, ...], None]
 
 import jax
 import jax.numpy as jnp
@@ -114,23 +116,31 @@ class QuantizedTensor(NamedTuple):
         )
 
 
+def _keep_axes(ndim: int, axis: Axes) -> Tuple[int, ...]:
+    """Normalize ``axis`` (int or tuple of ints to KEEP) to reduce axes."""
+    keep = {a % ndim for a in ((axis,) if isinstance(axis, int) else axis)}
+    return tuple(i for i in range(ndim) if i not in keep)
+
+
 def amax_scale(
     x: jax.Array, fmt: Union[str, QuantFormat] = "int8",
-    axis: Optional[int] = None,
+    axis: Axes = None,
 ) -> jax.Array:
     """Symmetric scale mapping the observed amax onto the format's qmax.
 
     ``axis=None`` gives a per-tensor scalar; an integer axis keeps that axis
     (per-channel), reducing over all others with keepdims so the scale
-    broadcasts against ``x``.
+    broadcasts against ``x``. A tuple keeps several axes — grouped operands
+    use ``axis=(0, 1)`` on an ``[G, M, K]`` stack for per-(group, row)
+    scales, i.e. per-group quantization that never shares an amax across
+    group boundaries.
     """
     f = format_of(fmt)
     xf = jnp.abs(x.astype(jnp.float32))
     if axis is None:
         amax = jnp.max(xf)
     else:
-        reduce_axes = tuple(i for i in range(x.ndim) if i != axis % x.ndim)
-        amax = jnp.max(xf, axis=reduce_axes, keepdims=True)
+        amax = jnp.max(xf, axis=_keep_axes(x.ndim, axis), keepdims=True)
     return jnp.maximum(amax, _TINY) / f.qmax
 
 
@@ -147,9 +157,12 @@ def quantize(
     x: jax.Array,
     fmt: Union[str, QuantFormat] = "int8",
     *,
-    axis: Optional[int] = None,
+    axis: Axes = None,
 ) -> QuantizedTensor:
-    """Dynamic symmetric quantization (scale from this tensor's own amax)."""
+    """Dynamic symmetric quantization (scale from this tensor's own amax).
+
+    ``axis`` is the axis (or tuple of axes) the scale KEEPS — see
+    :func:`amax_scale`."""
     return quantize_with_scale(x, amax_scale(x, fmt, axis=axis), fmt)
 
 
@@ -161,7 +174,7 @@ def calibrate_scale(
     batches: Iterable[jax.Array],
     fmt: Union[str, QuantFormat] = "int8",
     *,
-    axis: Optional[int] = None,
+    axis: Axes = None,
     margin: float = 1.0,
 ) -> jax.Array:
     """Scale from the running amax over sample batches (static quantization).
@@ -177,8 +190,7 @@ def calibrate_scale(
         if axis is None:
             a = jnp.max(xf)
         else:
-            reduce_axes = tuple(i for i in range(xf.ndim) if i != axis % xf.ndim)
-            a = jnp.max(xf, axis=reduce_axes, keepdims=True)
+            a = jnp.max(xf, axis=_keep_axes(xf.ndim, axis), keepdims=True)
         amax = a if amax is None else jnp.maximum(amax, a)
     if amax is None:
         raise ValueError("calibrate_scale: no batches provided")

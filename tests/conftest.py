@@ -6,3 +6,16 @@ import sys
 os.environ.setdefault("XLA_FLAGS", "--xla_cpu_multi_thread_eigen=false")
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+_BENCHMARKS_DIR = os.path.join(os.path.dirname(__file__), "..", "benchmarks")
+
+
+def import_quant_bench():
+    """Import benchmarks/quant_bench.py (a plain dir, not a package): shared
+    by the tests that reuse its trained-model / greedy-decode helpers."""
+    sys.path.insert(0, _BENCHMARKS_DIR)
+    try:
+        import quant_bench
+    finally:
+        sys.path.pop(0)
+    return quant_bench

@@ -1,0 +1,293 @@
+"""Registry-wide backend conformance suite.
+
+One parametrized contract, asserted for *every* backend in the registry
+(quant plugins included; unavailable backends skip instead of failing):
+
+* **fp32 accumulation vs ref.py** — output matches the
+  :mod:`repro.kernels.ref` oracle; full-precision backends to reassociation
+  noise, q8 backends to the per-row/column scale bound.
+* **single final cast** — requesting a narrow ``out_dtype`` equals computing
+  the fp32 result and casting once (bitwise: same accumulator, one cast).
+* **bias-in-backend** — the [N] bias row rides the accumulator
+  preload/writeback, equal to a post-GEMM add in fp32.
+* **custom_vjp gradients** — backward matches the XLA reference gradients;
+  exactly for backends with a full-precision ``grad_backend``, to tolerance
+  for backends that run their own backward GEMMs.
+* **fallback-chain degradation** — an unavailable backend degrades with the
+  RuntimeWarning and lands inside its own numerics family; every declared
+  chain terminates at a family-preserving member.
+* **grouped member** — ``grouped_matmul`` on the same name equals stacked
+  per-group ``matmul`` calls (same family, same contract), gradients
+  included.
+
+New backends inherit the whole suite by registration: the parametrization
+iterates the registry at collection time.
+"""
+
+import dataclasses
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops
+from repro.kernels.ref import reference_grouped_matmul, reference_matmul
+
+# Quant backends register through the lazy plugin import; force it so the
+# parametrization below sees the whole registry.
+ops._load_plugin_backends()
+ALL_BACKENDS = sorted(ops.registered_backends())
+GROUPED_BACKENDS = sorted(ops.grouped_backends())
+
+
+def _available_or_skip(name: str) -> None:
+    if not ops._probe_ok(ops._REGISTRY[name]):
+        pytest.skip(f"backend {name!r} unavailable on this platform")
+
+
+def _operands(m=48, k=96, n=72, seed=0):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((k, n)), jnp.float32)
+    return a, b
+
+
+def _grouped_operands(g=3, m=24, k=64, n=40, seed=0):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.standard_normal((g, m, k)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((g, k, n)), jnp.float32)
+    return a, b
+
+
+def _tolerance(name: str, want) -> float:
+    """Contract tolerance: reassociation noise for fp, scale bound for q8."""
+    if ops.family_of(name) == "q8":
+        # |C_err| <~ K * (amax_a*sb/2 + sa/2*amax_b); 3% of the output's max
+        # magnitude is the same conservative envelope test_quant asserts.
+        return 0.03 * float(jnp.max(jnp.abs(want)))
+    return 1e-4 * float(jnp.max(jnp.abs(want))) + 1e-5
+
+
+# ---------------------------------------------------------------------------
+# the shared numerics contract
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ALL_BACKENDS)
+def test_matches_reference_contract(name):
+    _available_or_skip(name)
+    a, b = _operands()
+    want = reference_matmul(a, b)
+    got = ops.matmul(a, b, backend=name)
+    assert got.shape == want.shape and got.dtype == want.dtype
+    assert float(jnp.max(jnp.abs(got - want))) <= _tolerance(name, want)
+
+
+@pytest.mark.parametrize("name", ALL_BACKENDS)
+def test_single_final_cast(name):
+    # Narrow output == fp32 output cast once: accumulation never happens in
+    # the narrow dtype, and no backend casts twice.
+    _available_or_skip(name)
+    a, b = _operands(seed=1)
+    wide = ops.matmul(a, b, backend=name, out_dtype=jnp.float32)
+    narrow = ops.matmul(a, b, backend=name, out_dtype=jnp.bfloat16)
+    assert narrow.dtype == jnp.bfloat16
+    np.testing.assert_array_equal(
+        np.asarray(narrow), np.asarray(wide.astype(jnp.bfloat16))
+    )
+
+
+@pytest.mark.parametrize("name", ALL_BACKENDS)
+def test_bias_rides_the_backend(name):
+    _available_or_skip(name)
+    a, b = _operands(seed=2)
+    bias = jnp.asarray(
+        np.random.default_rng(3).standard_normal(b.shape[1]), jnp.float32
+    )
+    no_bias = ops.matmul(a, b, backend=name)
+    with_bias = ops.matmul(a, b, bias, backend=name)
+    np.testing.assert_allclose(
+        np.asarray(with_bias), np.asarray(no_bias + bias[None, :]),
+        rtol=1e-6, atol=1e-6,
+    )
+
+
+@pytest.mark.parametrize("name", ALL_BACKENDS)
+def test_custom_vjp_gradients(name):
+    _available_or_skip(name)
+    a, b = _operands(m=24, k=48, n=32, seed=4)
+
+    # sum() makes the cotangent all-ones: the backward GEMMs see the same
+    # cotangent on every backend, so the comparison isolates the backward
+    # path itself (quantized forwards run it on their fp32 grad backend).
+    da, db = jax.grad(
+        lambda a, b: ops.matmul(a, b, backend=name).sum(), argnums=(0, 1)
+    )(a, b)
+    da_ref, db_ref = jax.grad(
+        lambda a, b: reference_matmul(a, b).sum(), argnums=(0, 1)
+    )(a, b)
+    # fp32-accumulated backward on every backend: reassociation noise only.
+    np.testing.assert_allclose(np.asarray(da), np.asarray(da_ref), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(db), np.asarray(db_ref), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("name", ALL_BACKENDS)
+def test_grad_backend_is_full_precision_for_q8(name):
+    if ops.family_of(name) != "q8":
+        pytest.skip("fp backend: backward runs on itself by design")
+    gb = ops.grad_backend_of(name)
+    assert ops.family_of(gb) == "fp", (
+        f"{name} backpropagates through {gb} ({ops.family_of(gb)}): gradients "
+        f"must stay full-precision by registry rule"
+    )
+
+
+# ---------------------------------------------------------------------------
+# fallback chains
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ALL_BACKENDS)
+def test_fallback_chain_declared_and_family_preserving(name):
+    chain = ops.fallback_chain_of(name)
+    assert chain, f"{name} declares no fallback chain"
+    registered = [fb for fb in chain if fb in ops.registered_backends()]
+    assert registered, f"{name} fallback chain {chain} has no registered member"
+    terminal = registered[-1]
+    assert ops.family_of(terminal) == ops.family_of(name), (
+        f"{name} ({ops.family_of(name)}) degrades to terminal {terminal} "
+        f"({ops.family_of(terminal)}): degradation must preserve the "
+        f"numerics family"
+    )
+
+
+@pytest.mark.parametrize("name", ALL_BACKENDS)
+def test_degradation_warns_and_preserves_family(name, monkeypatch):
+    b = ops._REGISTRY[name]
+    monkeypatch.setitem(
+        ops._REGISTRY, name, dataclasses.replace(b, available=lambda: False)
+    )
+    try:
+        with pytest.warns(RuntimeWarning, match="degrading to"):
+            resolved = ops.resolve_backend(name)
+    except RuntimeError:
+        pytest.skip("no member of the chain is available on this platform")
+    assert resolved != name
+    assert ops.family_of(resolved) == ops.family_of(name)
+
+
+# ---------------------------------------------------------------------------
+# the grouped member of each family
+# ---------------------------------------------------------------------------
+
+
+def test_every_backend_declares_a_grouped_member():
+    # The acceptance bar for the grouped family: no registered backend is
+    # missing its grouped implementation (third-party registrations may omit
+    # one — then THIS assert tells their CI, not a silent xla fallback).
+    assert set(GROUPED_BACKENDS) == set(ALL_BACKENDS)
+
+
+@pytest.mark.parametrize("name", GROUPED_BACKENDS)
+def test_grouped_equals_stacked_matmul(name):
+    _available_or_skip(name)
+    a, b = _grouped_operands()
+    got = ops.grouped_matmul(a, b, backend=name)
+    want = jnp.stack(
+        [ops.matmul(a[i], b[i], backend=name) for i in range(a.shape[0])]
+    )
+    tol = 1e-5 if ops.family_of(name) == "fp" else 1e-4 * float(
+        jnp.max(jnp.abs(want))
+    )
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=1e-5, atol=max(tol, 1e-5)
+    )
+
+
+@pytest.mark.parametrize("name", GROUPED_BACKENDS)
+def test_grouped_bias_rides_the_backend(name):
+    _available_or_skip(name)
+    a, b = _grouped_operands(seed=5)
+    bias = jnp.asarray(
+        np.random.default_rng(6).standard_normal((a.shape[0], b.shape[2])),
+        jnp.float32,
+    )
+    no_bias = ops.grouped_matmul(a, b, backend=name)
+    with_bias = ops.grouped_matmul(a, b, bias, backend=name)
+    np.testing.assert_allclose(
+        np.asarray(with_bias), np.asarray(no_bias + bias[:, None, :]),
+        rtol=1e-6, atol=1e-6,
+    )
+
+
+@pytest.mark.parametrize("name", GROUPED_BACKENDS)
+def test_grouped_gradients_match_reference(name):
+    _available_or_skip(name)
+    a, b = _grouped_operands(g=2, m=16, k=32, n=24, seed=7)
+    da = jax.grad(lambda a: ops.grouped_matmul(a, b, backend=name).sum())(a)
+    da_ref = jax.grad(lambda a: reference_grouped_matmul(a, b).sum())(a)
+    if ops.grad_backend_of(name) != name:
+        # grad-backend indirection: exactly the reference backward
+        np.testing.assert_allclose(
+            np.asarray(da), np.asarray(da_ref), rtol=1e-6, atol=1e-6
+        )
+    else:
+        np.testing.assert_allclose(
+            np.asarray(da), np.asarray(da_ref), rtol=1e-4, atol=1e-4
+        )
+
+
+def test_resolution_never_crosses_family_boundaries():
+    # A q8 backend registered WITHOUT a quantized fallback chain inherits the
+    # default (fp) chain — the family guard must raise rather than silently
+    # hand the request to a full-precision engine.
+    ops.register_backend(
+        "_test_q8_no_chain", ops._xla_fn, available=False, family="q8"
+    )
+    try:
+        with pytest.raises(RuntimeError, match="no available matmul backend"):
+            ops.resolve_backend("_test_q8_no_chain")
+    finally:
+        ops._REGISTRY.pop("_test_q8_no_chain", None)
+
+
+def test_grouped_resolution_never_crosses_family_boundaries():
+    # Same guard on the grouped resolver: a q8 backend missing its grouped
+    # member must not degrade through the default chain onto fp grouped GEMMs.
+    ops.register_backend("_test_q8_no_grouped", ops._xla_fn, family="q8")
+    try:
+        with pytest.raises(RuntimeError, match="no available grouped"):
+            ops.resolve_grouped_backend("_test_q8_no_grouped")
+    finally:
+        ops._REGISTRY.pop("_test_q8_no_grouped", None)
+
+
+def test_grouped_resolution_degrades_with_warning(monkeypatch):
+    # A backend whose grouped member is missing degrades along its chain with
+    # the degradation warning (registered here, never shipped: built-ins all
+    # have grouped members — see test_every_backend_declares_a_grouped_member).
+    ops.register_backend("_test_no_grouped", ops._xla_fn, fallback=("xla",))
+    try:
+        with pytest.warns(RuntimeWarning, match="grouped GEMM member"):
+            assert ops.resolve_grouped_backend("_test_no_grouped") == "xla"
+    finally:
+        ops._REGISTRY.pop("_test_no_grouped", None)
+
+
+def test_grouped_only_failure_keeps_the_2d_member():
+    # Per-member availability: a grouped-only lowering failure degrades
+    # grouped_matmul along the chain but never demotes the backend's 2-D
+    # matmul member (a fleet of dense models must not lose their compiled
+    # kernels because the MoE grid regressed).
+    ops.register_backend(
+        "_test_grouped_broken", ops._xla_fn, fallback=("xla",),
+        grouped=ops._xla_grouped_fn, grouped_available=False,
+    )
+    try:
+        assert ops.resolve_backend("_test_grouped_broken") == "_test_grouped_broken"
+        with pytest.warns(RuntimeWarning, match="grouped GEMM member"):
+            assert ops.resolve_grouped_backend("_test_grouped_broken") == "xla"
+    finally:
+        ops._REGISTRY.pop("_test_grouped_broken", None)

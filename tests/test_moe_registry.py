@@ -1,0 +1,164 @@
+"""MoE expert compute on the backend registry.
+
+The routed per-expert SwiGLU runs as grouped O-POPE GEMMs through
+``ops.grouped_matmul`` (ISSUE 4 tentpole). These tests pin the contract:
+
+* ``moe._expert_ffn`` contains no direct ``jnp.einsum`` GEMMs — all expert
+  compute routes through the registry;
+* ``PrecisionPolicy(moe=...)`` measurably changes the expert path (the role
+  actually reaches the routed experts, not just the shared-expert MLP);
+* dropless MoE decode agrees with teacher forcing now that experts route
+  through the registry (cache path and train path share one GEMM substrate);
+* a quantized-expert policy (``moe="pallas_q8"``) preserves >= 99% greedy
+  token agreement on the trained reduced MoE model from ``quant_bench``.
+"""
+
+import inspect
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from conftest import import_quant_bench
+
+from repro.configs import ARCHS
+from repro.kernels import ops
+from repro.models import api
+from repro.models import moe as moe_mod
+from repro.models.layers import Initializer
+from repro.models.moe import moe_apply, moe_init
+from repro.quant import PrecisionPolicy
+
+MOE_ARCH = "deepseek-moe-16b"
+
+
+def test_expert_ffn_has_no_direct_einsum_gemms():
+    # The acceptance bar of ISSUE 4: the per-expert GEMMs may not bypass the
+    # registry. Routing one-hots/dispatch einsums live elsewhere; the expert
+    # FFN itself must be grouped_matmul all the way down.
+    src = inspect.getsource(moe_mod._expert_ffn)
+    assert "einsum" not in src
+    assert "grouped_matmul" in src
+
+
+def _moe_setup(seed=0, d=32, f=64, e=4):
+    p = moe_init(jax.random.key(seed), d, f, e, Initializer(dtype=jnp.float32))
+    x = jax.random.normal(jax.random.key(seed + 1), (2, 16, d))
+    kw = dict(n_experts=e, top_k=2, capacity_factor=8.0, group_size=16)
+    return p, x, kw
+
+
+@pytest.mark.parametrize("dispatch", ["onehot", "sort"])
+def test_policy_moe_role_reaches_expert_ffns(dispatch, monkeypatch):
+    p, x, kw = _moe_setup()
+    recorded = []
+    orig = ops.grouped_matmul
+
+    def recording(a, b, c=None, *, backend=None, out_dtype=None):
+        recorded.append(backend)
+        return orig(a, b, c, backend=backend, out_dtype=out_dtype)
+
+    monkeypatch.setattr(ops, "grouped_matmul", recording)
+    pol = PrecisionPolicy(rules={"moe": "xla_q8"})
+    y_q, _ = moe_apply(p, x, dispatch=dispatch, backend=pol, **kw)
+    assert recorded and all(be == "xla_q8" for be in recorded), recorded
+    recorded.clear()
+    y_fp, _ = moe_apply(p, x, dispatch=dispatch, **kw)
+    assert recorded and all(be is None for be in recorded), recorded
+
+    # the policy measurably changes the expert path: nonzero but bounded by
+    # the q8 contract (this is what "the role reaches the experts" means
+    # numerically — a policy that only touched the shared MLP would be 0 here
+    # since this MoE has no shared experts)
+    delta = float(jnp.max(jnp.abs(y_q - y_fp)))
+    assert delta > 0.0
+    assert delta < 0.1 * float(jnp.max(jnp.abs(y_fp)))
+
+
+def test_expert_backend_override_changes_resolution():
+    # a plain backend string routes the experts too (pre-policy behaviour)
+    p, x, kw = _moe_setup(seed=3)
+    y_xla, _ = moe_apply(p, x, dispatch="sort", backend="xla", **kw)
+    y_q8, _ = moe_apply(p, x, dispatch="sort", backend="xla_q8", **kw)
+    assert float(jnp.max(jnp.abs(y_xla - y_q8))) > 0.0
+
+
+def test_dropless_moe_decode_matches_teacher_forcing():
+    """Prefill + step decode == full-sequence forward for dropless MoE.
+
+    Dropless capacity makes routing a pure per-token function, and with the
+    expert GEMMs now on the registry the cache path and the train path share
+    one GEMM substrate — so the two logit streams must agree everywhere, not
+    just in argmax.
+    """
+    from repro.models.transformer import lm_forward, lm_logits
+
+    cfg = ARCHS[MOE_ARCH].reduced()
+    assert cfg.moe is not None and cfg.moe.dropless
+    params = api.init_params(cfg, jax.random.key(0))
+    toks = jax.random.randint(jax.random.key(1), (2, 20), 0, cfg.vocab)
+
+    hidden, _, _ = lm_forward(params, toks, cfg, mode="train")
+    full_logits = lm_logits(params, hidden, cfg)  # [B, S, V]
+
+    logits, caches = api.prefill(
+        cfg, params, {"tokens": toks[:, :16]}, max_len=32,
+        cache_dtype=jnp.float32,
+    )
+    np.testing.assert_allclose(
+        np.asarray(logits), np.asarray(full_logits[:, 15]), rtol=2e-2, atol=2e-2
+    )
+    for s in range(16, 20):  # teacher-force the decode path
+        logits, caches = api.decode(
+            cfg, params, toks[:, s : s + 1], caches, jnp.asarray(s, jnp.int32)
+        )
+        np.testing.assert_allclose(
+            np.asarray(logits), np.asarray(full_logits[:, s]),
+            rtol=2e-2, atol=2e-2,
+        )
+        assert np.array_equal(
+            np.argmax(np.asarray(logits), -1),
+            np.argmax(np.asarray(full_logits[:, s]), -1),
+        )
+
+
+# ---------------------------------------------------------------------------
+# quantized experts end to end (trained model, greedy agreement)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def trained_moe_model():
+    cfg = ARCHS[MOE_ARCH].reduced()
+    params, loss = import_quant_bench().trained_model(
+        cfg, steps=250, seed=0, seq_len=48
+    )
+    assert loss < 0.5  # the MoE model actually learned the cyclic task
+    return cfg, params
+
+
+@pytest.mark.slow
+def test_quantized_experts_greedy_agreement(trained_moe_model):
+    """PrecisionPolicy(moe="pallas_q8") >= 99% greedy agreement.
+
+    The policy quantizes exactly the routed expert FFNs (this arch's periods
+    are attn+moe; no dense mlp role fires) — on the trained reduced model
+    the argmax margins are real, so disagreements measure quantization.
+    ``pallas_q8`` resolves through its quantized fallback chain on CPU
+    (interpret kernel), never to a full-precision path.
+    """
+    cfg, params = trained_moe_model
+    qb = import_quant_bench()
+    prompts = qb.cyclic_prompt_batch(cfg.vocab, n_prompts=8, prompt_len=12, seed=0)
+    pol = PrecisionPolicy(rules={"moe": "pallas_q8"}, name="moe-q8")
+    with warnings.catch_warnings():
+        # CPU hosts degrade pallas_q8 -> pallas_q8_interpret (the quantized
+        # family chain); the warning is the expected signal, not a failure.
+        warnings.simplefilter("ignore", RuntimeWarning)
+        got_fp = qb.greedy_decode(cfg, params, prompts, gen=16)
+        got_q = qb.greedy_decode(cfg, params, prompts, gen=16, backend=pol)
+    total = got_fp.size
+    agree = int((got_fp == got_q).sum())
+    assert total >= 100
+    assert agree / total >= 0.99, f"{agree}/{total}"

@@ -313,18 +313,15 @@ def test_slot_pool_quant_bytes_ratio():
 
 @pytest.fixture(scope="module")
 def trained_reduced_model():
-    import sys
+    from conftest import import_quant_bench
 
-    sys.path.insert(0, "benchmarks")
-    try:
-        from quant_bench import trained_model
-    finally:
-        sys.path.pop(0)
     from repro.configs import get_config
 
     cfg = get_config("chatglm3-6b").reduced()
     # seq_len covers every position the serving test decodes at (max 13+24).
-    params, loss = trained_model(cfg, steps=250, seed=0, seq_len=48)
+    params, loss = import_quant_bench().trained_model(
+        cfg, steps=250, seed=0, seq_len=48
+    )
     assert loss < 0.5  # the model actually learned the task
     return cfg, params
 
