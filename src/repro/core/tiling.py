@@ -23,12 +23,19 @@ DESIGN.md §3.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
-from typing import Tuple
+from typing import Iterable, List, Tuple
 
 from .engine import EngineConfig, simulate_gemm
 
-__all__ = ["TilingPlan", "choose_tile", "tiled_gemm_cycles", "ClusterConfig"]
+__all__ = [
+    "TilingPlan",
+    "choose_tile",
+    "tiled_gemm_cycles",
+    "ClusterConfig",
+    "rank_plans",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -156,7 +163,7 @@ def tiled_gemm_cycles(
             tn = min(plan.tn, n - j * plan.tn)
             for kk in range(kt):
                 tk = min(plan.tk, k - kk * plan.tk)
-                eng = simulate_gemm(engine, tm, tk, tn).total_cycles
+                eng = _engine_cycles(engine, tm, tk, tn)
                 dma_bytes = (tm * tk + tk * tn) * elem_bytes
                 if kk == kt - 1:  # C tile in/out at macro-tile boundary
                     dma_bytes += 2 * tm * tn * elem_bytes
@@ -177,3 +184,49 @@ def tiled_gemm_cycles(
         "dma_bound_steps": dma_bound_steps,
         "bound": "compute" if compute_bound_steps >= dma_bound_steps else "dma",
     }
+
+
+@functools.lru_cache(maxsize=4096)
+def _engine_cycles(engine: EngineConfig, tm: int, tk: int, tn: int) -> int:
+    """Memoized per-tile engine cycles. A tiled GEMM sweep sees at most four
+    distinct tile shapes (interior plus the three ragged edges), and the
+    autotuner's candidate ranking replays the sweep for tens of candidate
+    plans — without the memo the closed-form model dominates search time."""
+    return simulate_gemm(engine, tm, tk, tn).total_cycles
+
+
+def rank_plans(
+    engine: EngineConfig,
+    m: int,
+    k: int,
+    n: int,
+    candidates: Iterable[Tuple[int, int, int]],
+    *,
+    elem_bytes: int = 2,
+    top_k: int = 4,
+    cluster: ClusterConfig = ClusterConfig(),
+) -> List[Tuple[Tuple[int, int, int], int]]:
+    """Rank candidate ``(tm, tk, tn)`` tiles by the analytic cluster model.
+
+    This is the autotuner's **pruner** (`repro.tune.search`): instead of
+    timing an exhaustive sweep on-device, every candidate is scored with
+    :func:`tiled_gemm_cycles` — the same double-buffered compute/DMA-overlap
+    model behind :func:`choose_tile` — and only the ``top_k`` cheapest (by
+    modeled total cycles) go on to empirical measurement. Returns
+    ``[(candidate, modeled_cycles), ...]`` cheapest first; duplicates are
+    collapsed, order among equals is first-seen (deterministic).
+    """
+    scored: List[Tuple[Tuple[int, int, int], int]] = []
+    seen = set()
+    for tm, tk, tn in candidates:
+        cand = (int(tm), int(tk), int(tn))
+        if cand in seen:
+            continue
+        seen.add(cand)
+        plan = TilingPlan(cand[0], cand[1], cand[2], elem_bytes)
+        cycles = tiled_gemm_cycles(
+            engine, m, k, n, cluster=cluster, plan=plan, elem_bytes=elem_bytes
+        )["total_cycles"]
+        scored.append((cand, cycles))
+    scored.sort(key=lambda sc: sc[1])
+    return scored[: max(1, top_k)]

@@ -45,8 +45,17 @@ from repro import compat
 __all__ = [
     "opope_gemm",
     "default_block_shape",
+    "validate_block_shape",
     "padding_waste",
+    "VMEM_BUDGET_BYTES",
 ]
+
+# VMEM working-set budget for one grid step: the resident fp32/int32
+# accumulator tile plus double-buffered A/B panels must fit in roughly half
+# of a core's 16 MiB VMEM (the other half is Mosaic's pipelining headroom) —
+# the TPU analogue of the paper's 64 kB compute half of the TCDM. Shared by
+# the heuristic below and the autotuner's candidate validation.
+VMEM_BUDGET_BYTES = 8 * 1024 * 1024
 
 
 def _gemm_kernel(a_ref, b_ref, o_ref, acc_ref, *, k_steps: int):
@@ -99,13 +108,39 @@ def default_block_shape(
     bm = min(256, max(128, 8 * math.ceil(m / 8) if m < 128 else 128))
     bn = min(256, 128 * max(1, math.ceil(min(n, 256) / 128)))
     bk = min(512, 128 * max(2, math.ceil(min(k, 512) / 128)))
-    # VMEM budget: acc f32 + 2x (A + B panels).
-    budget = 8 * 1024 * 1024
     while (
-        bm * bn * 4 + 2 * (bm * bk + bk * bn) * elem_bytes > budget and bk > 128
+        bm * bn * 4 + 2 * (bm * bk + bk * bn) * elem_bytes > VMEM_BUDGET_BYTES
+        and bk > 128
     ):
         bk //= 2
     return bm, bn, bk
+
+
+def validate_block_shape(
+    bm: int,
+    bn: int,
+    bk: int,
+    *,
+    elem_bytes: int = 2,
+    m_align: int = 8,
+    budget_bytes: int = VMEM_BUDGET_BYTES,
+) -> bool:
+    """Whether ``(bm, bn, bk)`` is a legal O-POPE block shape on this kernel.
+
+    The kernel's hard constraints, checked before any tuned tile (a table
+    entry is untrusted input — hand-edited files, tables tuned for another
+    kernel revision) is allowed near a ``pallas_call``:
+
+    * ``bm`` positive and ``m_align``-aligned (8 = fp sublane tile; the int8
+      kernels need 32),
+    * ``bn``, ``bk`` positive multiples of 128 (MXU lane dimension),
+    * accumulator tile + double-buffered A/B panels fit the VMEM budget.
+    """
+    if bm <= 0 or bn <= 0 or bk <= 0:
+        return False
+    if bm % m_align or bn % 128 or bk % 128:
+        return False
+    return bm * bn * 4 + 2 * (bm * bk + bk * bn) * elem_bytes <= budget_bytes
 
 
 def padding_waste(m: int, k: int, n: int, bm: int, bn: int, bk: int) -> float:

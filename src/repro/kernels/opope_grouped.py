@@ -20,9 +20,12 @@ exactly :func:`repro.kernels.opope_gemm.opope_gemm`:
   operand or a ``[G, N]`` per-group bias row broadcast down M at preload
   (never materialized as ``[G, M, N]``).
 
-Because every group shares (M, K, N), tile selection is the plain
-:func:`repro.kernels.opope_gemm.default_block_shape` choice for one group's
-GEMM — the registry memoizes it per shape exactly like the 2-D path.
+Because every group shares (M, K, N), tile selection is the single-group
+choice — resolved through the registry's shared path (``ops._tile_for``)
+under the **grouped** family key with the group count: a tuning-table entry
+measured for this grouped shape wins over the
+:func:`repro.kernels.opope_gemm.default_block_shape` heuristic, and never
+collides with a dense entry of the same per-group (M, K, N).
 """
 
 from __future__ import annotations

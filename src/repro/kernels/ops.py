@@ -24,12 +24,21 @@ register themselves on first use: an unknown backend name triggers one lazy
 ``import repro.quant`` before resolution fails, so callers never import the
 quant package explicitly just to name its backends.
 
-The pallas backends pick block shapes through a per-``(M, N, K, dtype)``
-memoized tile selection (`opope_gemm.default_block_shape` — the VMEM-budget
-analogue of the paper's tile quantization rule), so repeated layer shapes pay
-the selection cost once. The memo is LRU-bounded (``_TILE_CACHE_CAP``): a
-long-lived serving process that sees an unbounded stream of request shapes
-must not grow it without limit.
+The pallas backends pick block shapes through one memoized resolution path,
+``_tile_for``, keyed per ``(backend, shape-family, M, K, N, G, dtype)`` so a
+grouped GEMM can never collide with a dense one of the same (M, K, N). The
+resolution order is **tuned table first, heuristic second**: a persistent
+tuning table written by :mod:`repro.tune` (the ``repro-tune`` CLI; location
+overridable via ``REPRO_TUNE_TABLE``) is consulted for an empirically
+measured winner on this device kind, and only on a miss does the backend's
+registered ``tile_fn`` heuristic (``opope_gemm.default_block_shape`` — the
+VMEM-budget analogue of the paper's tile quantization rule — or the q8
+variant) decide. Tuned tiles are validated against the kernel's hard
+constraints (alignment, VMEM budget) before use; :func:`tile_source` reports
+which path won for a given shape. The memo is LRU-bounded
+(``_TILE_CACHE_CAP``): a long-lived serving process that sees an unbounded
+stream of request shapes must not grow it without limit.
+:func:`clear_tile_cache` drops both the memo and the loaded table state.
 
 A ``custom_vjp`` makes the backward pass run the same O-POPE dataflow (two
 more GEMMs: dA = dO @ B^T, dB = A^T @ dO) instead of whatever XLA would pick
@@ -79,8 +88,13 @@ __all__ = [
     "grad_backend_of",
     "fallback_chain_of",
     "family_of",
+    "tunable_backends",
+    "tile_for",
+    "tile_source",
+    "heuristic_tile",
     "tile_cache_info",
     "clear_tile_cache",
+    "capture_shapes",
 ]
 
 _DEFAULT_BACKEND = "auto"
@@ -124,6 +138,11 @@ class _Backend:
     # invariant a fallback chain must preserve — degradation may change the
     # execution engine, never the numerics family.
     family: str = "fp"
+    # Block-shape heuristic fn(m, k, n, elem_bytes=...) -> (bm, bn, bk) for
+    # backends whose kernels take block_*= parameters. None = the backend has
+    # no tile knob (the XLA paths) and is not tunable. Tuned backends resolve
+    # tiles through ops._tile_for: tuning table first, this heuristic second.
+    tile_fn: Optional[Callable[..., Tuple[int, int, int]]] = None
 
 
 _REGISTRY: Dict[str, _Backend] = {}
@@ -142,6 +161,7 @@ def register_backend(
     grouped: Optional[GroupedFn] = None,
     grouped_available: Optional[Union[bool, Callable[[], bool]]] = None,
     family: str = "fp",
+    tile_fn: Optional[Callable[..., Tuple[int, int, int]]] = None,
 ) -> None:
     """Register (or replace) a matmul backend.
 
@@ -155,7 +175,11 @@ def register_backend(
     ``grouped_available`` probe (default: available whenever the backend
     is) so a grouped-only failure never disables the 2-D path; ``family``
     names the numerics family (``"fp"``/``"q8"``) a degradation chain must
-    preserve.
+    preserve. ``tile_fn`` is the block-shape heuristic
+    ``fn(m, k, n, elem_bytes=...) -> (bm, bn, bk)`` for kernels with
+    ``block_*=`` knobs — registering one makes the backend tunable: its
+    tiles resolve through the tuning table (:mod:`repro.tune`) before this
+    heuristic.
     """
     if not callable(fn):
         raise TypeError(f"backend fn for {name!r} is not callable")
@@ -168,7 +192,7 @@ def register_backend(
     _REGISTRY[name] = _Backend(
         name, fn, probe, fallback=tuple(fallback) if fallback else None,
         grad_backend=grad_backend, grouped=grouped, grouped_available=gprobe,
-        family=family,
+        family=family, tile_fn=tile_fn,
     )
 
 
@@ -177,6 +201,7 @@ def registered_backends() -> List[str]:
 
 
 def available_backends() -> List[str]:
+    _load_plugin_backends()  # the quant backends count, even if not yet named
     return [n for n, b in _REGISTRY.items() if _probe_ok(b)]
 
 
@@ -268,17 +293,96 @@ def _pallas_grouped_compiles() -> bool:
         return False
 
 
-# Cap on the per-(M, N, K, dtype) tile-selection memo. A training run sees a
-# handful of layer shapes, but a long-lived serving process sees an unbounded
-# stream of (prompt-bucket x layer) shapes; LRU eviction keeps the memo from
-# growing without limit while still making repeated shapes free.
+# Cap on the per-(backend, family, M, N, K, G, dtype) tile-selection memo. A
+# training run sees a handful of layer shapes, but a long-lived serving
+# process sees an unbounded stream of (prompt-bucket x layer) shapes; LRU
+# eviction keeps the memo from growing without limit while still making
+# repeated shapes free.
 _TILE_CACHE_CAP = 512
+
+# Lazily loaded tuning-table state (repro.tune.table.TuningTable or None).
+# Loaded once on the first tile resolution, dropped by clear_tile_cache() —
+# so a test (or a process that just ran the tuner) can point REPRO_TUNE_TABLE
+# somewhere else and have the next resolution pick it up.
+_TUNE_STATE: Dict[str, object] = {"loaded": False, "table": None}
+
+
+def _tuning_table():
+    if not _TUNE_STATE["loaded"]:
+        _TUNE_STATE["loaded"] = True
+        try:
+            from repro.tune.table import load_active_table
+
+            _TUNE_STATE["table"] = load_active_table()
+        except Exception:  # tune package absent/broken: heuristics only
+            _TUNE_STATE["table"] = None
+    return _TUNE_STATE["table"]
+
+
+def _tuned_tile(
+    backend: Optional[str], family: str, m: int, k: int, n: int,
+    groups: int, itemsize: int,
+) -> Optional[Tuple[int, int, int]]:
+    """Tuning-table lookup, validated against the kernel's hard constraints.
+
+    A table entry is untrusted input (hand-edited file, stale kernel
+    revision): an illegal block shape falls back to the heuristic with a
+    warning instead of reaching a ``pallas_call``.
+    """
+    if backend is None:
+        return None
+    b = _REGISTRY.get(backend)
+    if b is None or b.tile_fn is None:
+        return None  # no tile knob: a table entry for this name is inert
+    table = _tuning_table()
+    if table is None:
+        return None
+    tile = table.lookup(
+        backend=backend, shape_family=family, m=m, k=k, n=n, g=groups,
+        itemsize=itemsize,
+    )
+    if tile is None:
+        return None
+    m_align = 32 if b.family == "q8" else 8
+    if not _kern.validate_block_shape(
+        tile[0], tile[1], tile[2], elem_bytes=itemsize, m_align=m_align
+    ):
+        warnings.warn(
+            f"tuning-table entry {tile} for backend {backend!r} "
+            f"({family} {m}x{k}x{n}, g={groups}) violates kernel constraints; "
+            "using the heuristic instead",
+            RuntimeWarning,
+            stacklevel=3,
+        )
+        return None
+    return tile
 
 
 @functools.lru_cache(maxsize=_TILE_CACHE_CAP)
-def _tile_for(m: int, k: int, n: int, itemsize: int) -> Tuple[int, int, int]:
-    """Memoized (LRU-bounded) per-(M, N, K, dtype) block-shape selection."""
-    return _kern.default_block_shape(m, k, n, elem_bytes=itemsize)
+def _tile_for(
+    m: int,
+    k: int,
+    n: int,
+    itemsize: int,
+    family: str = "dense",
+    groups: int = 0,
+    backend: Optional[str] = None,
+) -> Tuple[int, int, int]:
+    """Memoized (LRU-bounded) block-shape resolution: tuned, else heuristic.
+
+    The key carries the shape family and group count (a grouped GEMM must
+    never share a memo slot — or a tuning-table entry — with a dense GEMM of
+    the same (M, K, N): their pipelining behaviour differs) and the backend
+    name, because tuned winners are measured per backend.
+    """
+    tuned = _tuned_tile(backend, family, m, k, n, groups, itemsize)
+    if tuned is not None:
+        return tuned
+    b = _REGISTRY.get(backend) if backend else None
+    tile_fn = b.tile_fn if (b is not None and b.tile_fn is not None) else (
+        _kern.default_block_shape
+    )
+    return tile_fn(m, k, n, elem_bytes=itemsize)
 
 
 def tile_cache_info():
@@ -287,13 +391,123 @@ def tile_cache_info():
 
 
 def clear_tile_cache() -> None:
+    """Drop the tile memo AND the loaded tuning-table state: the next tile
+    resolution re-reads the table from ``REPRO_TUNE_TABLE`` / the default
+    location."""
     _tile_for.cache_clear()
+    _TUNE_STATE["loaded"] = False
+    _TUNE_STATE["table"] = None
+
+
+def tunable_backends() -> List[str]:
+    """Registered backends with a tile knob (a ``tile_fn``): the set the
+    ``repro-tune`` CLI offers to tune."""
+    _load_plugin_backends()
+    return [n for n, b in _REGISTRY.items() if b.tile_fn is not None]
+
+
+def _tile_itemsize(backend: str, dtype) -> int:
+    """Element width the backend's tile selection keys on: q8 backends
+    stream int8 panels whatever the caller-visible dtype."""
+    b = _REGISTRY.get(backend)
+    if b is not None and b.family == "q8":
+        return 1
+    return jnp.dtype(dtype).itemsize
+
+
+def tile_for(
+    backend: str, m: int, k: int, n: int, *, groups: int = 0,
+    dtype=jnp.float32,
+) -> Tuple[int, int, int]:
+    """The (bm, bn, bk) block shape ``backend`` would run this GEMM with
+    (``groups=0`` = the dense 2-D family, ``groups>0`` = the grouped family
+    where (m, k, n) is the per-group shape)."""
+    _load_plugin_backends()
+    family = "grouped" if groups else "dense"
+    return _tile_for(
+        m, k, n, _tile_itemsize(backend, dtype),
+        family=family, groups=groups, backend=backend,
+    )
+
+
+def tile_source(
+    backend: str, m: int, k: int, n: int, *, groups: int = 0,
+    dtype=jnp.float32,
+) -> str:
+    """``"tuned"`` if the tuning table decides this shape's blocks,
+    ``"heuristic"`` if the backend's ``tile_fn`` does (including backends
+    with no tile knob at all — the XLA paths always report heuristic)."""
+    _load_plugin_backends()
+    family = "grouped" if groups else "dense"
+    tuned = _tuned_tile(
+        backend, family, m, k, n, groups, _tile_itemsize(backend, dtype)
+    )
+    return "tuned" if tuned is not None else "heuristic"
+
+
+def heuristic_tile(
+    backend: str, m: int, k: int, n: int, *, dtype=jnp.float32
+) -> Tuple[int, int, int]:
+    """The backend's ``tile_fn`` choice, bypassing any loaded tuning table —
+    the baseline column of ``BENCH_kernels.json``."""
+    _load_plugin_backends()
+    b = _REGISTRY.get(backend)
+    itemsize = _tile_itemsize(backend, dtype)
+    fn = b.tile_fn if (b is not None and b.tile_fn is not None) else (
+        _kern.default_block_shape
+    )
+    return fn(m, k, n, elem_bytes=itemsize)
+
+
+# ---------------------------------------------------------------------------
+# Shape capture (the tuner's workload-harvest hook)
+# ---------------------------------------------------------------------------
+
+# When capture is active, every matmul/grouped_matmul records
+# (shape_family, m, k, n, g, dtype_name) at trace time. Harvesting a model's
+# GEMM workload is then one jax.eval_shape of its loss/prefill under
+# capture_shapes() — zero FLOPs, exact shapes (repro.tune.capture).
+_SHAPE_CAPTURE: List[list] = []
+
+
+class capture_shapes:
+    """Context manager recording every GEMM shape routed through the registry.
+
+    Yields a list of ``(shape_family, m, k, n, g, dtype_name)`` tuples in
+    call order (duplicates included — callers dedupe). Nestable; tracing
+    (``jax.eval_shape`` / ``jit``) triggers the records, so no compute is
+    needed to harvest a workload.
+    """
+
+    def __enter__(self):
+        self._records: List[Tuple[str, int, int, int, int, str]] = []
+        _SHAPE_CAPTURE.append(self._records)
+        return self._records
+
+    def __exit__(self, *exc):
+        # Remove by identity, not equality: two nested captures with equal
+        # contents (e.g. both empty) must each detach their OWN list.
+        for i in range(len(_SHAPE_CAPTURE) - 1, -1, -1):
+            if _SHAPE_CAPTURE[i] is self._records:
+                del _SHAPE_CAPTURE[i]
+                break
+        return False
+
+
+def _record_shape(family: str, m: int, k: int, n: int, g: int, dtype) -> None:
+    if _SHAPE_CAPTURE:
+        rec = (family, int(m), int(k), int(n), int(g), jnp.dtype(dtype).name)
+        for records in _SHAPE_CAPTURE:
+            records.append(rec)
 
 
 def _pallas_fn(interpret: bool) -> BackendFn:
+    name = "pallas_interpret" if interpret else "pallas"
+
     def run(a, b, c, out_dtype):
         bm, bn, bk = _tile_for(
-            a.shape[0], a.shape[1], b.shape[1], jnp.dtype(a.dtype).itemsize
+            a.shape[0], a.shape[1], b.shape[1], jnp.dtype(a.dtype).itemsize,
+            family="dense", backend=name,
         )
         return _kern.opope_gemm(
             a, b, c,
@@ -305,11 +519,16 @@ def _pallas_fn(interpret: bool) -> BackendFn:
 
 
 def _pallas_grouped_fn(interpret: bool) -> GroupedFn:
+    name = "pallas_interpret" if interpret else "pallas"
+
     def run(a, b, c, out_dtype):
         # Every group shares (M, K, N): tile selection is the single-group
-        # choice, through the same bounded memo as the 2-D path.
+        # choice, through the same bounded memo as the 2-D path — but under
+        # the grouped family key (and group count), so a tuned grouped entry
+        # never collides with a dense entry of the same per-group shape.
         bm, bn, bk = _tile_for(
-            a.shape[1], a.shape[2], b.shape[2], jnp.dtype(a.dtype).itemsize
+            a.shape[1], a.shape[2], b.shape[2], jnp.dtype(a.dtype).itemsize,
+            family="grouped", groups=a.shape[0], backend=name,
         )
         return _gkern.opope_gemm_grouped(
             a, b, c,
@@ -332,10 +551,12 @@ register_backend(
     "pallas", _pallas_fn(interpret=False), available=_pallas_compiles,
     grouped=_pallas_grouped_fn(interpret=False),
     grouped_available=_pallas_grouped_compiles,
+    tile_fn=_kern.default_block_shape,
 )
 register_backend(
     "pallas_interpret", _pallas_fn(interpret=True),
     grouped=_pallas_grouped_fn(interpret=True),
+    tile_fn=_kern.default_block_shape,
 )
 register_backend("xla", _xla_fn, grouped=_xla_grouped_fn)
 
@@ -524,6 +745,7 @@ def matmul(
     m = 1
     for d in batch_shape:
         m *= d
+    _record_shape("dense", m, a.shape[-1], b.shape[-1], 0, a.dtype)
     a2 = a.reshape(m, a.shape[-1])
     if c is None:
         out = _matmul_nc(a2, b, backend, out_dtype)
@@ -692,6 +914,9 @@ def grouped_matmul(
         raise ValueError(f"bad grouped GEMM shapes {a.shape} @ {b.shape}")
     out_dtype = jnp.dtype(out_dtype or a.dtype)
     backend = resolve_grouped_backend(backend)
+    _record_shape(
+        "grouped", a.shape[1], a.shape[2], b.shape[2], a.shape[0], a.dtype
+    )
     if c is None:
         return _grouped_nc(a, b, backend, out_dtype)
     if c.ndim == 2:

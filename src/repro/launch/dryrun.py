@@ -57,27 +57,12 @@ __all__ = ["input_specs", "run_cell", "main"]
 
 
 def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
-    """ShapeDtypeStruct stand-ins for every model input of this cell."""
-    b, s = shape.global_batch, shape.seq_len
-    i32 = jnp.int32
-    if shape.kind in ("train", "prefill"):
-        s_text = s - cfg.n_img_tokens if cfg.family == "vlm" else s
-        specs: Dict[str, Any] = {
-            "tokens": jax.ShapeDtypeStruct((b, s_text), i32),
-        }
-        if shape.kind == "train":
-            specs["labels"] = jax.ShapeDtypeStruct((b, s_text), i32)
-        if cfg.family == "vlm":
-            specs["patch_embeds"] = jax.ShapeDtypeStruct(
-                (b, cfg.n_img_tokens, cfg.d_model), jnp.bfloat16
-            )
-        if cfg.family == "audio":
-            specs["frames"] = jax.ShapeDtypeStruct(
-                (b, cfg.enc_seq, cfg.d_model), jnp.bfloat16
-            )
-        return specs
-    # decode: one new token against caches of length seq_len
-    return {"token": jax.ShapeDtypeStruct((b, 1), i32)}
+    """ShapeDtypeStruct stand-ins for every model input of this cell
+    (delegates to :func:`repro.models.api.input_specs`, the single owner of
+    the per-family batch layout)."""
+    return model_api.input_specs(
+        cfg, batch=shape.global_batch, seq=shape.seq_len, kind=shape.kind
+    )
 
 
 def _param_specs(cfg: ArchConfig):

@@ -1,0 +1,178 @@
+"""``repro-tune``: offline empirical tile tuning for the O-POPE backends.
+
+Tunes a workload's GEMM shape set — explicit shapes, and/or every shape a
+``configs/`` model runs (harvested via the registry's shape-capture mode,
+zero FLOPs) — on each requested backend, and persists the winners to a
+tuning table that ``repro.kernels.ops`` consults on every later run
+(``$REPRO_TUNE_TABLE``, or the committed in-package default).
+
+Examples::
+
+    # tune explicit dense + grouped shapes on every tunable backend here
+    repro-tune --shapes 512x512x512 1024x4096x1024 --grouped 8x64x512x256
+
+    # tune everything chatglm3-6b's training step runs at batch 8, seq 2048
+    repro-tune --arch chatglm3-6b --batch 8 --seq 2048
+
+    # CI smoke: tiny shape, interpreter backend, throwaway table
+    REPRO_TUNE_TABLE=/tmp/t.json repro-tune --shapes 64x128x128 \
+        --backends pallas_interpret --iters 1 --top-k 2
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+from typing import List, Optional
+
+from repro.kernels import ops
+from repro.tune import (
+    ENV_VAR,
+    GemmShape,
+    TUNABLE_BACKENDS,
+    TableFormatError,
+    TuningTable,
+    active_table_path,
+    device_kind,
+    harvest_model_shapes,
+    tune_workload,
+)
+
+__all__ = ["main"]
+
+
+def _parse_dense(spec: str, dtype: str) -> GemmShape:
+    try:
+        m, k, n = (int(x) for x in spec.lower().split("x"))
+    except ValueError:
+        raise SystemExit(f"bad --shapes entry {spec!r}; want MxKxN") from None
+    return GemmShape("dense", m, k, n, 0, dtype)
+
+
+def _parse_grouped(spec: str, dtype: str) -> GemmShape:
+    try:
+        g, m, k, n = (int(x) for x in spec.lower().split("x"))
+    except ValueError:
+        raise SystemExit(
+            f"bad --grouped entry {spec!r}; want GxMxKxN"
+        ) from None
+    return GemmShape("grouped", m, k, n, g, dtype)
+
+
+def main(argv: Optional[List[str]] = None) -> None:
+    ap = argparse.ArgumentParser(
+        prog="repro-tune",
+        description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter,
+    )
+    ap.add_argument("--shapes", nargs="*", default=[], metavar="MxKxN",
+                    help="dense GEMM shapes to tune")
+    ap.add_argument("--grouped", nargs="*", default=[], metavar="GxMxKxN",
+                    help="grouped GEMM shapes to tune (per-group MxKxN)")
+    ap.add_argument("--arch", action="append", default=[],
+                    help="configs/ model whose GEMM shapes to harvest and "
+                         "tune (repeatable)")
+    ap.add_argument("--batch", type=int, default=1,
+                    help="harvest batch size (with --arch)")
+    ap.add_argument("--seq", type=int, default=128,
+                    help="harvest sequence length (with --arch)")
+    ap.add_argument("--dtype", default="float32",
+                    help="operand dtype for explicit --shapes/--grouped")
+    ap.add_argument("--backends", nargs="*", default=None,
+                    help="backends to tune (default: every tunable backend "
+                         "available on this platform)")
+    ap.add_argument("--table", default=None,
+                    help=f"table path (default: {active_table_path()})")
+    ap.add_argument("--fresh", action="store_true",
+                    help="start from an empty table instead of merging into "
+                         "the existing one")
+    ap.add_argument("--top-k", type=int, default=4,
+                    help="modeled candidates to measure per cell (the "
+                         "heuristic is always measured too)")
+    ap.add_argument("--iters", type=int, default=3,
+                    help="steady-state timing samples per candidate")
+    ap.add_argument("--warmup", type=int, default=1,
+                    help="warmup (compile-absorbing) calls per candidate")
+    ap.add_argument("--list-backends", action="store_true",
+                    help="print tunable/available backends and exit")
+    args = ap.parse_args(argv)
+
+    tunable = [
+        b for b in ops.tunable_backends()
+        if b in TUNABLE_BACKENDS and b in ops.available_backends()
+    ]
+    if args.list_backends:
+        print(f"tunable backends on {device_kind()}: {tunable}")
+        return
+
+    if args.backends is None:
+        backends = tunable
+    else:
+        unknown = [b for b in args.backends if b not in TUNABLE_BACKENDS]
+        if unknown:
+            raise SystemExit(
+                f"not tunable: {unknown} (no block_*= knob); "
+                f"tunable: {sorted(TUNABLE_BACKENDS)}"
+            )
+        # Availability matters for explicit requests too: timing a compiled
+        # backend where it cannot lower would die in the kernel, not here.
+        unavailable = [
+            b for b in args.backends if b not in ops.available_backends()
+        ]
+        if unavailable:
+            raise SystemExit(
+                f"not available on {device_kind()}: {unavailable}; "
+                f"tunable here: {tunable}"
+            )
+        backends = list(args.backends)
+    if not backends:
+        raise SystemExit("no tunable backend available on this platform")
+
+    shapes: List[GemmShape] = []
+    shapes += [_parse_dense(s, args.dtype) for s in args.shapes]
+    shapes += [_parse_grouped(s, args.dtype) for s in args.grouped]
+    for arch in args.arch:
+        harvested = harvest_model_shapes(
+            arch, batch=args.batch, seq=args.seq
+        )
+        print(f"harvested {len(harvested)} GEMM shapes from {arch} "
+              f"(batch={args.batch}, seq={args.seq})")
+        shapes += harvested
+    shapes = list(dict.fromkeys(shapes))  # dedupe, keep order
+    if not shapes:
+        raise SystemExit("nothing to tune: pass --shapes/--grouped/--arch")
+
+    path = args.table or active_table_path()
+    table = TuningTable()
+    if not args.fresh:
+        try:
+            table.merge(TuningTable.load(path))
+            print(f"merging into {len(table)} existing entries from {path}")
+        except FileNotFoundError:
+            pass
+        except TableFormatError as e:
+            print(f"ignoring unusable existing table at {path}: {e}")
+
+    print(f"tuning {len(shapes)} shapes x {len(backends)} backends "
+          f"on {device_kind()} (top-{args.top_k} of the modeled candidates, "
+          f"{args.iters} samples each)")
+    tune_workload(
+        shapes, backends=backends, table=table,
+        top_k=args.top_k, iters=args.iters, warmup=args.warmup,
+        log=lambda line: print("  " + line),
+    )
+    table.save(path)
+    ops.clear_tile_cache()  # this process re-reads the table it just wrote
+    print(f"wrote {len(table)} entries -> {path}")
+    if path == active_table_path():
+        if os.environ.get(ENV_VAR):
+            print(f"active while REPRO_TUNE_TABLE={path} is set")
+        else:
+            print("written to the default location; active automatically")
+    else:
+        print(f"activate with: REPRO_TUNE_TABLE={path}")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:])

@@ -27,6 +27,7 @@ from .attention import KVCache
 
 __all__ = [
     "init_params",
+    "input_specs",
     "loss_fn",
     "prefill",
     "prefill_bucketed",
@@ -44,6 +45,39 @@ def init_params(cfg: ArchConfig, key: jax.Array):
     if cfg.family == "vlm":
         return vlm_mod.init_vlm_params(cfg, key)
     return tf_mod.init_lm_params(cfg, key)
+
+
+def input_specs(
+    cfg: ArchConfig, *, batch: int, seq: int, kind: str = "train"
+) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of one cell.
+
+    The single owner of the per-family batch layout (tokens/labels,
+    vlm ``patch_embeds``, audio ``frames``; ``kind="decode"`` is one new
+    token against caches of length ``seq``). ``launch.dryrun`` and the
+    autotuner's workload harvest (``repro.tune.capture``) both build their
+    abstract batches here — it lives in this module, not the dry-run
+    launcher, because importing the launcher force-sets the host device
+    count as an import side effect.
+    """
+    i32 = jnp.int32
+    if kind in ("train", "prefill"):
+        s_text = seq - cfg.n_img_tokens if cfg.family == "vlm" else seq
+        specs: Dict[str, Any] = {
+            "tokens": jax.ShapeDtypeStruct((batch, s_text), i32),
+        }
+        if kind == "train":
+            specs["labels"] = jax.ShapeDtypeStruct((batch, s_text), i32)
+        if cfg.family == "vlm":
+            specs["patch_embeds"] = jax.ShapeDtypeStruct(
+                (batch, cfg.n_img_tokens, cfg.d_model), jnp.bfloat16
+            )
+        if cfg.family == "audio":
+            specs["frames"] = jax.ShapeDtypeStruct(
+                (batch, cfg.enc_seq, cfg.d_model), jnp.bfloat16
+            )
+        return specs
+    return {"token": jax.ShapeDtypeStruct((batch, 1), i32)}
 
 
 def loss_fn(

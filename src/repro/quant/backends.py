@@ -100,9 +100,17 @@ def _xla_q8_grouped(a, b, c, out_dtype):
 
 
 def _pallas_q8_fn(interpret: bool):
+    name = "pallas_q8_interpret" if interpret else "pallas_q8"
+
     def run(a, b, c, out_dtype):
         aq, bq = _quantize_operands(a, b)
-        bm, bn, bk = q8_block_shape(a.shape[0], a.shape[1], b.shape[1])
+        # Through the registry's shared resolution path (tuning table first,
+        # q8_block_shape heuristic second), keyed at itemsize=1 — the width
+        # of the streamed panels, not the caller-visible dtype.
+        bm, bn, bk = ops._tile_for(
+            a.shape[0], a.shape[1], b.shape[1], 1,
+            family="dense", backend=name,
+        )
         return opope_gemm_q8(
             aq.q, aq.scale, bq.q, bq.scale, c,
             block_m=bm, block_n=bn, block_k=bk,
@@ -113,9 +121,14 @@ def _pallas_q8_fn(interpret: bool):
 
 
 def _pallas_q8_grouped_fn(interpret: bool):
+    name = "pallas_q8_interpret" if interpret else "pallas_q8"
+
     def run(a, b, c, out_dtype):
         aq, bq = _quantize_grouped_operands(a, b)
-        bm, bn, bk = q8_block_shape(a.shape[1], a.shape[2], b.shape[2])
+        bm, bn, bk = ops._tile_for(
+            a.shape[1], a.shape[2], b.shape[2], 1,
+            family="grouped", groups=a.shape[0], backend=name,
+        )
         return opope_gemm_q8_grouped(
             aq.q, aq.scale, bq.q, bq.scale, c,
             block_m=bm, block_n=bn, block_k=bk,
@@ -183,6 +196,7 @@ def register_quant_backends() -> None:
         grouped=_pallas_q8_grouped_fn(interpret=False),
         grouped_available=_pallas_q8_grouped_compiles,
         family="q8",
+        tile_fn=q8_block_shape,
     )
     ops.register_backend(
         "pallas_q8_interpret",
@@ -191,6 +205,7 @@ def register_quant_backends() -> None:
         grad_backend="xla",
         grouped=_pallas_q8_grouped_fn(interpret=True),
         family="q8",
+        tile_fn=q8_block_shape,
     )
 
 

@@ -86,17 +86,18 @@ def _q8_preload_kernel(
         o_ref[...] = scaled.astype(o_ref.dtype)
 
 
-def q8_block_shape(m: int, k: int, n: int):
-    """Block shapes for int8 operands: the fp selection at elem_bytes=1 with
-    the M block rounded to the int8 sublane tile (32).
+def q8_block_shape(m: int, k: int, n: int, elem_bytes: int = 1):
+    """Block-shape **heuristic** for int8 operands: the fp selection at
+    elem_bytes=1 with the M block rounded to the int8 sublane tile (32).
 
-    The sole owner of q8 tile selection (the registered backend calls this);
-    it goes through ``ops._tile_for`` so int8 shapes share the same bounded
-    LRU memo as the fp backends (keyed by itemsize=1).
+    This is the ``tile_fn`` the q8 backends register with the ops registry —
+    pure (no memo, no table): the registry's ``_tile_for`` wraps it with the
+    shared bounded LRU memo and consults the tuning table first, exactly like
+    the fp backends.
     """
-    from repro.kernels import ops
+    from repro.kernels.opope_gemm import default_block_shape
 
-    bm, bn, bk = ops._tile_for(m, k, n, 1)
+    bm, bn, bk = default_block_shape(m, k, n, elem_bytes=elem_bytes)
     return _rup(bm, 32), bn, bk
 
 

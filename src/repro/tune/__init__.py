@@ -1,0 +1,67 @@
+"""Autotuning subsystem: measured tile selection for the O-POPE backends.
+
+The paper's utilization story depends on the right tile shapes; the repo's
+heuristic (``kernels.opope_gemm.default_block_shape``) is one guess per
+shape. This package replaces guessing with measurement, in three parts:
+
+* :mod:`~repro.tune.search` — candidate ``(bm, bn, bk)`` generation pruned
+  by the analytic cost model behind ``core.tiling.choose_tile``, then timed
+  on-device (compile + warmup + steady state) through the kernels'
+  ``block_*=`` parameters;
+* :mod:`~repro.tune.table` — the persistent JSON tuning table (keyed by
+  backend, shape family, (M, K, N, G), dtype, device kind) that
+  ``kernels.ops._tile_for`` consults before the heuristic, with env override
+  ``REPRO_TUNE_TABLE`` and hard-constraint validation at lookup;
+* :mod:`~repro.tune.capture` — workload harvesting: one ``jax.eval_shape``
+  of a ``configs/`` model under ``ops.capture_shapes`` yields its entire
+  GEMM shape set, which the ``repro-tune`` CLI (``repro.launch.tune``)
+  tunes offline.
+
+``ops.tile_source(backend, m, k, n)`` reports whether a given shape resolves
+``"tuned"`` or ``"heuristic"``.
+"""
+
+from .capture import capture_gemm_shapes, harvest_model_shapes
+from .search import (
+    TUNABLE_BACKENDS,
+    CandidateResult,
+    candidate_blocks,
+    median_time_us,
+    tune_shape,
+    tune_workload,
+)
+from .table import (
+    DEFAULT_TABLE_PATH,
+    ENV_VAR,
+    GemmShape,
+    SCHEMA_VERSION,
+    TableFormatError,
+    TuneEntry,
+    TuneKey,
+    TuningTable,
+    active_table_path,
+    device_kind,
+    load_active_table,
+)
+
+__all__ = [
+    "TUNABLE_BACKENDS",
+    "CandidateResult",
+    "candidate_blocks",
+    "median_time_us",
+    "tune_shape",
+    "tune_workload",
+    "capture_gemm_shapes",
+    "harvest_model_shapes",
+    "DEFAULT_TABLE_PATH",
+    "ENV_VAR",
+    "GemmShape",
+    "SCHEMA_VERSION",
+    "TableFormatError",
+    "TuneEntry",
+    "TuneKey",
+    "TuningTable",
+    "active_table_path",
+    "device_kind",
+    "load_active_table",
+]

@@ -1,0 +1,79 @@
+"""Workload harvesting: which GEMM shapes does a model actually run?
+
+Tuning a serving deployment offline needs the exact (M, K, N, G, dtype)
+set its layers push through the registry. Rather than hand-listing them,
+``repro.kernels.ops`` grows a shape-capture mode (``ops.capture_shapes``):
+every ``matmul`` / ``grouped_matmul`` records its flattened shape at *trace*
+time, so one ``jax.eval_shape`` of a model's loss (or prefill) under capture
+yields the complete GEMM workload of a ``configs/`` architecture with zero
+FLOPs and zero parameter allocation — grok-314b harvests in milliseconds.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import List, Optional, Union
+
+from .table import GemmShape
+
+__all__ = ["capture_gemm_shapes", "harvest_model_shapes"]
+
+
+class capture_gemm_shapes:
+    """Context manager yielding the deduped list of :class:`GemmShape` routed
+    through the registry inside the block (first-seen order)."""
+
+    def __enter__(self) -> List[GemmShape]:
+        from repro.kernels import ops
+
+        self._cm = ops.capture_shapes()
+        self._raw = self._cm.__enter__()
+        self._out: List[GemmShape] = []
+        return self._out
+
+    def __exit__(self, *exc) -> bool:
+        self._cm.__exit__(*exc)
+        seen = set()
+        for family, m, k, n, g, dtype in self._raw:
+            shape = GemmShape(family=family, m=m, k=k, n=n, g=g, dtype=dtype)
+            if shape not in seen:
+                seen.add(shape)
+                self._out.append(shape)
+        return False
+
+
+def harvest_model_shapes(
+    arch: Union[str, object],
+    *,
+    batch: int = 1,
+    seq: int = 128,
+    backend: Optional[str] = None,
+) -> List[GemmShape]:
+    """Every distinct GEMM shape one training step of ``arch`` runs.
+
+    ``arch`` is a ``configs/`` name or an ``ArchConfig``. ``backend`` is
+    threaded through so a :class:`~repro.quant.policy.PrecisionPolicy` (or an
+    explicit q8 backend) captures the quantized routing it would really use.
+    Abstract evaluation only — no parameters are materialized.
+    """
+    import jax
+
+    from repro.models import api as model_api
+
+    if isinstance(arch, str):
+        from repro.configs import get_config
+
+        cfg = get_config(arch)
+    else:
+        cfg = arch
+
+    params = jax.eval_shape(
+        functools.partial(model_api.init_params, cfg), jax.random.key(0)
+    )
+    specs = model_api.input_specs(cfg, batch=batch, seq=seq, kind="train")
+    with capture_gemm_shapes() as shapes:
+        jax.eval_shape(
+            functools.partial(model_api.loss_fn, cfg, backend=backend),
+            params, specs,
+        )
+    return shapes

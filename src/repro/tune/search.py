@@ -1,0 +1,289 @@
+"""Empirical tile search: analytic pruning, then on-device timing.
+
+The search space for one workload cell is every legal ``(bm, bn, bk)`` block
+shape of the O-POPE kernels (alignment + VMEM-budget constraints from
+``kernels.opope_gemm.validate_block_shape``). Exhaustively timing it on
+device is wasteful — OpenGeMM (arXiv:2411.09543) and the Versal GEMM DSE
+(arXiv:2511.06907) both prune with a performance model first — so candidates
+are ranked by the analytic cluster model behind ``core.tiling.choose_tile``
+(:func:`repro.core.tiling.rank_plans`: double-buffered compute/DMA overlap
+per tile) and only the modeled top-K are measured: compile + warmup, then
+steady-state timing, winner persisted to the :class:`~repro.tune.table.TuningTable`.
+
+The backend's own heuristic tile is **always** in the measured set, so a
+tuned entry is never slower than the heuristic under the same measurement
+protocol — the tuner can only confirm or improve the default.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.engine import OPOPE_16x16_FP16
+from repro.core.tiling import rank_plans
+from repro.kernels import ops
+from repro.kernels.opope_gemm import opope_gemm, validate_block_shape
+from repro.kernels.opope_grouped import opope_gemm_grouped
+
+from .table import GemmShape, TuneEntry, TuneKey, TuningTable, device_kind
+
+__all__ = [
+    "TUNABLE_BACKENDS",
+    "CandidateResult",
+    "candidate_blocks",
+    "median_time_us",
+    "tune_shape",
+    "tune_workload",
+]
+
+# backend name -> interpret mode, for the backends whose kernel entry points
+# the tuner knows how to drive with explicit block_*= overrides. Tunability
+# itself and the numerics family come from the ops registry (tile_fn /
+# family_of) — this map only exists because a registered backend fn hides
+# its block parameters, so timing a *specific* candidate needs the
+# underlying kernel entry point, which the registry doesn't expose. A new
+# backend with a tile_fn must add its kernel dispatch here (and to
+# _make_runner) to be CLI-tunable; tune_shape says so in its error.
+TUNABLE_BACKENDS: Dict[str, bool] = {
+    "pallas": False,
+    "pallas_interpret": True,
+    "pallas_q8": False,
+    "pallas_q8_interpret": True,
+}
+
+_BM_CHOICES = (8, 16, 32, 64, 128, 256)
+_BN_CHOICES = (128, 256, 512)
+_BK_CHOICES = (128, 256, 512)
+
+
+def _rup(x: int, mult: int) -> int:
+    return mult * math.ceil(x / mult)
+
+
+def _clamp_block(
+    m: int, k: int, n: int, bm: int, bn: int, bk: int, m_align: int
+) -> Tuple[int, int, int]:
+    """Apply the kernels' own clamping so candidates that the kernel would
+    collapse to the same effective blocks dedupe before timing."""
+    bm = _rup(min(bm, _rup(m, m_align)), m_align)
+    bn = min(bn, _rup(n, 128))
+    bk = min(bk, _rup(k, 128))
+    return bm, bn, bk
+
+
+def candidate_blocks(
+    m: int, k: int, n: int, *, itemsize: int = 4, m_align: int = 8
+) -> List[Tuple[int, int, int]]:
+    """Every legal deduped (bm, bn, bk) candidate for this GEMM shape."""
+    out: List[Tuple[int, int, int]] = []
+    seen = set()
+    for bm in _BM_CHOICES:
+        if bm % m_align:
+            continue
+        for bn in _BN_CHOICES:
+            for bk in _BK_CHOICES:
+                cand = _clamp_block(m, k, n, bm, bn, bk, m_align)
+                if cand in seen:
+                    continue
+                seen.add(cand)
+                if validate_block_shape(
+                    *cand, elem_bytes=itemsize, m_align=m_align
+                ):
+                    out.append(cand)
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class CandidateResult:
+    block: Tuple[int, int, int]
+    us: float
+    gflops: float
+    modeled_cycles: Optional[int]
+    is_heuristic: bool
+
+
+def median_time_us(run: Callable[[], object], *, iters: int, warmup: int) -> float:
+    """Median steady-state wall time of ``run`` in microseconds.
+
+    The first (warmup) calls absorb compilation; ``block_until_ready`` on
+    the result bounds each sample (async dispatch otherwise times nothing).
+    Shared with ``benchmarks/kernel_bench.py`` so heuristic, tuned and
+    untiled rows all use one measurement protocol.
+    """
+    import jax
+
+    for _ in range(max(1, warmup)):
+        jax.tree.leaves(run())[0].block_until_ready()
+    samples = []
+    for _ in range(max(1, iters)):
+        t0 = time.perf_counter()
+        jax.tree.leaves(run())[0].block_until_ready()
+        samples.append((time.perf_counter() - t0) * 1e6)
+    samples.sort()
+    return max(samples[len(samples) // 2], 1e-3)
+
+
+def _make_runner(
+    backend: str, shape: GemmShape, seed: int = 0
+) -> Callable[[Tuple[int, int, int]], Callable[[], object]]:
+    """Build ``blocks -> (zero-arg timed call)`` for one workload cell.
+
+    Operand generation (and, for the q8 backends, quantization) happens once
+    here, outside every timed region: the tile choice affects the GEMM
+    schedule only, and the measurement must see exactly that.
+    """
+    import jax.numpy as jnp
+
+    interpret = TUNABLE_BACKENDS[backend]
+    family = ops.family_of(backend)
+    rng = np.random.default_rng(seed)
+    g = shape.g if shape.family == "grouped" else 0
+    lead = (g,) if g else ()
+    a = rng.standard_normal(lead + (shape.m, shape.k)).astype(np.float32)
+    b = rng.standard_normal(lead + (shape.k, shape.n)).astype(np.float32)
+
+    if family == "q8":
+        from repro.quant.quantize import quantize
+
+        if g:
+            aq = quantize(jnp.asarray(a), "int8", axis=(0, 1))
+            bq = quantize(jnp.asarray(b), "int8", axis=(0, 2))
+            from repro.quant.pallas_q8 import opope_gemm_q8_grouped as kern
+        else:
+            aq = quantize(jnp.asarray(a), "int8", axis=0)
+            bq = quantize(jnp.asarray(b), "int8", axis=1)
+            from repro.quant.pallas_q8 import opope_gemm_q8 as kern
+
+        def runner(blocks):
+            bm, bn, bk = blocks
+            return lambda: kern(
+                aq.q, aq.scale, bq.q, bq.scale,
+                block_m=bm, block_n=bn, block_k=bk, interpret=interpret,
+            )
+
+        return runner
+
+    dtype = jnp.dtype(shape.dtype)
+    aj = jnp.asarray(a, dtype)
+    bj = jnp.asarray(b, dtype)
+    kern = opope_gemm_grouped if g else opope_gemm
+
+    def runner(blocks):
+        bm, bn, bk = blocks
+        return lambda: kern(
+            aj, bj, block_m=bm, block_n=bn, block_k=bk, interpret=interpret,
+        )
+
+    return runner
+
+
+def tune_shape(
+    backend: str,
+    shape: GemmShape,
+    *,
+    top_k: int = 4,
+    iters: int = 3,
+    warmup: int = 1,
+    seed: int = 0,
+) -> Tuple[TuneEntry, List[CandidateResult]]:
+    """Tune one workload cell on one backend; returns the winning entry plus
+    every measured candidate (the heuristic tile is always among them)."""
+    if backend not in TUNABLE_BACKENDS:
+        if backend in ops.tunable_backends():
+            raise ValueError(
+                f"backend {backend!r} registers a tile_fn but the tuner has "
+                f"no kernel dispatch for it — add it to "
+                f"search.TUNABLE_BACKENDS/_make_runner to make it tunable"
+            )
+        raise ValueError(
+            f"backend {backend!r} has no tile knob to tune; tunable: "
+            f"{sorted(TUNABLE_BACKENDS)}"
+        )
+    family = ops.family_of(backend)
+    itemsize = 1 if family == "q8" else int(np.dtype(shape.dtype).itemsize)
+    m_align = 32 if family == "q8" else 8
+    heuristic = _clamp_block(
+        shape.m, shape.k, shape.n,
+        *ops.heuristic_tile(backend, shape.m, shape.k, shape.n,
+                            dtype=shape.dtype),
+        m_align,
+    )
+
+    cands = candidate_blocks(
+        shape.m, shape.k, shape.n, itemsize=itemsize, m_align=m_align
+    )
+    if heuristic not in cands:
+        cands.append(heuristic)
+    # Analytic pruning: score every candidate with the cluster cost model
+    # ((tm, tk, tn) order there), keep the modeled top-K — plus the heuristic,
+    # which is measured unconditionally as the baseline.
+    effective_m = shape.m * (shape.g if shape.family == "grouped" else 1)
+    scored = rank_plans(
+        OPOPE_16x16_FP16, effective_m, shape.k, shape.n,
+        [(bm, bk, bn) for bm, bn, bk in cands],
+        elem_bytes=itemsize, top_k=len(cands),
+    )
+    modeled = {(tm, tn, tk): cyc for (tm, tk, tn), cyc in scored}
+    keep = [(tm, tn, tk) for (tm, tk, tn), _ in scored[: max(1, top_k)]]
+    if heuristic not in keep:
+        keep.append(heuristic)
+
+    runner = _make_runner(backend, shape, seed=seed)
+    flops = 2.0 * shape.m * shape.k * shape.n * max(1, shape.g)
+    results: List[CandidateResult] = []
+    for blocks in keep:
+        us = median_time_us(runner(blocks), iters=iters, warmup=warmup)
+        results.append(CandidateResult(
+            block=blocks, us=us, gflops=flops / us / 1e3,
+            modeled_cycles=modeled.get(blocks),
+            is_heuristic=blocks == heuristic,
+        ))
+    best = min(results, key=lambda r: r.us)
+    entry = TuneEntry(
+        key=TuneKey(
+            backend=backend, shape_family=shape.family,
+            m=shape.m, k=shape.k, n=shape.n, g=shape.g,
+            dtype="int8" if family == "q8" else shape.dtype,
+            device_kind=device_kind(),
+        ),
+        block=best.block, us=best.us, gflops=best.gflops,
+        modeled_cycles=best.modeled_cycles,
+    )
+    return entry, results
+
+
+def tune_workload(
+    shapes: Sequence[GemmShape],
+    *,
+    backends: Iterable[str],
+    table: Optional[TuningTable] = None,
+    top_k: int = 4,
+    iters: int = 3,
+    warmup: int = 1,
+    log: Optional[Callable[[str], None]] = None,
+) -> TuningTable:
+    """Tune every (shape x backend) cell into ``table`` (new one if None)."""
+    table = table if table is not None else TuningTable()
+    for backend in backends:
+        for shape in shapes:
+            entry, results = tune_shape(
+                backend, shape, top_k=top_k, iters=iters, warmup=warmup
+            )
+            table.put(entry)
+            if log is not None:
+                heur = next(r for r in results if r.is_heuristic)
+                gain = heur.us / entry.us if entry.us else 1.0
+                log(
+                    f"{backend:>20s} {shape.family:>7s} "
+                    f"g={shape.g:<3d} {shape.m}x{shape.k}x{shape.n} "
+                    f"{shape.dtype}: best {entry.block} {entry.us:.1f}us "
+                    f"({entry.gflops:.2f} GFLOP/s), heuristic {heur.block} "
+                    f"{heur.us:.1f}us -> {gain:.2f}x, "
+                    f"{len(results)} candidates timed"
+                )
+    return table
