@@ -9,6 +9,15 @@ measurement protocol, and the heuristic tile is always one of the measured
 candidates — so ``tuned >= heuristic`` GFLOP/s holds row-by-row (ties when
 the heuristic already wins), which CI asserts.
 
+Each tunable row also races the fused-epilogue writeback against the
+post-hoc elementwise pass at the tuned tile
+(``repro.tune.search.probe_epilogue_fusion``; bias + silu, the canonical MLP
+writeback): ``us_epilogue_fused`` / ``us_epilogue_posthoc`` /
+``us_epilogue_decided``, with the persisted verdict in ``epilogue_fused``
+and the registry's answer in ``fusion_source``. The decided configuration is
+``min(fused, post-hoc)`` from one probe, so decided >= unfused throughput
+holds row-by-row — asserted here the same way as tuned >= heuristic.
+
 On this CPU container the Pallas backends run in interpret mode: wall time
 is NOT indicative of TPU performance (correctness, tile machinery and the
 relative heuristic-vs-tuned ordering are what is exercised), and the
@@ -29,6 +38,7 @@ is (re)generated.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import time
 from typing import Dict, List, Optional, Tuple
@@ -42,10 +52,12 @@ from repro.kernels import ops
 from repro.kernels.ref import reference_grouped_matmul, reference_matmul
 from repro.tune import (
     GemmShape,
+    PROBE_EPILOGUE,
     TUNABLE_BACKENDS,
     TuningTable,
     active_table_path,
     device_kind,
+    probe_epilogue_fusion,
     tune_shape,
 )
 from repro.tune.search import median_time_us
@@ -150,7 +162,25 @@ def bench_kernels_json(
                 entry, cands = tune_shape(
                     backend, shape, top_k=top_k,
                     iters=1 if interpret else iters,
+                    probe_epilogue=False,
                 )
+                # One epilogue probe at the winning tile feeds both the
+                # fused/unfused columns and the persisted verdict, so the
+                # JSON and the table can never disagree on one run.
+                probe = (
+                    probe_epilogue_fusion(
+                        backend, shape, entry.block,
+                        iters=1 if interpret else iters,
+                    )
+                    if ops.epilogue_capable(backend) else None
+                )
+                if probe is not None:
+                    entry = dataclasses.replace(
+                        entry, fuse_epilogue=probe.fuse
+                    )
+                    # decided = min(fused, post-hoc) by construction: the
+                    # recorded verdict never loses to the unfused pass.
+                    assert probe.decided_us <= probe.posthoc_us, probe
                 table.put(entry)
                 heur = next(c for c in cands if c.is_heuristic)
                 row = {
@@ -162,6 +192,10 @@ def bench_kernels_json(
                     "gflops_tuned": entry.gflops,
                     "tunable": True,
                     "candidates_timed": len(cands),
+                    "us_epilogue_fused": probe.fused_us if probe else None,
+                    "us_epilogue_posthoc": probe.posthoc_us if probe else None,
+                    "us_epilogue_decided": probe.decided_us if probe else None,
+                    "epilogue_fused": probe.fuse if probe else None,
                 }
             else:
                 us = _time_untiled(backend, shape, iters=iters)
@@ -175,6 +209,12 @@ def bench_kernels_json(
                     "gflops_tuned": gf,
                     "tunable": False,
                     "candidates_timed": 1,
+                    # XLA backends run epilogues post-hoc only (the registry
+                    # applies one fused-by-XLA pass) — no fused lane to race.
+                    "us_epilogue_fused": None,
+                    "us_epilogue_posthoc": None,
+                    "us_epilogue_decided": None,
+                    "epilogue_fused": None,
                 }
             row.update(
                 backend=backend,
@@ -208,8 +248,15 @@ def bench_kernels_json(
             )
             if row["tunable"] else "heuristic"
         )
+        row["fusion_source"] = (
+            ops.fusion_source(
+                row["backend"], row["m"], row["k"], row["n"], groups=row["g"]
+            )
+            if row["epilogue_fused"] is not None else "default"
+        )
     return {
         "schema": 1,
+        "epilogue_probe": list(PROBE_EPILOGUE),
         "device_kind": device_kind(),
         "roofline_reference": TPU_V5E.name,
         "interpret_note": (
@@ -265,9 +312,18 @@ def main() -> None:
         (r["gflops_tuned"] / r["gflops_heuristic"] for r in report["rows"]),
         default=1.0,
     )
+    probed = [r for r in report["rows"] if r["epilogue_fused"] is not None]
+    worst_ep = min(
+        (r["us_epilogue_posthoc"] / r["us_epilogue_decided"] for r in probed),
+        default=1.0,
+    )
+    fused_n = sum(1 for r in probed if r["epilogue_fused"])
     print(f"wrote {args.out}: {len(report['rows'])} rows on "
           f"{report['device_kind']}; min tuned/heuristic GFLOP/s ratio "
-          f"{worst:.3f} (>= 1.0 by construction)")
+          f"{worst:.3f} (>= 1.0 by construction); epilogue probe "
+          f"({'+'.join(report['epilogue_probe'])}): fused wins "
+          f"{fused_n}/{len(probed)}, min posthoc/decided time ratio "
+          f"{worst_ep:.3f} (>= 1.0 by construction)")
 
 
 if __name__ == "__main__":

@@ -36,7 +36,7 @@ import json
 import re
 from typing import Dict, List, Optional, Tuple
 
-__all__ = ["HloCensus", "census_hlo"]
+__all__ = ["HloCensus", "census_hlo", "elementwise_passes", "EXEMPT_SCOPES"]
 
 _DTYPE_BYTES = {
     "pred": 1, "s4": 1, "u4": 1,
@@ -304,3 +304,115 @@ def census_hlo(text: str) -> HloCensus:
         n_while=nw,
         max_trip=mt,
     )
+
+
+# ---------------------------------------------------------------------------
+# elementwise-pass census (the fused-epilogue acceptance metric)
+# ---------------------------------------------------------------------------
+
+# HLO opcodes that are elementwise *compute* — the ops a standalone
+# activation / residual / scale pass over a GEMM output would lower to.
+# Data-movement and dtype ops (convert, copy, broadcast, reshape, slice, ...)
+# are deliberately absent: the epilogue contract allows exactly one final
+# cast, and layout ops don't re-read the tensor for math.
+_ELEMENTWISE_OPS = {
+    "add", "subtract", "multiply", "divide", "remainder", "power",
+    "maximum", "minimum", "clamp", "select",
+    "exponential", "exponential-minus-one", "log", "log-plus-one",
+    "logistic", "tanh", "sqrt", "rsqrt", "cbrt",
+    "negate", "abs", "sign", "floor", "ceil",
+    "round-nearest-afz", "round-nearest-even",
+    "and", "or", "xor", "not", "compare",
+    "erf", "atan2", "sine", "cosine", "tan",
+}
+
+_OP_NAME_META = re.compile(r'metadata=\{[^}]*op_name="([^"]*)"')
+
+# The named scopes whose elementwise math is *legitimately* standalone —
+# reduction-coupled (softmax/norm stats need the whole row) or
+# position-dependent (rope), plus the epilogue lane itself (its ops sit at
+# the GEMM writeback, or — post-hoc lane — form the single fused pass the
+# registry guarantees). Everything else touching a GEMM-sized tensor is a
+# missed fusion.
+EXEMPT_SCOPES = ("opope_epilogue", "norm", "rope", "attn_core")
+
+
+def elementwise_passes(
+    text: str,
+    *,
+    min_elems: int = 1024,
+    exempt_scopes: Tuple[str, ...] = EXEMPT_SCOPES,
+) -> List[Dict[str, object]]:
+    """Standalone elementwise-compute instructions over big tensors.
+
+    Scans the post-fusion module (entry + while bodies + non-GEMM fusions)
+    and reports every elementwise-compute instruction whose result has at
+    least ``min_elems`` elements and whose ``op_name`` metadata path does not
+    pass through one of ``exempt_scopes``. Fusion computations containing a
+    ``dot`` are skipped wholesale — elementwise ops XLA already fused into a
+    GEMM are not standalone passes. The hot-path acceptance criterion for the
+    fused-epilogue refactor is ``len(...) == 0`` on a decode step
+    (tests/test_epilogue.py keeps it that way).
+
+    Each finding is a dict with ``computation`` / ``instruction`` / ``op`` /
+    ``elems`` / ``op_name`` keys — enough to locate the missed fusion in the
+    module text.
+    """
+    comps, entry = _parse_computations(text)
+    if entry is None:
+        raise ValueError("no ENTRY computation found in HLO text")
+
+    def _result_elems(inst: _Instr) -> int:
+        found = _SHAPE_RE.findall(inst.result_text)
+        if not found:
+            return 0
+        n = 1
+        for d in _dims(found[0][1]):
+            n *= d
+        return n
+
+    def _exempt(inst: _Instr) -> bool:
+        m = _OP_NAME_META.search(inst.line)
+        if not m:
+            return False
+        parts = m.group(1).split("/")
+        return any(s in parts for s in exempt_scopes)
+
+    findings: List[Dict[str, object]] = []
+    seen: set = set()
+
+    def walk(cname: str, fused: bool = False) -> None:
+        if cname in seen:
+            return
+        seen.add(cname)
+        instrs = comps.get(cname, [])
+        if fused and any(i.op == "dot" for i in instrs):
+            return  # GEMM fusion: its elementwise ops are already fused
+        for inst in instrs:
+            if inst.op == "while":
+                bm = _BODY.search(inst.line)
+                if bm:
+                    walk(bm.group(1))
+                continue
+            cm = _CALLS.search(inst.line)
+            if cm and cm.group(1) in comps:
+                walk(cm.group(1), fused=True)
+                continue
+            if inst.op not in _ELEMENTWISE_OPS:
+                continue
+            elems = _result_elems(inst)
+            if elems < min_elems or _exempt(inst):
+                continue
+            m = _OP_NAME_META.search(inst.line)
+            findings.append(
+                {
+                    "computation": cname,
+                    "instruction": inst.name,
+                    "op": inst.op,
+                    "elems": elems,
+                    "op_name": m.group(1) if m else "",
+                }
+            )
+
+    walk(entry)
+    return findings

@@ -1,0 +1,382 @@
+"""Fused GEMM epilogues: the post-ops that ride the accumulator writeback.
+
+O-POPE's output-stationary dataflow touches the [M, N] result exactly once —
+at writeback, when the resident accumulator leaves VMEM. Every activation,
+residual add or re-quantize applied *after* the GEMM as a separate XLA op
+re-reads that result from HBM and throws the data-movement win away. This
+module is the registry of post-ops that may instead be applied **to the
+fp32 accumulator, before the single final cast**, wherever the writeback
+happens:
+
+* inside the Pallas kernels (``opope_gemm``/``opope_gemm_grouped`` and the
+  q8 variants), on the resident tile, with operands streamed per-block;
+* post-hoc in :mod:`repro.kernels.ops` for backends without a fused writeback
+  (the XLA references): the backend produces the fp32 accumulator, the same
+  op chain runs on it, then the one cast — numerically identical by
+  construction, so the conformance contract (backend == reference, single
+  cast) extends to epilogues unchanged.
+
+An epilogue **spec** is a pipeline of named ops, each either parameterless
+(``"silu"``) or carrying one operand (``("residual", x)``). Operand *kinds*
+decide how the kernels stream them:
+
+========  ===========================  ==============================
+kind      operand shape (dense)        streamed per (bm, bn) tile as
+========  ===========================  ==============================
+none      —                            —
+scalar    scalar / ()-shaped           (1, 1), broadcast
+row       ``[N]``                      (1, bn) row, broadcast down M
+full      ``[..., N]`` matching out    (bm, bn) tile
+========  ===========================  ==============================
+
+Each op declares ``apply(acc_f32, operand) -> f32`` — pure jnp, traceable
+both inside a Pallas kernel body and at the XLA level — and optionally its
+own ``vjp``; :func:`epilogue_vjp` composes the chain's backward pass for the
+``custom_vjp`` rules in ``ops`` (ops without an explicit vjp differentiate
+through ``jax.vjp`` of their ``apply``).
+
+The built-in set covers the model stack: the ACT2FN-style activation table
+(``gelu``/``silu``/``swish``/``relu`` — :data:`ACTIVATIONS`, the single
+naming authority ``models.layers.ACT2FN`` re-exports), ``bias`` (+[N] row),
+``residual`` (+[M, N]), ``mul`` (x[M, N] — the SwiGLU gate lane),
+``scale`` (x[N] — an RMSNorm gamma), and ``requant_int8`` (re-quantize the
+accumulator onto the int8 grid with a calibrated scalar scale, so layer N's
+output feeds layer N+1's quantized GEMM without a dequant round trip;
+gradients pass straight-through).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "EpilogueOp",
+    "ACTIVATIONS",
+    "register_epilogue_op",
+    "epilogue_ops",
+    "op_def",
+    "op_kind",
+    "normalize_epilogue",
+    "canonicalize_operands",
+    "apply_epilogue",
+    "epilogue_vjp",
+    "SCOPE_NAME",
+]
+
+# The jax.named_scope every epilogue application runs under — fused in-kernel
+# or post-hoc. HLO instruction metadata keeps the scope name, which is how
+# the decode-step census (core.hlo_census.elementwise_passes) tells the one
+# sanctioned writeback pass from a stray hand-applied activation.
+SCOPE_NAME = "opope_epilogue"
+
+ApplyFn = Callable[[jax.Array, Optional[jax.Array]], jax.Array]
+# vjp(acc_in, operand, g) -> (d_acc, d_operand_or_None): cotangents of one
+# op given its *input* accumulator (the recomputed forward chain supplies it).
+VjpFn = Callable[
+    [jax.Array, Optional[jax.Array], jax.Array],
+    Tuple[jax.Array, Optional[jax.Array]],
+]
+
+_KINDS = ("none", "scalar", "row", "full")
+
+
+@dataclasses.dataclass(frozen=True)
+class EpilogueOp:
+    """One registered post-op: name, operand kind, fp32 apply, optional vjp."""
+
+    name: str
+    kind: str  # "none" | "scalar" | "row" | "full"
+    apply: ApplyFn
+    vjp: Optional[VjpFn] = None
+
+
+_REGISTRY: Dict[str, EpilogueOp] = {}
+
+
+def register_epilogue_op(
+    name: str,
+    kind: str,
+    apply: ApplyFn,
+    *,
+    vjp: Optional[VjpFn] = None,
+) -> None:
+    """Register (or replace) an epilogue op.
+
+    ``apply(acc_f32, operand)`` must be pure jnp (it traces inside Pallas
+    kernel bodies *and* at the XLA level) and must keep fp32: the single
+    final cast belongs to the GEMM, never to an epilogue op. Operands arrive
+    broadcast-ready against the accumulator (see module docstring), so most
+    binary ops are one jnp broadcast expression. ``vjp`` overrides the
+    default backward (``jax.vjp`` of ``apply``).
+    """
+    if kind not in _KINDS:
+        raise ValueError(f"bad epilogue operand kind {kind!r}; one of {_KINDS}")
+    if not callable(apply):
+        raise TypeError(f"epilogue apply for {name!r} is not callable")
+    _REGISTRY[name] = EpilogueOp(name, kind, apply, vjp=vjp)
+
+
+def epilogue_ops() -> List[str]:
+    """Names of every registered epilogue op."""
+    return list(_REGISTRY)
+
+
+def op_def(name: str) -> EpilogueOp:
+    op = _REGISTRY.get(name)
+    if op is None:
+        raise ValueError(
+            f"unknown epilogue op {name!r}; registered: {sorted(_REGISTRY)}"
+        )
+    return op
+
+
+def op_kind(name: str) -> str:
+    return op_def(name).kind
+
+
+# --------------------------------------------------------------------------
+# Built-in ops
+# --------------------------------------------------------------------------
+
+# The activation table — the one place activation *names* resolve (the
+# ACT2FN-style table of the model stack; models.layers.ACT2FN is a view of
+# this). All tanh-approximate gelu, matching jax.nn defaults.
+ACTIVATIONS: Dict[str, Callable[[jax.Array], jax.Array]] = {
+    "gelu": jax.nn.gelu,
+    "silu": jax.nn.silu,
+    "swish": jax.nn.silu,  # alias: same op, HF-style naming
+    "relu": lambda x: jnp.maximum(x, 0.0),
+}
+
+for _name, _fn in ACTIVATIONS.items():
+    register_epilogue_op(_name, "none", (lambda acc, _o, _f=_fn: _f(acc)))
+
+register_epilogue_op("bias", "row", lambda acc, o: acc + o)
+register_epilogue_op("residual", "full", lambda acc, o: acc + o)
+register_epilogue_op("mul", "full", lambda acc, o: acc * o)
+register_epilogue_op("scale", "row", lambda acc, o: acc * o)
+
+
+def _requant_int8(acc: jax.Array, s: jax.Array) -> jax.Array:
+    # Snap the accumulator onto the int8 grid of a calibrated scalar scale:
+    # the output values are *exact* integers in [-127.0, 127.0] (stored via
+    # the single final cast, typically to int8 — exact integral floats make
+    # the truncating float->int cast safe) that layer N+1's quantized GEMM
+    # consumes directly — no dequantized copy, no second amax pass.
+    return jnp.clip(jnp.round(acc / s), -127.0, 127.0)
+
+
+def _requant_int8_vjp(
+    acc: jax.Array, s: jax.Array, g: jax.Array
+) -> Tuple[jax.Array, jax.Array]:
+    # Straight-through estimator: the quantization grid is invisible to the
+    # gradient (QAT fake-quant) — out ~ acc/s where unclipped, 0 where
+    # clipped. d/dacc = 1/s, d/ds = -acc/s^2, masked to the pass-through
+    # region.
+    x = acc / s
+    gm = g * (jnp.abs(x) <= 127.0)
+    d_acc = gm / s
+    d_s = jnp.sum(gm * (-x / s)).reshape(s.shape)
+    return d_acc, d_s
+
+
+register_epilogue_op("requant_int8", "scalar", _requant_int8, vjp=_requant_int8_vjp)
+
+
+# --------------------------------------------------------------------------
+# Spec normalization
+# --------------------------------------------------------------------------
+
+# A user-facing epilogue spec: one step or a sequence of steps, each a bare
+# name ("silu") or a (name, operand) pair (("residual", x)).
+Step = Union[str, Tuple[str, Any]]
+EpilogueSpec = Union[Step, Sequence[Step]]
+
+
+def normalize_epilogue(
+    spec: Optional[EpilogueSpec],
+) -> Tuple[Tuple[str, ...], Tuple[Any, ...]]:
+    """Normalize a spec to ``(step_names, raw_operands)``.
+
+    ``step_names`` is hashable (it rides static/nondiff argument lanes);
+    ``raw_operands`` holds one entry per step whose kind takes an operand,
+    in pipeline order, shapes not yet canonicalized (see
+    :func:`canonicalize_operands`). Unknown op names and arity mismatches
+    raise — a typo'd activation must never silently become identity.
+    """
+    if spec is None:
+        return (), ()
+    if isinstance(spec, str):
+        steps: Sequence[Step] = [spec]
+    elif (
+        isinstance(spec, tuple)
+        and len(spec) == 2
+        and isinstance(spec[0], str)
+        # the second element is an operand (array/scalar), not another step:
+        # ("silu", ("mul", x)) is a two-step sequence, ("residual", x) is one
+        and not isinstance(spec[1], (str, tuple, list))
+    ):
+        steps = [spec]
+    else:
+        steps = list(spec)
+    names: List[str] = []
+    operands: List[Any] = []
+    for step in steps:
+        if isinstance(step, str):
+            name, operand = step, None
+        elif isinstance(step, tuple) and len(step) == 2:
+            name, operand = step
+        else:
+            raise ValueError(
+                f"bad epilogue step {step!r}: want 'name' or ('name', operand)"
+            )
+        op = op_def(name)
+        if op.kind == "none":
+            if operand is not None:
+                raise ValueError(f"epilogue op {name!r} takes no operand")
+        else:
+            if operand is None:
+                raise ValueError(
+                    f"epilogue op {name!r} ({op.kind}) needs an operand: "
+                    f"pass ({name!r}, operand)"
+                )
+            operands.append(operand)
+        names.append(name)
+    return tuple(names), tuple(operands)
+
+
+def canonicalize_operands(
+    steps: Tuple[str, ...],
+    operands: Tuple[Any, ...],
+    *,
+    n: int,
+    m: int,
+    groups: int = 0,
+    batch_shape: Tuple[int, ...] = (),
+) -> Tuple[jax.Array, ...]:
+    """Reshape raw operands broadcast-ready against the [M, N] (or
+    [G, M, N]) accumulator, validating shapes.
+
+    dense:   scalar -> (1, 1);  row [N] -> (1, N);  full batch x N -> (M, N)
+    grouped: scalar -> (1, 1, 1); row [G, N] -> (G, 1, N); full -> (G, M, N)
+    """
+    out: List[jax.Array] = []
+    it = iter(operands)
+    for name in steps:
+        kind = op_kind(name)
+        if kind == "none":
+            continue
+        raw = next(it)
+        x = jnp.asarray(raw)
+        if kind == "scalar":
+            if x.size != 1:
+                raise ValueError(
+                    f"epilogue op {name!r} wants a scalar operand; got "
+                    f"shape {x.shape}"
+                )
+            shape = (1, 1, 1) if groups else (1, 1)
+            out.append(x.astype(jnp.float32).reshape(shape))
+        elif kind == "row":
+            if groups:
+                if x.shape == (n,):
+                    x = jnp.broadcast_to(x, (groups, n))
+                if x.shape != (groups, n):
+                    raise ValueError(
+                        f"epilogue op {name!r} row operand shape {x.shape} != "
+                        f"{(groups, n)} (or broadcastable {(n,)})"
+                    )
+                out.append(x.reshape(groups, 1, n))
+            else:
+                if x.shape != (n,):
+                    raise ValueError(
+                        f"epilogue op {name!r} row operand shape {x.shape} != {(n,)}"
+                    )
+                out.append(x.reshape(1, n))
+        else:  # full
+            want = (groups, m, n) if groups else (m, n)
+            if x.size != (groups or 1) * m * n:
+                raise ValueError(
+                    f"epilogue op {name!r} full operand shape {x.shape} "
+                    f"incompatible with output {batch_shape + (n,)}"
+                )
+            out.append(x.reshape(want))
+    return tuple(out)
+
+
+# --------------------------------------------------------------------------
+# Application + vjp (shared by kernels, the post-hoc lane, and conformance)
+# --------------------------------------------------------------------------
+
+
+def apply_epilogue(
+    acc: jax.Array,
+    steps: Tuple[str, ...],
+    operands: Tuple[jax.Array, ...],
+) -> jax.Array:
+    """Run the op pipeline on the fp32 accumulator (no final cast here).
+
+    Shape-agnostic: ``acc`` is a full [M, N] / [G, M, N] accumulator on the
+    post-hoc lane or one (bm, bn) resident tile inside a kernel body —
+    operands arrive broadcast-ready either way. Everything computes in fp32
+    (operands are widened), preserving the widening-accumulation contract.
+    """
+    with jax.named_scope(SCOPE_NAME):
+        x = acc.astype(jnp.float32)
+        it = iter(operands)
+        for name in steps:
+            op = op_def(name)
+            operand = None if op.kind == "none" else next(it).astype(jnp.float32)
+            x = op.apply(x, operand)
+    return x
+
+
+def epilogue_vjp(
+    steps: Tuple[str, ...],
+    operands: Tuple[jax.Array, ...],
+    acc: jax.Array,
+    g: jax.Array,
+) -> Tuple[jax.Array, Tuple[jax.Array, ...]]:
+    """Backward through the op pipeline at input accumulator ``acc``.
+
+    Returns ``(d_acc, d_operands)`` with ``d_operands`` aligned to
+    ``operands`` (reduced over broadcast dimensions). The forward chain is
+    recomputed op-by-op (the fused writeback never materializes the
+    intermediates); each op uses its registered ``vjp`` or differentiates
+    through ``jax.vjp`` of its ``apply``.
+    """
+    accf = acc.astype(jnp.float32)
+    ops_f = tuple(o.astype(jnp.float32) for o in operands)
+    # Forward replay, saving each op's input accumulator.
+    inputs: List[jax.Array] = []
+    per_step: List[Tuple[EpilogueOp, Optional[jax.Array]]] = []
+    it = iter(ops_f)
+    x = accf
+    for name in steps:
+        op = op_def(name)
+        operand = None if op.kind == "none" else next(it)
+        inputs.append(x)
+        per_step.append((op, operand))
+        x = op.apply(x, operand)
+    # Reverse sweep.
+    d_ops: List[Optional[jax.Array]] = [None] * len(per_step)
+    gx = g.astype(jnp.float32)
+    for i in range(len(per_step) - 1, -1, -1):
+        op, operand = per_step[i]
+        if op.vjp is not None:
+            gx, d_op = op.vjp(inputs[i], operand, gx)
+        elif op.kind == "none":
+            _, pull = jax.vjp(lambda a, _op=op: _op.apply(a, None), inputs[i])
+            (gx,) = pull(gx)
+            d_op = None
+        else:
+            _, pull = jax.vjp(
+                lambda a, o, _op=op: _op.apply(a, o), inputs[i], operand
+            )
+            gx, d_op = pull(gx)
+        d_ops[i] = d_op
+    grads = tuple(d for d in d_ops if d is not None)
+    return gx, grads

@@ -41,6 +41,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro import compat
+from repro.kernels import epilogue as _ep
 
 __all__ = [
     "opope_gemm",
@@ -95,6 +96,44 @@ def _gemm_preload_kernel(a_ref, b_ref, c_ref, o_ref, acc_ref, *, k_steps: int):
     @pl.when(k == k_steps - 1)
     def _writeback():
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _gemm_epilogue_kernel(*refs, k_steps: int, steps, has_c: bool):
+    """Epilogue-fused grid step: the op pipeline runs on the resident fp32
+    tile at writeback, before the single cast — the result never round-trips
+    HBM between the GEMM and its post-ops.
+
+    ``refs`` in pallas_call order: a, b, (c if ``has_c``), one ref per
+    operand-taking epilogue step, o, acc scratch. Epilogue operand blocks are
+    streamed by kind — (1, 1) scalar, (1, bn) row, (bm, bn) full — and
+    broadcast against the tile inside :func:`repro.kernels.epilogue.apply_epilogue`.
+    """
+    a_ref, b_ref = refs[0], refs[1]
+    idx = 3 if has_c else 2
+    c_ref = refs[2] if has_c else None
+    ep_refs = refs[idx:-2]
+    o_ref, acc_ref = refs[-2], refs[-1]
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        if c_ref is None:
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+        else:
+            acc_ref[...] = jnp.broadcast_to(
+                c_ref[...].astype(jnp.float32), acc_ref.shape
+            )
+
+    acc_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == k_steps - 1)
+    def _writeback():
+        acc = _ep.apply_epilogue(
+            acc_ref[...], steps, tuple(r[...] for r in ep_refs)
+        )
+        o_ref[...] = acc.astype(o_ref.dtype)
 
 
 def default_block_shape(
@@ -159,6 +198,7 @@ def padding_waste(m: int, k: int, n: int, bm: int, bn: int, bk: int) -> float:
         "block_k",
         "out_dtype",
         "interpret",
+        "epilogue",
     ),
 )
 def opope_gemm(
@@ -171,8 +211,16 @@ def opope_gemm(
     block_k: int = 256,
     out_dtype: Optional[jnp.dtype] = None,
     interpret: bool = False,
+    epilogue: Tuple[str, ...] = (),
+    epilogue_operands: Tuple[jax.Array, ...] = (),
 ) -> jax.Array:
     """``O = A @ B (+ C)`` with the O-POPE dataflow. a: [M,K], b: [K,N].
+
+    ``epilogue`` names a pipeline of registered post-ops (static; see
+    :mod:`repro.kernels.epilogue`) applied to the resident fp32 accumulator
+    at writeback, before the single final cast; ``epilogue_operands`` carries
+    one canonical-dense-shape array per operand-taking step — scalar ``(1,1)``,
+    row ``(1,N)``, full ``(M,N)`` — streamed per-tile by kind.
 
     ``interpret=True`` runs the kernel body in the Pallas interpreter (CPU) —
     used for all correctness tests in this container; on a real TPU the same
@@ -215,6 +263,32 @@ def opope_gemm(
         kernel = functools.partial(_gemm_preload_kernel, k_steps=k_steps)
     else:
         kernel = functools.partial(_gemm_kernel, k_steps=k_steps)
+
+    if epilogue:
+        # One streamed operand per operand-taking step, blocked by kind.
+        # Zero-pad is safe throughout: every built-in op maps 0 -> 0 on the
+        # pad region or the pad is sliced off below before anyone reads it.
+        it = iter(epilogue_operands)
+        for name in epilogue:
+            kind = _ep.op_kind(name)
+            if kind == "none":
+                continue
+            x = next(it)
+            if kind == "scalar":
+                in_specs.append(pl.BlockSpec((1, 1), lambda i, j, kk: (0, 0)))
+                operands.append(x.reshape(1, 1))
+            elif kind == "row":
+                in_specs.append(pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)))
+                operands.append(_pad2(x.reshape(1, n), 1, np_))
+            else:  # full
+                in_specs.append(pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)))
+                operands.append(_pad2(x.reshape(m, n), mp, np_))
+        kernel = functools.partial(
+            _gemm_epilogue_kernel,
+            k_steps=k_steps,
+            steps=epilogue,
+            has_c=c is not None,
+        )
 
     out = pl.pallas_call(
         kernel,

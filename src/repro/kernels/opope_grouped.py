@@ -32,7 +32,7 @@ from __future__ import annotations
 
 import functools
 import math
-from typing import Optional
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -40,6 +40,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro import compat
+from repro.kernels import epilogue as _ep
 
 __all__ = ["opope_gemm_grouped"]
 
@@ -84,9 +85,49 @@ def _grouped_preload_kernel(a_ref, b_ref, c_ref, o_ref, acc_ref, *, k_steps: int
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)[None]
 
 
+def _grouped_epilogue_kernel(*refs, k_steps: int, steps, has_c: bool):
+    """Epilogue-fused (g, m, n, k) grid step — the grouped analogue of
+    ``opope_gemm._gemm_epilogue_kernel``: the op pipeline runs on group g's
+    resident fp32 tile at writeback, before the single cast.
+
+    ``refs`` order: a, b, (c if ``has_c``), one ref per operand-taking
+    epilogue step, o, acc scratch. Epilogue operand blocks carry a leading
+    group dim — (1, 1, 1) scalar, (1, 1, bn) row, (1, bm, bn) full — dropped
+    with ``ref[0]`` before broadcasting against the 2-D tile.
+    """
+    a_ref, b_ref = refs[0], refs[1]
+    idx = 3 if has_c else 2
+    c_ref = refs[2] if has_c else None
+    ep_refs = refs[idx:-2]
+    o_ref, acc_ref = refs[-2], refs[-1]
+    k = pl.program_id(3)
+
+    @pl.when(k == 0)
+    def _init():
+        if c_ref is None:
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+        else:
+            acc_ref[...] = jnp.broadcast_to(
+                c_ref[0].astype(jnp.float32), acc_ref.shape
+            )
+
+    acc_ref[...] += jnp.dot(
+        a_ref[0], b_ref[0], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == k_steps - 1)
+    def _writeback():
+        acc = _ep.apply_epilogue(
+            acc_ref[...], steps, tuple(r[0] for r in ep_refs)
+        )
+        o_ref[...] = acc.astype(o_ref.dtype)[None]
+
+
 @functools.partial(
     jax.jit,
-    static_argnames=("block_m", "block_n", "block_k", "out_dtype", "interpret"),
+    static_argnames=(
+        "block_m", "block_n", "block_k", "out_dtype", "interpret", "epilogue",
+    ),
 )
 def opope_gemm_grouped(
     a: jax.Array,
@@ -98,12 +139,18 @@ def opope_gemm_grouped(
     block_k: int = 256,
     out_dtype: Optional[jnp.dtype] = None,
     interpret: bool = False,
+    epilogue: Tuple[str, ...] = (),
+    epilogue_operands: Tuple[jax.Array, ...] = (),
 ) -> jax.Array:
     """``O[g] = A[g] @ B[g] (+ C[g])``. a: [G, M, K], b: [G, K, N].
 
     ``c`` is ``None``, a full ``[G, M, N]`` preload, or a ``[G, N]`` per-group
-    bias row. ``interpret=True`` runs the body in the Pallas interpreter (CPU
-    tests); on a real TPU the same call lowers through Mosaic.
+    bias row. ``epilogue`` names a static pipeline of registered post-ops
+    (see :mod:`repro.kernels.epilogue`) fused at the accumulator writeback;
+    ``epilogue_operands`` carries one canonical-grouped-shape array per
+    operand-taking step — scalar ``(1,1,1)``, row ``(G,1,N)``, full
+    ``(G,M,N)``. ``interpret=True`` runs the body in the Pallas interpreter
+    (CPU tests); on a real TPU the same call lowers through Mosaic.
     """
     if a.ndim != 3 or b.ndim != 3 or a.shape[0] != b.shape[0] or a.shape[2] != b.shape[1]:
         raise ValueError(f"bad grouped GEMM shapes {a.shape} @ {b.shape}")
@@ -146,6 +193,37 @@ def opope_gemm_grouped(
         kernel = functools.partial(_grouped_preload_kernel, k_steps=k_steps)
     else:
         kernel = functools.partial(_grouped_kernel, k_steps=k_steps)
+
+    if epilogue:
+        # One streamed operand per operand-taking step, blocked by kind;
+        # zero-pad is safe (pad regions are sliced off below).
+        it = iter(epilogue_operands)
+        for name in epilogue:
+            kind = _ep.op_kind(name)
+            if kind == "none":
+                continue
+            x = next(it)
+            if kind == "scalar":
+                in_specs.append(
+                    pl.BlockSpec((1, 1, 1), lambda gg, i, j, kk: (0, 0, 0))
+                )
+                operands.append(x.reshape(1, 1, 1))
+            elif kind == "row":
+                in_specs.append(
+                    pl.BlockSpec((1, 1, bn), lambda gg, i, j, kk: (gg, 0, j))
+                )
+                operands.append(_pad3(x.reshape(g, 1, n), g, 1, np_))
+            else:  # full
+                in_specs.append(
+                    pl.BlockSpec((1, bm, bn), lambda gg, i, j, kk: (gg, i, j))
+                )
+                operands.append(_pad3(x.reshape(g, m, n), g, mp, np_))
+        kernel = functools.partial(
+            _grouped_epilogue_kernel,
+            k_steps=k_steps,
+            steps=epilogue,
+            has_c=c is not None,
+        )
 
     out = pl.pallas_call(
         kernel,

@@ -57,6 +57,25 @@ may change the execution engine but must land on a terminal of the same
 family — degradation never silently changes quantization behaviour
 (asserted registry-wide by ``tests/test_backend_conformance.py`` and the CI
 introspection step).
+
+**Fused epilogues** (:mod:`repro.kernels.epilogue`): ``matmul`` and
+``grouped_matmul`` take an ``epilogue=`` pipeline of registered post-ops
+(activations, bias, residual, RMSNorm scale, re-quantize) applied to the
+fp32 accumulator before the single final cast. Backends registered with
+``epilogue_fused=True`` run the pipeline *inside* their kernel at the
+accumulator writeback (the O-POPE point: the result is touched once); every
+other backend — including any fallback a request degrades onto — gets the
+**post-hoc lane**: the backend produces the fp32 accumulator, the same op
+pipeline runs on it under ``jax.named_scope("opope_epilogue")``, then the
+one cast. The two lanes are numerically identical by construction, so the
+conformance contract extends to epilogues unchanged, and degradation can
+never drop or double-apply a requested epilogue. Whether a *capable*
+backend actually fuses is a per-shape decision: tuning-table verdict first
+(:mod:`repro.tune` measures fused vs post-hoc), fuse-by-default second —
+:func:`fusion_source` reports which. The custom_vjp rules recompute the
+pre-epilogue accumulator in the backward pass (one extra GEMM — the fused
+forward never materializes it), backprop through the op pipeline, then run
+the usual two transposed GEMMs on the grad backend.
 """
 
 from __future__ import annotations
@@ -69,6 +88,7 @@ from typing import Callable, Dict, List, Optional, Tuple, Union
 import jax
 import jax.numpy as jnp
 
+from . import epilogue as _epi
 from . import opope_gemm as _kern
 from . import opope_grouped as _gkern
 from . import ref as _ref
@@ -77,6 +97,8 @@ __all__ = [
     "matmul",
     "grouped_matmul",
     "linear",
+    "epilogue_capable",
+    "fusion_source",
     "default_backend",
     "set_default_backend",
     "register_backend",
@@ -143,6 +165,11 @@ class _Backend:
     # no tile knob (the XLA paths) and is not tunable. Tuned backends resolve
     # tiles through ops._tile_for: tuning table first, this heuristic second.
     tile_fn: Optional[Callable[..., Tuple[int, int, int]]] = None
+    # Whether fn/grouped accept the two extra epilogue arguments
+    # (ep_steps, ep_ops) and fuse the op pipeline at the accumulator
+    # writeback. Backends without it (the XLA references) get the post-hoc
+    # lane in _matmul_impl/_grouped_impl — same numerics, same single cast.
+    epilogue_fused: bool = False
 
 
 _REGISTRY: Dict[str, _Backend] = {}
@@ -162,6 +189,7 @@ def register_backend(
     grouped_available: Optional[Union[bool, Callable[[], bool]]] = None,
     family: str = "fp",
     tile_fn: Optional[Callable[..., Tuple[int, int, int]]] = None,
+    epilogue_fused: bool = False,
 ) -> None:
     """Register (or replace) a matmul backend.
 
@@ -179,7 +207,10 @@ def register_backend(
     ``fn(m, k, n, elem_bytes=...) -> (bm, bn, bk)`` for kernels with
     ``block_*=`` knobs — registering one makes the backend tunable: its
     tiles resolve through the tuning table (:mod:`repro.tune`) before this
-    heuristic.
+    heuristic. ``epilogue_fused=True`` declares that ``fn``/``grouped``
+    accept ``(a, b, c, out_dtype, ep_steps, ep_ops)`` and fuse the epilogue
+    pipeline at the accumulator writeback; backends without it are served by
+    the numerically-identical post-hoc lane.
     """
     if not callable(fn):
         raise TypeError(f"backend fn for {name!r} is not callable")
@@ -192,7 +223,7 @@ def register_backend(
     _REGISTRY[name] = _Backend(
         name, fn, probe, fallback=tuple(fallback) if fallback else None,
         grad_backend=grad_backend, grouped=grouped, grouped_available=gprobe,
-        family=family, tile_fn=tile_fn,
+        family=family, tile_fn=tile_fn, epilogue_fused=epilogue_fused,
     )
 
 
@@ -391,10 +422,11 @@ def tile_cache_info():
 
 
 def clear_tile_cache() -> None:
-    """Drop the tile memo AND the loaded tuning-table state: the next tile
-    resolution re-reads the table from ``REPRO_TUNE_TABLE`` / the default
-    location."""
+    """Drop the tile memo, the epilogue-fusion memo AND the loaded
+    tuning-table state: the next tile resolution re-reads the table from
+    ``REPRO_TUNE_TABLE`` / the default location."""
     _tile_for.cache_clear()
+    _fusion_for.cache_clear()
     _TUNE_STATE["loaded"] = False
     _TUNE_STATE["table"] = None
 
@@ -460,6 +492,70 @@ def heuristic_tile(
 
 
 # ---------------------------------------------------------------------------
+# Epilogue fusion decision (tuned verdict first, fuse-by-default second)
+# ---------------------------------------------------------------------------
+
+
+def epilogue_capable(name: str) -> bool:
+    """Whether ``name``'s kernels fuse epilogues at the accumulator writeback
+    (``epilogue_fused`` registration). Incapable backends still serve every
+    ``epilogue=`` request through the post-hoc lane — this only reports
+    *where* the pipeline runs."""
+    _load_plugin_backends()
+    b = _REGISTRY.get(name)
+    if b is None:
+        raise ValueError(
+            f"unknown matmul backend {name!r}; registered: {registered_backends()}"
+        )
+    return b.epilogue_fused
+
+
+@functools.lru_cache(maxsize=_TILE_CACHE_CAP)
+def _fusion_for(
+    m: int, k: int, n: int, itemsize: int,
+    family: str = "dense", groups: int = 0, backend: Optional[str] = None,
+) -> bool:
+    """Memoized per-shape fuse-or-not verdict for an epilogue-capable backend.
+
+    The tuning table's measured decision (``TuneEntry.fuse_epilogue``, written
+    by :mod:`repro.tune` when it times fused vs post-hoc) wins; with no entry
+    the default is to fuse — the writeback pass is free, the post-hoc pass is
+    an extra HBM round trip, so fusion only loses when the epilogue operands'
+    streaming perturbs the kernel's pipelining (exactly what the tuner
+    measures).
+    """
+    table = _tuning_table()
+    if table is not None:
+        verdict = table.lookup_fusion(
+            backend=backend, shape_family=family, m=m, k=k, n=n, g=groups,
+            itemsize=itemsize,
+        )
+        if verdict is not None:
+            return bool(verdict)
+    return True
+
+
+def fusion_source(
+    backend: str, m: int, k: int, n: int, *, groups: int = 0,
+    dtype=jnp.float32,
+) -> str:
+    """``"tuned"`` if the tuning table decides fused-vs-post-hoc for this
+    shape on this backend, ``"default"`` if the fuse-by-default rule does
+    (including backends with no fused writeback at all)."""
+    _load_plugin_backends()
+    family = "grouped" if groups else "dense"
+    table = _tuning_table()
+    if table is not None:
+        verdict = table.lookup_fusion(
+            backend=backend, shape_family=family, m=m, k=k, n=n, g=groups,
+            itemsize=_tile_itemsize(backend, dtype),
+        )
+        if verdict is not None:
+            return "tuned"
+    return "default"
+
+
+# ---------------------------------------------------------------------------
 # Shape capture (the tuner's workload-harvest hook)
 # ---------------------------------------------------------------------------
 
@@ -504,7 +600,7 @@ def _record_shape(family: str, m: int, k: int, n: int, g: int, dtype) -> None:
 def _pallas_fn(interpret: bool) -> BackendFn:
     name = "pallas_interpret" if interpret else "pallas"
 
-    def run(a, b, c, out_dtype):
+    def run(a, b, c, out_dtype, ep_steps=(), ep_ops=()):
         bm, bn, bk = _tile_for(
             a.shape[0], a.shape[1], b.shape[1], jnp.dtype(a.dtype).itemsize,
             family="dense", backend=name,
@@ -513,6 +609,7 @@ def _pallas_fn(interpret: bool) -> BackendFn:
             a, b, c,
             block_m=bm, block_n=bn, block_k=bk,
             out_dtype=out_dtype, interpret=interpret,
+            epilogue=ep_steps, epilogue_operands=ep_ops,
         )
 
     return run
@@ -521,7 +618,7 @@ def _pallas_fn(interpret: bool) -> BackendFn:
 def _pallas_grouped_fn(interpret: bool) -> GroupedFn:
     name = "pallas_interpret" if interpret else "pallas"
 
-    def run(a, b, c, out_dtype):
+    def run(a, b, c, out_dtype, ep_steps=(), ep_ops=()):
         # Every group shares (M, K, N): tile selection is the single-group
         # choice, through the same bounded memo as the 2-D path — but under
         # the grouped family key (and group count), so a tuned grouped entry
@@ -534,6 +631,7 @@ def _pallas_grouped_fn(interpret: bool) -> GroupedFn:
             a, b, c,
             block_m=bm, block_n=bn, block_k=bk,
             out_dtype=out_dtype, interpret=interpret,
+            epilogue=ep_steps, epilogue_operands=ep_ops,
         )
 
     return run
@@ -552,11 +650,13 @@ register_backend(
     grouped=_pallas_grouped_fn(interpret=False),
     grouped_available=_pallas_grouped_compiles,
     tile_fn=_kern.default_block_shape,
+    epilogue_fused=True,
 )
 register_backend(
     "pallas_interpret", _pallas_fn(interpret=True),
     grouped=_pallas_grouped_fn(interpret=True),
     tile_fn=_kern.default_block_shape,
+    epilogue_fused=True,
 )
 register_backend("xla", _xla_fn, grouped=_xla_grouped_fn)
 
@@ -694,8 +794,25 @@ def _matmul_impl(
     c: Optional[jax.Array],
     backend: str,
     out_dtype,
+    ep_steps: Tuple[str, ...] = (),
+    ep_ops: Tuple[jax.Array, ...] = (),
 ) -> jax.Array:
-    return _REGISTRY[backend].fn(a, b, c, out_dtype)
+    be = _REGISTRY[backend]
+    if not ep_steps:
+        return be.fn(a, b, c, out_dtype)
+    aq = a.q if hasattr(a, "q") else a  # pre-quantized A: shapes live on .q
+    if be.epilogue_fused and _fusion_for(
+        aq.shape[0], aq.shape[1], b.shape[1], _tile_itemsize(backend, aq.dtype),
+        family="dense", backend=backend,
+    ):
+        return be.fn(a, b, c, out_dtype, ep_steps, ep_ops)
+    # Post-hoc lane: fp32 accumulator out of the backend, the same op
+    # pipeline, the same single final cast — numerically identical to the
+    # fused writeback (fp32 -> fp32 "cast" is exact), and applied for ANY
+    # resolved backend, so fallback degradation can never drop or
+    # double-apply a requested epilogue.
+    acc = be.fn(a, b, c, jnp.float32)
+    return _epi.apply_epilogue(acc, ep_steps, ep_ops).astype(out_dtype)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
@@ -730,6 +847,7 @@ def matmul(
     *,
     backend: Optional[str] = None,
     out_dtype=None,
+    epilogue=None,
 ) -> jax.Array:
     """``a @ b (+ c)`` with O-POPE semantics; a: [..., K], b: [K, N].
 
@@ -738,22 +856,69 @@ def matmul(
     ``c`` is either a full C operand matching ``a``'s batch dims x N, or a
     1-D ``[N]`` bias row broadcast inside the backend at the accumulator
     preload point (never materialized as an [M, N] array).
+
+    ``epilogue`` is a pipeline of registered post-ops — a name (``"silu"``),
+    a ``(name, operand)`` pair (``("residual", x)``), or a sequence of either
+    (:mod:`repro.kernels.epilogue`) — applied to the fp32 accumulator before
+    the single final cast: inside the kernel on epilogue-capable backends
+    (per the tuner's fused-vs-post-hoc verdict), post-hoc on the rest, with
+    identical numerics either way. A ``c`` operand passed alongside an
+    epilogue is folded in as the pipeline's first step.
+
+    ``a`` may also be a pre-quantized activation (anything with ``.q`` /
+    ``.scale``, e.g. ``quant.QuantizedTensor`` — the product of a
+    ``requant_int8`` epilogue upstream) on a q8-family backend: the backend
+    skips its A-quantization pass and consumes the int8 values directly.
+    This is a serving-only lane (no custom_vjp).
     """
-    out_dtype = jnp.dtype(out_dtype or a.dtype)
+    pre_q = hasattr(a, "q") and hasattr(a, "scale")
+    arr = a.q if pre_q else a
+    # Pre-quantized A defaults to fp32 output (the int8 storage dtype of the
+    # input is not a meaningful default for the dequantized result).
+    out_dtype = jnp.dtype(out_dtype or (jnp.float32 if pre_q else arr.dtype))
     backend = resolve_backend(backend)
-    batch_shape = a.shape[:-1]
+    batch_shape = arr.shape[:-1]
     m = 1
     for d in batch_shape:
         m *= d
-    _record_shape("dense", m, a.shape[-1], b.shape[-1], 0, a.dtype)
-    a2 = a.reshape(m, a.shape[-1])
-    if c is None:
+    _record_shape("dense", m, arr.shape[-1], b.shape[-1], 0, arr.dtype)
+    n = b.shape[-1]
+    steps, raw_ops = _epi.normalize_epilogue(epilogue)
+    if steps and c is not None:
+        # Fold C into the pipeline's head: C enters the accumulator linearly,
+        # so preload-then-epilogue == bias/residual-step-then-rest.
+        if c.ndim == 1:
+            steps, raw_ops = ("bias",) + steps, (c,) + raw_ops
+        else:
+            steps, raw_ops = ("residual",) + steps, (c,) + raw_ops
+        c = None
+
+    if pre_q:
+        if family_of(backend) != "q8":
+            raise ValueError(
+                f"pre-quantized activations need a q8-family backend; "
+                f"{backend!r} is family {family_of(backend)!r}"
+            )
+        scale = jnp.asarray(a.scale)
+        a2 = type(a)(
+            arr.reshape(m, arr.shape[-1]),
+            scale.reshape(m, 1) if scale.size == m else scale.reshape(1, 1),
+        )
+        ep_ops = _epi.canonicalize_operands(steps, raw_ops, n=n, m=m)
+        out = _matmul_impl(a2, b, c, backend, out_dtype, steps, ep_ops)
+        return out.reshape(*batch_shape, n)
+
+    a2 = arr.reshape(m, arr.shape[-1])
+    if steps:
+        ep_ops = _epi.canonicalize_operands(steps, raw_ops, n=n, m=m)
+        out = _matmul_ep(a2, b, ep_ops, backend, out_dtype, steps)
+    elif c is None:
         out = _matmul_nc(a2, b, backend, out_dtype)
     elif c.ndim == 1:
         out = _matmul_bias(a2, b, c, backend, out_dtype)
     else:
-        out = _matmul(a2, b, c.reshape(m, b.shape[-1]), backend, out_dtype)
-    return out.reshape(*batch_shape, b.shape[-1])
+        out = _matmul(a2, b, c.reshape(m, n), backend, out_dtype)
+    return out.reshape(*batch_shape, n)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
@@ -797,6 +962,42 @@ def _matmul_bias_bwd(backend, out_dtype, res, g):
 _matmul_bias.defvjp(_matmul_bias_fwd, _matmul_bias_bwd)
 
 
+# One custom_vjp covers every epilogue'd dense matmul: a C operand is folded
+# into the pipeline as its first step by matmul() ("bias" for a [N] row,
+# "residual" for a full operand — numerically identical, C enters the
+# accumulator linearly), so no (c x epilogue) wrapper matrix is needed.
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _matmul_ep(a, b, ep_ops, backend, out_dtype, ep_steps):
+    return _matmul_impl(a, b, None, backend, out_dtype, ep_steps, ep_ops)
+
+
+def _matmul_ep_fwd(a, b, ep_ops, backend, out_dtype, ep_steps):
+    out = _matmul_impl(a, b, None, backend, out_dtype, ep_steps, ep_ops)
+    return out, (a, b, ep_ops)
+
+
+def _matmul_ep_bwd(backend, out_dtype, ep_steps, res, g):
+    a, b, ep_ops = res
+    backend = grad_backend_of(backend)
+    # The fused forward never materializes the pre-epilogue accumulator, so
+    # the backward recomputes it (one extra GEMM, fp32) — the standard
+    # rematerialization trade for keeping the forward single-pass. Then the
+    # epilogue pipeline backpropagates (STE/clip masks and broadcast
+    # reductions live in epilogue_vjp) and the usual two transposed GEMMs
+    # run on the fp32 cotangent of the accumulator.
+    acc = _matmul_impl(a, b, None, backend, jnp.float32)
+    g_acc, d_ops = _epi.epilogue_vjp(ep_steps, ep_ops, acc, g)
+    da = _matmul_impl(g_acc, b.T, None, backend, a.dtype)
+    db = _matmul_impl(a.T, g_acc, None, backend, b.dtype)
+    d_ops = tuple(
+        d.astype(o.dtype).reshape(o.shape) for d, o in zip(d_ops, ep_ops)
+    )
+    return da, db, d_ops
+
+
+_matmul_ep.defvjp(_matmul_ep_fwd, _matmul_ep_bwd)
+
+
 def linear(
     x: jax.Array,
     w: jax.Array,
@@ -804,12 +1005,16 @@ def linear(
     *,
     backend: Optional[str] = None,
     out_dtype=None,
+    epilogue=None,
 ) -> jax.Array:
     """Linear layer on the O-POPE path. The [N] bias rides the C-preload
     operand — the fused epilogue the paper's accumulator preload enables for
     free — and is broadcast inside the backend, so no [M, N] copy of it is
-    ever built (serving decode steps would otherwise pay O(M*N) per linear)."""
-    return matmul(x, w, bias, backend=backend, out_dtype=out_dtype)
+    ever built (serving decode steps would otherwise pay O(M*N) per linear).
+    ``epilogue=`` post-ops run after the bias, exactly as :func:`matmul`."""
+    return matmul(
+        x, w, bias, backend=backend, out_dtype=out_dtype, epilogue=epilogue
+    )
 
 
 # --------------------------------------------------------------------------
@@ -817,8 +1022,20 @@ def linear(
 # --------------------------------------------------------------------------
 
 
-def _grouped_impl(a, b, c, backend, out_dtype):
-    return _REGISTRY[backend].grouped(a, b, c, out_dtype)
+def _grouped_impl(a, b, c, backend, out_dtype, ep_steps=(), ep_ops=()):
+    be = _REGISTRY[backend]
+    if not ep_steps:
+        return be.grouped(a, b, c, out_dtype)
+    aq = a.q if hasattr(a, "q") else a
+    if be.epilogue_fused and _fusion_for(
+        aq.shape[1], aq.shape[2], b.shape[2], _tile_itemsize(backend, aq.dtype),
+        family="grouped", groups=aq.shape[0], backend=backend,
+    ):
+        return be.grouped(a, b, c, out_dtype, ep_steps, ep_ops)
+    # Post-hoc lane — identical numerics to the fused writeback; see
+    # _matmul_impl.
+    acc = be.grouped(a, b, c, jnp.float32)
+    return _epi.apply_epilogue(acc, ep_steps, ep_ops).astype(out_dtype)
 
 
 def _grouped_bwd_gemms(backend, res, g):
@@ -884,6 +1101,36 @@ def _grouped_c_bwd(backend, out_dtype, res, g):
 _grouped_c.defvjp(_grouped_c_fwd, _grouped_c_bwd)
 
 
+# The grouped analogue of _matmul_ep: one custom_vjp for every epilogue'd
+# grouped GEMM, with C folded into the pipeline head by grouped_matmul().
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _grouped_ep(a, b, ep_ops, backend, out_dtype, ep_steps):
+    return _grouped_impl(a, b, None, backend, out_dtype, ep_steps, ep_ops)
+
+
+def _grouped_ep_fwd(a, b, ep_ops, backend, out_dtype, ep_steps):
+    out = _grouped_impl(a, b, None, backend, out_dtype, ep_steps, ep_ops)
+    return out, (a, b, ep_ops)
+
+
+def _grouped_ep_bwd(backend, out_dtype, ep_steps, res, g):
+    a, b, ep_ops = res
+    backend = resolve_grouped_backend(grad_backend_of(backend))
+    # Recompute the pre-epilogue accumulator (see _matmul_ep_bwd), backprop
+    # the pipeline, then the two transposed grouped GEMMs.
+    acc = _grouped_impl(a, b, None, backend, jnp.float32)
+    g_acc, d_ops = _epi.epilogue_vjp(ep_steps, ep_ops, acc, g)
+    da = _grouped_impl(g_acc, b.transpose(0, 2, 1), None, backend, a.dtype)
+    db = _grouped_impl(a.transpose(0, 2, 1), g_acc, None, backend, b.dtype)
+    d_ops = tuple(
+        d.astype(o.dtype).reshape(o.shape) for d, o in zip(d_ops, ep_ops)
+    )
+    return da, db, d_ops
+
+
+_grouped_ep.defvjp(_grouped_ep_fwd, _grouped_ep_bwd)
+
+
 def grouped_matmul(
     a: jax.Array,
     b: jax.Array,
@@ -891,6 +1138,7 @@ def grouped_matmul(
     *,
     backend: Optional[str] = None,
     out_dtype=None,
+    epilogue=None,
 ) -> jax.Array:
     """``O[g] = A[g] @ B[g] (+ C[g])``; a: [G, M, K], b: [G, K, N].
 
@@ -905,6 +1153,11 @@ def grouped_matmul(
     ``c`` is ``None``, a full ``[G, M, N]`` preload, or a ``[G, N]``
     per-group bias row broadcast inside the backend at the accumulator
     preload point (never materialized as ``[G, M, N]``).
+
+    ``epilogue`` post-ops apply per group to the fp32 accumulator before the
+    single cast, exactly as in :func:`matmul` — operands: scalar, ``[N]`` /
+    ``[G, N]`` row, or full ``[G, M, N]``. A ``c`` alongside an epilogue is
+    folded in as the pipeline's first step.
     """
     if a.ndim != 3 or b.ndim != 3:
         raise ValueError(
@@ -917,6 +1170,17 @@ def grouped_matmul(
     _record_shape(
         "grouped", a.shape[1], a.shape[2], b.shape[2], a.shape[0], a.dtype
     )
+    steps, raw_ops = _epi.normalize_epilogue(epilogue)
+    if steps:
+        if c is not None:
+            # Same linear-preload folding as matmul(): [G, N] row -> "bias",
+            # full [G, M, N] -> "residual" at the pipeline head.
+            name = "bias" if c.ndim == 2 else "residual"
+            steps, raw_ops = (name,) + steps, (c,) + raw_ops
+        ep_ops = _epi.canonicalize_operands(
+            steps, raw_ops, n=b.shape[2], m=a.shape[1], groups=a.shape[0]
+        )
+        return _grouped_ep(a, b, ep_ops, backend, out_dtype, steps)
     if c is None:
         return _grouped_nc(a, b, backend, out_dtype)
     if c.ndim == 2:

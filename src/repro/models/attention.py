@@ -159,6 +159,20 @@ def blockwise_attention(
         vr = constrain(vr, dp, None, None, None, None)
     k_pos = jnp.arange(t).reshape(nkv, kc)
 
+    # named_scope: the online-softmax state updates (exp / max / rescale) are
+    # softmax math coupled to the streaming reduction, not GEMM-writeback
+    # passes — exempted by the decode-step HLO census.
+    with jax.named_scope("attn_core"):
+        return _blockwise_body(
+            qg, kr, vr, k_pos, b, s, t, hq, hkv, g, d, qc, kc, nq, nkv,
+            causal, window, attn_softcap, q_offset, scale, q.dtype,
+        )
+
+
+def _blockwise_body(
+    qg, kr, vr, k_pos, b, s, t, hq, hkv, g, d, qc, kc, nq, nkv,
+    causal, window, attn_softcap, q_offset, scale, out_dtype,
+):
     outs = []
     for i in range(nq):
         q_i = qg[:, i]  # [B, qc, Hkv, G, D]
@@ -190,7 +204,7 @@ def blockwise_attention(
             l = l * corr + p.sum(axis=-1)
             # bf16 x bf16 -> f32 accumulate; no f32 copy of the V panel.
             acc = acc * corr[..., None] + jnp.einsum(
-                "bhgqk,bkhd->bhgqd", p.astype(v.dtype), vr[:, j],
+                "bhgqk,bkhd->bhgqd", p.astype(vr.dtype), vr[:, j],
                 preferred_element_type=jnp.float32,
             )
             return (m_new, l, acc), None
@@ -201,7 +215,7 @@ def blockwise_attention(
             )
         out_i = acc / jnp.maximum(l[..., None], 1e-37)
         outs.append(out_i.transpose(0, 3, 1, 2, 4).reshape(b, qc, hq, d))
-    return jnp.concatenate(outs, axis=1).astype(q.dtype)
+    return jnp.concatenate(outs, axis=1).astype(out_dtype)
 
 
 def decode_attention(
@@ -244,25 +258,29 @@ def decode_attention(
     qg = constrain(q.reshape(b, 1, hkv, g, d), batch_ax, None, None, None, None)
     k = constrain(cache.k.reshape(b, t, hkv, d), batch_ax, seq_ax, None, None)
     v = constrain(cache.v.reshape(b, t, hkv, d), batch_ax, seq_ax, None, None)
-    s = jnp.einsum(
-        "bqhgd,bkhd->bhgqk", qg, k, preferred_element_type=jnp.float32
-    ) * scale
-    s = constrain(s, batch_ax, None, None, None, seq_ax)
-    if attn_softcap is not None:
-        s = attn_softcap * jnp.tanh(s / attn_softcap)
-    kp = jnp.arange(t)
-    ln = cache.length.reshape(-1)  # [] -> [1] (lockstep) or [B] (per-slot)
-    valid = kp[None, :] < ln[:, None]
-    if window is not None:
-        valid &= kp[None, :] > ln[:, None] - 1 - window
-    s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
-    p = jax.nn.softmax(s, axis=-1)
-    # bf16 x bf16 -> f32 accumulate (widening MAC); no f32 cache copy.
-    o = jnp.einsum(
-        "bhgqk,bkhd->bhgqd", p.astype(v.dtype), v,
-        preferred_element_type=jnp.float32,
-    )
-    return o.transpose(0, 3, 1, 2, 4).reshape(b, 1, hq, d).astype(q.dtype)
+    # named_scope: scores / masking / softmax / PV are the attention core —
+    # reduction-coupled softmax math, not GEMM-writeback passes — exempted
+    # by the decode-step HLO census.
+    with jax.named_scope("attn_core"):
+        s = jnp.einsum(
+            "bqhgd,bkhd->bhgqk", qg, k, preferred_element_type=jnp.float32
+        ) * scale
+        s = constrain(s, batch_ax, None, None, None, seq_ax)
+        if attn_softcap is not None:
+            s = attn_softcap * jnp.tanh(s / attn_softcap)
+        kp = jnp.arange(t)
+        ln = cache.length.reshape(-1)  # [] -> [1] (lockstep) or [B] (per-slot)
+        valid = kp[None, :] < ln[:, None]
+        if window is not None:
+            valid &= kp[None, :] > ln[:, None] - 1 - window
+        s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        # bf16 x bf16 -> f32 accumulate (widening MAC); no f32 cache copy.
+        o = jnp.einsum(
+            "bhgqk,bkhd->bhgqd", p.astype(v.dtype), v,
+            preferred_element_type=jnp.float32,
+        )
+        return o.transpose(0, 3, 1, 2, 4).reshape(b, 1, hq, d).astype(q.dtype)
 
 
 def attention_apply(
@@ -284,8 +302,13 @@ def attention_apply(
     kv_chunk: int = 1024,
     seq_shard: bool = False,
     backend: Optional[str] = None,
+    residual: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Optional[KVCache]]:
     """Full attention block: projections + RoPE + core + output projection.
+
+    ``residual`` fuses the caller's skip connection into the output
+    projection's writeback (a ``residual`` epilogue step) — the attention
+    output is materialized exactly once, already summed into the stream.
 
     Modes:
     * ``cache is None``      — training / prefill without cache.
@@ -407,5 +430,6 @@ def attention_apply(
     out = ops.matmul(
         o.reshape(b, s, n_heads * head_dim), params["wo"]["w"],
         backend=role_backend(backend, "attn_out"),
+        epilogue=[("residual", residual)] if residual is not None else None,
     )
     return out, new_cache

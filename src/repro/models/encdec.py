@@ -86,7 +86,9 @@ def encode(params, frames: jax.Array, cfg: ArchConfig, *, backend=None) -> jax.A
     x = frames + params["enc_pos"][None].astype(frames.dtype)
 
     def body(x, p):
-        h, _ = attn_mod.attention_apply(
+        # Both residual adds ride GEMM writeback epilogues (attention wo /
+        # MLP down projection).
+        x, _ = attn_mod.attention_apply(
             p["attn"],
             layernorm(p["norm1"], x),
             n_heads=cfg.n_heads,
@@ -97,10 +99,11 @@ def encode(params, frames: jax.Array, cfg: ArchConfig, *, backend=None) -> jax.A
             q_chunk=cfg.q_chunk,
             kv_chunk=cfg.kv_chunk,
             backend=backend,
+            residual=x,
         )
-        x = x + h
-        x = x + mlp_apply(
-            p["mlp"], layernorm(p["norm2"], x), activation="gelu", backend=backend
+        x = mlp_apply(
+            p["mlp"], layernorm(p["norm2"], x), activation="gelu",
+            backend=backend, residual=x,
         )
         return x, None
 
@@ -159,7 +162,9 @@ def decoder_forward(
 
     def body(x, xs):
         p, ckl, cvl, kv = xs if have_cache else (*xs, None)
-        h, new_kv = attn_mod.attention_apply(
+        # All three residual adds ride GEMM writeback epilogues (self-attn
+        # wo, cross-attn wo, MLP down projection).
+        x, new_kv = attn_mod.attention_apply(
             p["self_attn"],
             layernorm(p["norm1"], x),
             n_heads=cfg.n_heads,
@@ -171,8 +176,8 @@ def decoder_forward(
             q_chunk=cfg.q_chunk,
             kv_chunk=cfg.kv_chunk,
             backend=backend,
+            residual=x,
         )
-        x = x + h
         # Cross attention against precomputed K/V.
         q = ops.linear(
             layernorm(p["norm2"], x), p["cross_attn"]["wq"]["w"], backend=backend
@@ -181,14 +186,15 @@ def decoder_forward(
             q, ckl, cvl, causal=False,
             q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk,
         )
-        o = ops.matmul(
+        x = ops.matmul(
             o.reshape(b, x.shape[1], cfg.n_heads * cfg.head_dim_),
             p["cross_attn"]["wo"]["w"],
             backend=backend,
+            epilogue=[("residual", x)],
         )
-        x = x + o
-        x = x + mlp_apply(
-            p["mlp"], layernorm(p["norm3"], x), activation="gelu", backend=backend
+        x = mlp_apply(
+            p["mlp"], layernorm(p["norm3"], x), activation="gelu",
+            backend=backend, residual=x,
         )
         return x, new_kv
 

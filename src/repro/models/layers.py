@@ -9,14 +9,17 @@ parameter dtype, matching the widening-accumulation discipline of the PE.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import epilogue as _epilogue
 from repro.kernels import ops
 
 __all__ = [
+    "ACT2FN",
+    "activation_fn",
     "Initializer",
     "role_backend",
     "dense_init",
@@ -31,6 +34,36 @@ __all__ = [
     "mlp_init",
     "mlp_apply",
 ]
+
+
+# The activation-name table — a view of the epilogue registry's
+# ACT2FN-style table, so a name accepted here is exactly a name the
+# ``epilogue=`` lane fuses ("gelu", "silu", "swish", "relu"). The single
+# naming authority for every ``activation=`` string in the model stack;
+# unknown names raise instead of silently falling back (the pre-refactor
+# if/else branches turned any typo into the other activation).
+ACT2FN = _epilogue.ACTIVATIONS
+
+
+def activation_fn(name: str):
+    """The callable for an activation name, fp32-in/fp32-out. Raises on
+    unknown names — a typo must never silently become a different
+    nonlinearity."""
+    try:
+        return ACT2FN[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown activation {name!r}; known: {sorted(ACT2FN)}"
+        ) from None
+
+
+class _PreQuantized(NamedTuple):
+    """Minimal pre-quantized activation carrier (``.q``/``.scale`` — the
+    duck-typed protocol ``ops.matmul`` accepts) so this module never imports
+    the quant package just to chain a requant epilogue into the next GEMM."""
+
+    q: jax.Array
+    scale: jax.Array
 
 
 def role_backend(backend, role: str):
@@ -76,10 +109,14 @@ def rmsnorm_init(d: int, dtype=jnp.float32):
 
 
 def rmsnorm(params, x: jax.Array, *, eps: float = 1e-6) -> jax.Array:
-    xf = x.astype(jnp.float32)
-    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
-    y = xf * jax.lax.rsqrt(var + eps) * params["scale"].astype(jnp.float32)
-    return y.astype(x.dtype)
+    # named_scope: norms are reduction-coupled (the rsqrt(var) factor needs
+    # the full row), not GEMM-writeback material — the decode-step HLO census
+    # (core.hlo_census.elementwise_passes) exempts this scope.
+    with jax.named_scope("norm"):
+        xf = x.astype(jnp.float32)
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps) * params["scale"].astype(jnp.float32)
+        return y.astype(x.dtype)
 
 
 def layernorm_init(d: int, dtype=jnp.float32):
@@ -87,12 +124,13 @@ def layernorm_init(d: int, dtype=jnp.float32):
 
 
 def layernorm(params, x: jax.Array, *, eps: float = 1e-5) -> jax.Array:
-    xf = x.astype(jnp.float32)
-    mu = jnp.mean(xf, axis=-1, keepdims=True)
-    var = jnp.var(xf, axis=-1, keepdims=True)
-    y = (xf - mu) * jax.lax.rsqrt(var + eps)
-    y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
-    return y.astype(x.dtype)
+    with jax.named_scope("norm"):
+        xf = x.astype(jnp.float32)
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+        return y.astype(x.dtype)
 
 
 def softcap(x: jax.Array, cap: Optional[float]) -> jax.Array:
@@ -130,16 +168,19 @@ def apply_rope(
     rot -= rot % 2
     if rot == 0:
         return x
-    inv = rope_frequencies(rot, theta)
-    ang = positions[..., :, None].astype(jnp.float32) * inv  # [..., S, rot/2]
-    cos = jnp.cos(ang)[..., :, None, :]  # broadcast over heads
-    sin = jnp.sin(ang)[..., :, None, :]
-    x_rot, x_pass = x[..., :rot], x[..., rot:]
-    x1, x2 = x_rot[..., 0::2], x_rot[..., 1::2]
-    r1 = x1.astype(jnp.float32) * cos - x2.astype(jnp.float32) * sin
-    r2 = x2.astype(jnp.float32) * cos + x1.astype(jnp.float32) * sin
-    rotated = jnp.stack([r1, r2], axis=-1).reshape(x_rot.shape).astype(x.dtype)
-    return jnp.concatenate([rotated, x_pass], axis=-1) if rot < d else rotated
+    # named_scope: the rotation is position-dependent (per-token cos/sin),
+    # not a GEMM-writeback pass — exempted by the decode-step HLO census.
+    with jax.named_scope("rope"):
+        inv = rope_frequencies(rot, theta)
+        ang = positions[..., :, None].astype(jnp.float32) * inv  # [..., S, rot/2]
+        cos = jnp.cos(ang)[..., :, None, :]  # broadcast over heads
+        sin = jnp.sin(ang)[..., :, None, :]
+        x_rot, x_pass = x[..., :rot], x[..., rot:]
+        x1, x2 = x_rot[..., 0::2], x_rot[..., 1::2]
+        r1 = x1.astype(jnp.float32) * cos - x2.astype(jnp.float32) * sin
+        r2 = x2.astype(jnp.float32) * cos + x1.astype(jnp.float32) * sin
+        rotated = jnp.stack([r1, r2], axis=-1).reshape(x_rot.shape).astype(x.dtype)
+        return jnp.concatenate([rotated, x_pass], axis=-1) if rot < d else rotated
 
 
 # --- gated MLP ----------------------------------------------------------------
@@ -158,19 +199,52 @@ def mlp_init(key, d_model: int, d_ff: int, init: Initializer, *, gated: bool = T
 
 def mlp_apply(
     params, x: jax.Array, *, activation: str = "silu", backend=None,
-    role: str = "mlp",
+    role: str = "mlp", residual: Optional[jax.Array] = None,
 ):
     """SwiGLU (default) / GeGLU / plain-GELU MLP on the O-POPE matmul path.
 
+    Every post-GEMM elementwise pass rides the ``epilogue=`` lane: the
+    activation (and the gating multiply) fuse into the gate GEMM's writeback,
+    and ``residual`` fuses the caller's skip connection into the down
+    projection — the hidden and output tensors are each materialized exactly
+    once. With a precision policy that declares a ``requant_for(role)`` scale
+    (and a q8 backend for the role), the hidden activation is additionally
+    written straight onto the int8 grid (a ``requant_int8`` epilogue step)
+    and fed to the down GEMM pre-quantized — no dequant/re-quant round trip.
+
     ``role`` keys the precision-policy lookup (the shared-expert MLP inside
     MoE blocks passes ``role="moe"``)."""
-    backend = role_backend(backend, role)
-    up = ops.matmul(x, params["w_up"], backend=backend)
+    activation_fn(activation)  # validate the name early (unknown -> raises)
+    resolver = getattr(backend, "requant_for", None)
+    rq = resolver(role) if resolver is not None else None
+    be = role_backend(backend, role)
+    if rq is not None and ops.family_of(ops.resolve_backend(be)) != "q8":
+        rq = None  # requant output only feeds a quantized consumer
+
     if "w_gate" in params:
-        gate = ops.matmul(x, params["w_gate"], backend=backend)
-        act = jax.nn.silu if activation == "silu" else jax.nn.gelu
-        h = act(gate.astype(jnp.float32)).astype(x.dtype) * up
+        up = ops.matmul(x, params["w_up"], backend=be)
+        hidden_ep = [activation, ("mul", up)]
+        gemm_in, w_act = x, params["w_gate"]
     else:
-        act = jax.nn.gelu if activation == "gelu" else jax.nn.silu
-        h = act(up.astype(jnp.float32)).astype(x.dtype)
-    return ops.matmul(h, params["w_down"], backend=backend)
+        hidden_ep = [activation]
+        gemm_in, w_act = x, params["w_up"]
+
+    if rq is not None:
+        scale = jnp.float32(rq)
+        h_q = ops.matmul(
+            gemm_in, w_act, backend=be,
+            epilogue=[*hidden_ep, ("requant_int8", scale)],
+            out_dtype=jnp.int8,
+        )
+        h = _PreQuantized(h_q, scale)
+    else:
+        h = ops.matmul(
+            gemm_in, w_act, backend=be, epilogue=hidden_ep,
+            out_dtype=x.dtype,
+        )
+    down_ep = [("residual", residual)] if residual is not None else None
+    out_dtype = x.dtype if rq is not None else None
+    return ops.matmul(
+        h, params["w_down"], backend=be, epilogue=down_ep,
+        out_dtype=out_dtype,
+    )

@@ -26,7 +26,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ops
-from .layers import Initializer
+from .layers import Initializer, activation_fn
+
+# The conv output and the z-branch gate are silu-activated in the reference
+# implementation; the name resolves through the shared ACT2FN table (the same
+# registry the epilogue lane fuses from) rather than a hand-picked jax.nn fn.
+_silu = activation_fn("silu")
 
 __all__ = ["MambaState", "mamba_init", "mamba_apply", "mamba_decode_step"]
 
@@ -104,7 +109,7 @@ def _conv1d_causal(params, x: jax.Array, history: Optional[jax.Array] = None):
     out = sum(
         xp[:, i : i + x.shape[1]] * w[i] for i in range(kw)
     ) + params["conv_b"].astype(jnp.float32)
-    return jax.nn.silu(out).astype(x.dtype)
+    return _silu(out).astype(x.dtype)
 
 
 def mamba_apply(
@@ -183,7 +188,7 @@ def mamba_apply(
     )
     y = ys.transpose(1, 0, 2, 3).reshape(b, s, d_inner)
     y = y + params["D"] * xc.astype(jnp.float32)
-    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    y = (y * _silu(z.astype(jnp.float32))).astype(x.dtype)
     out = ops.matmul(y, params["out_proj"], backend=backend)
     if not return_state:
         return out
@@ -213,6 +218,6 @@ def mamba_decode_step(
     da, dbx, cmat = _ssm_inputs(params, xc[:, 0])  # [B,Di,N],[B,N]
     h = da * state.ssm + dbx
     y = jnp.einsum("bdn,bn->bd", h, cmat) + params["D"] * xc[:, 0].astype(jnp.float32)
-    y = (y * jax.nn.silu(z[:, 0].astype(jnp.float32))).astype(x.dtype)
+    y = (y * _silu(z[:, 0].astype(jnp.float32))).astype(x.dtype)
     out = ops.matmul(y[:, None], params["out_proj"], backend=backend)
     return out, MambaState(conv=new_conv, ssm=h)

@@ -76,9 +76,14 @@ def _expert_ffn(
     that combine in fp32 request fp32 straight from the accumulator (single
     final cast in the backend, not an upcast after the fact).
     """
-    gate = ops.grouped_matmul(xs, p["w_gate"], backend=backend)
     up = ops.grouped_matmul(xs, p["w_up"], backend=backend)
-    h = jax.nn.silu(gate.astype(jnp.float32)).astype(xs.dtype) * up
+    # SiLU and the gating multiply ride the gate GEMM's writeback epilogue
+    # (fp32 accumulator in, one final cast out) — the hidden tensor is
+    # materialized exactly once, with no standalone activation pass.
+    h = ops.grouped_matmul(
+        xs, p["w_gate"], backend=backend,
+        epilogue=["silu", ("mul", up)], out_dtype=xs.dtype,
+    )
     return ops.grouped_matmul(
         h, p["w_down"], backend=backend, out_dtype=out_dtype
     )
@@ -159,7 +164,9 @@ def moe_apply(
     if "shared" in params:
         from .layers import mlp_apply
 
-        y = y + mlp_apply(params["shared"], xf, backend=backend, role="moe")
+        # The routed-expert sum rides the shared-expert down projection's
+        # residual epilogue — one writeback produces routed + shared.
+        y = mlp_apply(params["shared"], xf, backend=backend, role="moe", residual=y)
 
     mask = jax.nn.one_hot(top_idx, n_experts, dtype=jnp.float32).sum(axis=1)
     aux = router_load_balancing_loss(gates, mask)

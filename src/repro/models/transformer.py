@@ -194,11 +194,14 @@ def _block_apply(
     new_cache = cache
     h = _norm(cfg, p["norm_mixer"], x)
     mixer_out = None
+    stream = x  # the residual stream after the mixer's skip connection
     # attention / mlp / moe resolve their own precision-policy roles inside;
     # the recurrent mixers take a plain backend name resolved here.
     mixer_be = role_backend(backend, "mixer")
     if bd.mixer in ("attn", "attn_local"):
-        mixer_out, new_cache = attn_mod.attention_apply(
+        # The mixer's residual add rides the output projection's epilogue:
+        # attention returns x + attn(h) in one writeback.
+        stream, new_cache = attn_mod.attention_apply(
             p["attn"],
             h,
             n_heads=cfg.n_heads,
@@ -214,7 +217,9 @@ def _block_apply(
             kv_chunk=cfg.kv_chunk,
             seq_shard=cfg.attn_seq_shard,
             backend=backend,
+            residual=x,
         )
+        mixer_out = stream  # non-None marks "this block has a mixer"
     elif bd.mixer == "mamba":
         if cache is not None and x.shape[1] == 1:
             mixer_out, new_cache = mamba_mod.mamba_decode_step(
@@ -252,20 +257,31 @@ def _block_apply(
             if cache is not None:
                 new_cache = state
 
+    if mixer_out is not None and stream is x:
+        # Recurrent mixers (mamba/xlstm) keep a plain residual add: their
+        # output projections live inside the mixer modules, behind gating.
+        stream = x + mixer_out
+
     if cfg.parallel_block and bd.ffn != "none" and mixer_out is not None:
         # StableLM-2 style: attn and MLP read the same normed input and share
-        # one residual add.
-        ffn_out = mlp_apply(p["mlp"], h, backend=backend)
-        return x + mixer_out + ffn_out, new_cache, aux
+        # one residual add — x + mixer_out (already on `stream`) fuses into
+        # the MLP down projection's writeback.
+        return (
+            mlp_apply(p["mlp"], h, backend=backend, residual=stream),
+            new_cache,
+            aux,
+        )
 
-    if mixer_out is not None:
-        x = x + mixer_out
     if bd.ffn == "mlp":
-        x = x + mlp_apply(p["mlp"], _norm(cfg, p["norm_ffn"], x), backend=backend)
+        # Pre-norm FFN with its skip connection fused into the down GEMM.
+        stream = mlp_apply(
+            p["mlp"], _norm(cfg, p["norm_ffn"], stream), backend=backend,
+            residual=stream,
+        )
     elif bd.ffn == "moe":
         y, aux = moe_apply(
             p["moe"],
-            _norm(cfg, p["norm_ffn"], x),
+            _norm(cfg, p["norm_ffn"], stream),
             n_experts=cfg.moe.n_experts,
             top_k=cfg.moe.top_k,
             capacity_factor=cfg.moe.capacity_factor,
@@ -274,8 +290,12 @@ def _block_apply(
             dropless=cfg.moe.dropless,
             backend=backend,
         )
-        x = x + y
-    return x, new_cache, aux
+        # The MoE output is a scatter-weighted expert combine (or, with a
+        # shared expert, already carries the routed sum via a residual
+        # epilogue inside moe_apply) — not a bare GEMM writeback, so its
+        # block-residual add stays a plain op.
+        stream = stream + y
+    return stream, new_cache, aux
 
 
 def lm_forward(

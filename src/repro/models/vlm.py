@@ -35,9 +35,14 @@ def init_vlm_params(cfg: ArchConfig, key: jax.Array) -> Dict[str, Any]:
 
 
 def project_image(params, patch_embeds: jax.Array, *, backend=None) -> jax.Array:
-    """2-layer GELU projector from vision space into the LM embedding space."""
-    h = ops.matmul(patch_embeds, params["mm_projector"]["w1"], backend=backend)
-    h = jax.nn.gelu(h.astype(jnp.float32)).astype(patch_embeds.dtype)
+    """2-layer GELU projector from vision space into the LM embedding space.
+
+    The GELU rides the first GEMM's writeback epilogue — no standalone
+    activation pass over the [B, n_img_tokens, D] intermediate."""
+    h = ops.matmul(
+        patch_embeds, params["mm_projector"]["w1"], backend=backend,
+        epilogue=["gelu"],
+    )
     return ops.matmul(h, params["mm_projector"]["w2"], backend=backend)
 
 

@@ -60,6 +60,25 @@ def _quantize_operands(a: jax.Array, b: jax.Array):
     return aq, bq
 
 
+def _a_values_scale(a):
+    """The (int8 values, [M, 1] fp32 scale) of the A operand.
+
+    A **pre-quantized** activation (anything with ``.q``/``.scale`` — the
+    product of an upstream ``requant_int8`` epilogue) skips the dynamic
+    quantization pass entirely: its values are consumed as-is and its
+    per-tensor (or per-row) scale is broadcast to the kernel's [M, 1]
+    layout. This is the "no round trip" half of the re-quant lane — layer
+    N's writeback already put A on the int8 grid.
+    """
+    if hasattr(a, "q") and hasattr(a, "scale"):
+        q = a.q
+        s = jnp.asarray(a.scale, jnp.float32)
+        s = s.reshape(-1, 1) if s.size == q.shape[0] else s.reshape(1, 1)
+        return q, jnp.broadcast_to(s, (q.shape[0], 1))
+    aq = quantize(a, "int8", axis=0)
+    return aq.q, aq.scale
+
+
 def _quantize_grouped_operands(a: jax.Array, b: jax.Array):
     """Per-group dynamic quantization of a grouped operand pair.
 
@@ -75,12 +94,13 @@ def _quantize_grouped_operands(a: jax.Array, b: jax.Array):
 
 
 def _xla_q8(a, b, c, out_dtype):
-    aq, bq = _quantize_operands(a, b)
+    a_vals, a_scale = _a_values_scale(a)
+    bq = quantize(b, "int8", axis=1)  # scale [1, N]
     acc = lax.dot_general(
-        aq.q, bq.q, (((1,), (0,)), ((), ())),
+        a_vals, bq.q, (((1,), (0,)), ((), ())),
         preferred_element_type=jnp.int32,
     )
-    out = acc.astype(jnp.float32) * (aq.scale * bq.scale)
+    out = acc.astype(jnp.float32) * (a_scale * bq.scale)
     if c is not None:
         out = out + c.astype(jnp.float32)  # [M, N] tile or [N] bias row
     return out.astype(out_dtype)
@@ -102,19 +122,21 @@ def _xla_q8_grouped(a, b, c, out_dtype):
 def _pallas_q8_fn(interpret: bool):
     name = "pallas_q8_interpret" if interpret else "pallas_q8"
 
-    def run(a, b, c, out_dtype):
-        aq, bq = _quantize_operands(a, b)
+    def run(a, b, c, out_dtype, ep_steps=(), ep_ops=()):
+        a_vals, a_scale = _a_values_scale(a)
+        bq = quantize(b, "int8", axis=1)
         # Through the registry's shared resolution path (tuning table first,
         # q8_block_shape heuristic second), keyed at itemsize=1 — the width
         # of the streamed panels, not the caller-visible dtype.
         bm, bn, bk = ops._tile_for(
-            a.shape[0], a.shape[1], b.shape[1], 1,
+            a_vals.shape[0], a_vals.shape[1], b.shape[1], 1,
             family="dense", backend=name,
         )
         return opope_gemm_q8(
-            aq.q, aq.scale, bq.q, bq.scale, c,
+            a_vals, a_scale, bq.q, bq.scale, c,
             block_m=bm, block_n=bn, block_k=bk,
             out_dtype=out_dtype, interpret=interpret,
+            epilogue=ep_steps, epilogue_operands=ep_ops,
         )
 
     return run
@@ -123,7 +145,7 @@ def _pallas_q8_fn(interpret: bool):
 def _pallas_q8_grouped_fn(interpret: bool):
     name = "pallas_q8_interpret" if interpret else "pallas_q8"
 
-    def run(a, b, c, out_dtype):
+    def run(a, b, c, out_dtype, ep_steps=(), ep_ops=()):
         aq, bq = _quantize_grouped_operands(a, b)
         bm, bn, bk = ops._tile_for(
             a.shape[1], a.shape[2], b.shape[2], 1,
@@ -133,6 +155,7 @@ def _pallas_q8_grouped_fn(interpret: bool):
             aq.q, aq.scale, bq.q, bq.scale, c,
             block_m=bm, block_n=bn, block_k=bk,
             out_dtype=out_dtype, interpret=interpret,
+            epilogue=ep_steps, epilogue_operands=ep_ops,
         )
 
     return run
@@ -197,6 +220,7 @@ def register_quant_backends() -> None:
         grouped_available=_pallas_q8_grouped_compiles,
         family="q8",
         tile_fn=q8_block_shape,
+        epilogue_fused=True,
     )
     ops.register_backend(
         "pallas_q8_interpret",
@@ -206,6 +230,7 @@ def register_quant_backends() -> None:
         grouped=_pallas_q8_grouped_fn(interpret=True),
         family="q8",
         tile_fn=q8_block_shape,
+        epilogue_fused=True,
     )
 
 

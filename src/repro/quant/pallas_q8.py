@@ -32,6 +32,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro import compat
+from repro.kernels import epilogue as _ep
 from repro.kernels.opope_grouped import _pad3
 
 __all__ = ["opope_gemm_q8", "opope_gemm_q8_grouped", "q8_block_shape"]
@@ -86,6 +87,43 @@ def _q8_preload_kernel(
         o_ref[...] = scaled.astype(o_ref.dtype)
 
 
+def _q8_epilogue_kernel(*refs, k_steps: int, steps, has_c: bool):
+    """Epilogue-fused q8 grid step: dequant the int32 resident tile, add the
+    C operand if present, run the op pipeline, single cast — all at the one
+    writeback, so the quantized path's post-ops cost zero extra HBM traffic
+    exactly like the fp kernels'.
+
+    ``refs`` order: aq, as, bq, bs, (c if ``has_c``), one ref per
+    operand-taking epilogue step, o, acc scratch.
+    """
+    aq_ref, as_ref, bq_ref, bs_ref = refs[0], refs[1], refs[2], refs[3]
+    idx = 5 if has_c else 4
+    c_ref = refs[4] if has_c else None
+    ep_refs = refs[idx:-2]
+    o_ref, acc_ref = refs[-2], refs[-1]
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        aq_ref[...], bq_ref[...], preferred_element_type=jnp.int32
+    )
+
+    @pl.when(k == k_steps - 1)
+    def _writeback():
+        scaled = acc_ref[...].astype(jnp.float32) * (as_ref[...] * bs_ref[...])
+        if c_ref is not None:
+            scaled = scaled + jnp.broadcast_to(
+                c_ref[...].astype(jnp.float32), scaled.shape
+            )
+        scaled = _ep.apply_epilogue(
+            scaled, steps, tuple(r[...] for r in ep_refs)
+        )
+        o_ref[...] = scaled.astype(o_ref.dtype)
+
+
 def q8_block_shape(m: int, k: int, n: int, elem_bytes: int = 1):
     """Block-shape **heuristic** for int8 operands: the fp selection at
     elem_bytes=1 with the M block rounded to the int8 sublane tile (32).
@@ -103,7 +141,9 @@ def q8_block_shape(m: int, k: int, n: int, elem_bytes: int = 1):
 
 @functools.partial(
     jax.jit,
-    static_argnames=("block_m", "block_n", "block_k", "out_dtype", "interpret"),
+    static_argnames=(
+        "block_m", "block_n", "block_k", "out_dtype", "interpret", "epilogue",
+    ),
 )
 def opope_gemm_q8(
     a_q: jax.Array,
@@ -117,11 +157,16 @@ def opope_gemm_q8(
     block_k: int = 256,
     out_dtype: Optional[jnp.dtype] = None,
     interpret: bool = False,
+    epilogue=(),
+    epilogue_operands=(),
 ) -> jax.Array:
     """``O = (a_q @ b_q) * (a_scale * b_scale) (+ C)`` on the O-POPE grid.
 
     a_q: [M, K] int8 with per-row scales a_scale [M, 1] (fp32);
     b_q: [K, N] int8 with per-column scales b_scale [1, N] (fp32).
+    ``epilogue``/``epilogue_operands`` fuse a registered post-op pipeline
+    after the dequant (and C add) on the resident tile — see
+    :func:`repro.kernels.opope_gemm.opope_gemm` for the operand conventions.
     ``interpret=True`` runs the body in the Pallas interpreter (CPU tests).
     """
     if a_q.ndim != 2 or b_q.ndim != 2 or a_q.shape[1] != b_q.shape[0]:
@@ -169,6 +214,31 @@ def opope_gemm_q8(
         kernel = functools.partial(_q8_preload_kernel, k_steps=k_steps)
     else:
         kernel = functools.partial(_q8_kernel, k_steps=k_steps)
+
+    if epilogue:
+        # Same operand streaming as the fp kernel's epilogue path (zero-pad
+        # is safe: pad regions are sliced off below).
+        it = iter(epilogue_operands)
+        for name in epilogue:
+            kind = _ep.op_kind(name)
+            if kind == "none":
+                continue
+            x = next(it)
+            if kind == "scalar":
+                in_specs.append(pl.BlockSpec((1, 1), lambda i, j, kk: (0, 0)))
+                operands.append(x.reshape(1, 1))
+            elif kind == "row":
+                in_specs.append(pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)))
+                operands.append(_pad2(x.reshape(1, n), 1, np_))
+            else:  # full
+                in_specs.append(pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)))
+                operands.append(_pad2(x.reshape(m, n), mp, np_))
+        kernel = functools.partial(
+            _q8_epilogue_kernel,
+            k_steps=k_steps,
+            steps=epilogue,
+            has_c=c is not None,
+        )
 
     out = pl.pallas_call(
         kernel,
@@ -234,9 +304,44 @@ def _q8_grouped_preload_kernel(
         o_ref[...] = scaled.astype(o_ref.dtype)[None]
 
 
+def _q8_grouped_epilogue_kernel(*refs, k_steps: int, steps, has_c: bool):
+    """Grouped analogue of :func:`_q8_epilogue_kernel`: dequant group g's
+    int32 tile, add its C operand if present, run the op pipeline, single
+    cast — all at the one writeback. Epilogue operand blocks carry a leading
+    group dim, dropped with ``ref[0]`` before broadcasting."""
+    aq_ref, as_ref, bq_ref, bs_ref = refs[0], refs[1], refs[2], refs[3]
+    idx = 5 if has_c else 4
+    c_ref = refs[4] if has_c else None
+    ep_refs = refs[idx:-2]
+    o_ref, acc_ref = refs[-2], refs[-1]
+    k = pl.program_id(3)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        aq_ref[0], bq_ref[0], preferred_element_type=jnp.int32
+    )
+
+    @pl.when(k == k_steps - 1)
+    def _writeback():
+        scaled = acc_ref[...].astype(jnp.float32) * (as_ref[0] * bs_ref[0])
+        if c_ref is not None:
+            scaled = scaled + jnp.broadcast_to(
+                c_ref[0].astype(jnp.float32), scaled.shape
+            )
+        scaled = _ep.apply_epilogue(
+            scaled, steps, tuple(r[0] for r in ep_refs)
+        )
+        o_ref[...] = scaled.astype(o_ref.dtype)[None]
+
+
 @functools.partial(
     jax.jit,
-    static_argnames=("block_m", "block_n", "block_k", "out_dtype", "interpret"),
+    static_argnames=(
+        "block_m", "block_n", "block_k", "out_dtype", "interpret", "epilogue",
+    ),
 )
 def opope_gemm_q8_grouped(
     a_q: jax.Array,
@@ -250,6 +355,8 @@ def opope_gemm_q8_grouped(
     block_k: int = 256,
     out_dtype: Optional[jnp.dtype] = None,
     interpret: bool = False,
+    epilogue=(),
+    epilogue_operands=(),
 ) -> jax.Array:
     """``O[g] = (a_q[g] @ b_q[g]) * (a_scale[g] * b_scale[g]) (+ C[g])``.
 
@@ -311,6 +418,35 @@ def opope_gemm_q8_grouped(
         kernel = functools.partial(_q8_grouped_preload_kernel, k_steps=k_steps)
     else:
         kernel = functools.partial(_q8_grouped_kernel, k_steps=k_steps)
+
+    if epilogue:
+        it = iter(epilogue_operands)
+        for name in epilogue:
+            kind = _ep.op_kind(name)
+            if kind == "none":
+                continue
+            x = next(it)
+            if kind == "scalar":
+                in_specs.append(
+                    pl.BlockSpec((1, 1, 1), lambda gg, i, j, kk: (0, 0, 0))
+                )
+                operands.append(x.reshape(1, 1, 1))
+            elif kind == "row":
+                in_specs.append(
+                    pl.BlockSpec((1, 1, bn), lambda gg, i, j, kk: (gg, 0, j))
+                )
+                operands.append(_pad3(x.reshape(g, 1, n), g, 1, np_))
+            else:  # full
+                in_specs.append(
+                    pl.BlockSpec((1, bm, bn), lambda gg, i, j, kk: (gg, i, j))
+                )
+                operands.append(_pad3(x.reshape(g, m, n), g, mp, np_))
+        kernel = functools.partial(
+            _q8_grouped_epilogue_kernel,
+            k_steps=k_steps,
+            steps=epilogue,
+            has_c=c is not None,
+        )
 
     out = pl.pallas_call(
         kernel,

@@ -68,6 +68,14 @@ class PrecisionPolicy:
     rules: Mapping[str, Optional[str]] = dataclasses.field(default_factory=dict)
     default: Optional[str] = None
     name: str = "policy"
+    # Role -> calibrated per-tensor scale for a ``requant_int8`` output
+    # epilogue: layer N's GEMM writes its result already on the int8 grid of
+    # that scale, so layer N+1's quantized GEMM consumes it with no
+    # dequantize/re-quantize round trip (and no second amax pass). Roles
+    # without an entry write full-precision outputs as before. Scales come
+    # from calibration (``quantize.calibrate_scale``) — serving-only, like
+    # the pre-quantized-A lane it feeds.
+    requant: Mapping[str, float] = dataclasses.field(default_factory=dict)
 
     def __post_init__(self) -> None:
         unknown = set(self.rules) - set(ROLES)
@@ -76,12 +84,24 @@ class PrecisionPolicy:
                 f"policy {self.name!r}: unknown roles {sorted(unknown)}; "
                 f"known: {list(ROLES)}"
             )
+        unknown_rq = set(self.requant) - set(ROLES)
+        if unknown_rq:
+            raise ValueError(
+                f"policy {self.name!r}: unknown requant roles "
+                f"{sorted(unknown_rq)}; known: {list(ROLES)}"
+            )
 
     def backend_for(self, role: str) -> Optional[str]:
         backend = self.rules.get(role, self.default)
         if backend == "q8":
             backend = preferred_q8_backend()
         return backend
+
+    def requant_for(self, role: str) -> Optional[float]:
+        """The calibrated re-quant scale a ``role``'s GEMM output should be
+        written at (a ``requant_int8`` epilogue step), or None to write
+        full-precision."""
+        return self.requant.get(role)
 
     def describe(self) -> Dict[str, str]:
         """role -> resolved backend table (for reports and benchmarks)."""
@@ -90,12 +110,19 @@ class PrecisionPolicy:
         }
 
 
-def mlp_q8_policy(*, moe: bool = True) -> PrecisionPolicy:
+def mlp_q8_policy(
+    *, moe: bool = True, requant_scale: Optional[float] = None
+) -> PrecisionPolicy:
     """The paper's serving-side split: MLP GEMMs (and, with ``moe=True``, the
     routed expert FFNs plus the shared-expert MLP — the whole ``moe`` role)
     quantize; attention / router / mixers / logits stay full-precision,
-    gradients are fp32 by registry rule."""
+    gradients are fp32 by registry rule. ``requant_scale`` (a calibrated
+    per-tensor scale) additionally makes the MLP role write its outputs
+    through a ``requant_int8`` epilogue for the next quantized consumer."""
     rules: Dict[str, Optional[str]] = {"mlp": "q8"}
     if moe:
         rules["moe"] = "q8"
-    return PrecisionPolicy(rules=rules, name="mlp-q8")
+    requant: Dict[str, float] = (
+        {"mlp": float(requant_scale)} if requant_scale is not None else {}
+    )
+    return PrecisionPolicy(rules=rules, requant=requant, name="mlp-q8")

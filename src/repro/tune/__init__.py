@@ -18,15 +18,21 @@ shape. This package replaces guessing with measurement, in three parts:
   tunes offline.
 
 ``ops.tile_source(backend, m, k, n)`` reports whether a given shape resolves
-``"tuned"`` or ``"heuristic"``.
+``"tuned"`` or ``"heuristic"``. The tuner also measures a fused-vs-post-hoc
+epilogue probe at each winning tile (``search.probe_epilogue_fusion``) and
+records the verdict in ``TuneEntry.fuse_epilogue``; ``ops.fusion_source``
+reports whether a shape's fusion decision is ``"tuned"`` or ``"default"``.
 """
 
 from .capture import capture_gemm_shapes, harvest_model_shapes
 from .search import (
+    PROBE_EPILOGUE,
     TUNABLE_BACKENDS,
     CandidateResult,
+    EpilogueProbe,
     candidate_blocks,
     median_time_us,
+    probe_epilogue_fusion,
     tune_shape,
     tune_workload,
 )
@@ -45,10 +51,13 @@ from .table import (
 )
 
 __all__ = [
+    "PROBE_EPILOGUE",
     "TUNABLE_BACKENDS",
     "CandidateResult",
+    "EpilogueProbe",
     "candidate_blocks",
     "median_time_us",
+    "probe_epilogue_fusion",
     "tune_shape",
     "tune_workload",
     "capture_gemm_shapes",

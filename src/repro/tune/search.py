@@ -34,9 +34,12 @@ from .table import GemmShape, TuneEntry, TuneKey, TuningTable, device_kind
 
 __all__ = [
     "TUNABLE_BACKENDS",
+    "PROBE_EPILOGUE",
     "CandidateResult",
+    "EpilogueProbe",
     "candidate_blocks",
     "median_time_us",
+    "probe_epilogue_fusion",
     "tune_shape",
     "tune_workload",
 ]
@@ -105,6 +108,36 @@ class CandidateResult:
     gflops: float
     modeled_cycles: Optional[int]
     is_heuristic: bool
+
+
+# The epilogue pipeline the fusion probe times: one streamed row operand plus
+# one activation — the canonical MLP-hidden writeback (bias + silu), i.e. the
+# exact shape of traffic the fused lane exists to absorb.
+PROBE_EPILOGUE: Tuple[str, ...] = ("bias", "silu")
+
+
+@dataclasses.dataclass(frozen=True)
+class EpilogueProbe:
+    """Fused-vs-post-hoc measurement of :data:`PROBE_EPILOGUE` at one tile.
+
+    ``fused_us`` times the kernel with the pipeline fused into the
+    accumulator writeback; ``posthoc_us`` times the same kernel followed by
+    one XLA elementwise pass over the full output. Ties go to fused — at
+    equal wall time the fused form still saves the extra HBM round-trip.
+    """
+
+    block: Tuple[int, int, int]
+    steps: Tuple[str, ...]
+    fused_us: float
+    posthoc_us: float
+
+    @property
+    def fuse(self) -> bool:
+        return self.fused_us <= self.posthoc_us
+
+    @property
+    def decided_us(self) -> float:
+        return min(self.fused_us, self.posthoc_us)
 
 
 def median_time_us(run: Callable[[], object], *, iters: int, warmup: int) -> float:
@@ -182,6 +215,104 @@ def _make_runner(
     return runner
 
 
+def _make_epilogue_runners(
+    backend: str, shape: GemmShape, blocks: Tuple[int, int, int], seed: int = 0
+) -> Tuple[Callable[[], object], Callable[[], object]]:
+    """``(fused, post-hoc)`` zero-arg timed calls for :data:`PROBE_EPILOGUE`.
+
+    Both variants are jitted with the operands as call arguments (closed-over
+    constants would invite constant folding of the whole measurement) and
+    compute the identical fp32 result, so the timing difference is purely
+    writeback-fused versus one extra elementwise pass over the output.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import epilogue as _epi
+
+    interpret = TUNABLE_BACKENDS[backend]
+    family = ops.family_of(backend)
+    bm, bn, bk = blocks
+    rng = np.random.default_rng(seed)
+    g = shape.g if shape.family == "grouped" else 0
+    lead = (g,) if g else ()
+    a = rng.standard_normal(lead + (shape.m, shape.k)).astype(np.float32)
+    b = rng.standard_normal(lead + (shape.k, shape.n)).astype(np.float32)
+    bias = jnp.asarray(
+        rng.standard_normal((g, shape.n) if g else (shape.n,)), jnp.float32
+    )
+    kw = dict(
+        block_m=bm, block_n=bn, block_k=bk,
+        out_dtype=jnp.float32, interpret=interpret,
+    )
+
+    if family == "q8":
+        from repro.quant.quantize import quantize
+
+        if g:
+            from repro.quant.pallas_q8 import opope_gemm_q8_grouped as kern
+
+            aq = quantize(jnp.asarray(a), "int8", axis=(0, 1))
+            bq = quantize(jnp.asarray(b), "int8", axis=(0, 2))
+        else:
+            from repro.quant.pallas_q8 import opope_gemm_q8 as kern
+
+            aq = quantize(jnp.asarray(a), "int8", axis=0)
+            bq = quantize(jnp.asarray(b), "int8", axis=1)
+        gemm_args = (aq.q, aq.scale, bq.q, bq.scale)
+    else:
+        dtype = jnp.dtype(shape.dtype)
+        kern = opope_gemm_grouped if g else opope_gemm
+        gemm_args = (jnp.asarray(a, dtype), jnp.asarray(b, dtype))
+    n_args = len(gemm_args)
+
+    @jax.jit
+    def fused_fn(*xs):
+        return kern(
+            *xs[:n_args], epilogue=PROBE_EPILOGUE,
+            epilogue_operands=xs[n_args:], **kw,
+        )
+
+    @jax.jit
+    def posthoc_fn(*xs):
+        acc = kern(*xs[:n_args], **kw)
+        canon = _epi.canonicalize_operands(
+            PROBE_EPILOGUE, xs[n_args:], n=shape.n, m=shape.m, groups=g
+        )
+        return _epi.apply_epilogue(acc, PROBE_EPILOGUE, canon)
+
+    args = gemm_args + (bias,)
+    return (lambda: fused_fn(*args)), (lambda: posthoc_fn(*args))
+
+
+def probe_epilogue_fusion(
+    backend: str,
+    shape: GemmShape,
+    blocks: Tuple[int, int, int],
+    *,
+    iters: int = 3,
+    warmup: int = 1,
+    seed: int = 0,
+) -> EpilogueProbe:
+    """Time :data:`PROBE_EPILOGUE` fused at the writeback vs post-hoc for one
+    workload cell at one tile; the verdict feeds ``TuneEntry.fuse_epilogue``
+    (and from there ``ops._fusion_for`` on every later run)."""
+    if backend not in TUNABLE_BACKENDS:
+        raise ValueError(
+            f"backend {backend!r} is not tunable; tunable: "
+            f"{sorted(TUNABLE_BACKENDS)}"
+        )
+    if not ops.epilogue_capable(backend):
+        raise ValueError(f"backend {backend!r} has no fused-epilogue lane")
+    fused, posthoc = _make_epilogue_runners(backend, shape, blocks, seed=seed)
+    return EpilogueProbe(
+        block=tuple(blocks),
+        steps=PROBE_EPILOGUE,
+        fused_us=median_time_us(fused, iters=iters, warmup=warmup),
+        posthoc_us=median_time_us(posthoc, iters=iters, warmup=warmup),
+    )
+
+
 def tune_shape(
     backend: str,
     shape: GemmShape,
@@ -190,9 +321,16 @@ def tune_shape(
     iters: int = 3,
     warmup: int = 1,
     seed: int = 0,
+    probe_epilogue: bool = True,
 ) -> Tuple[TuneEntry, List[CandidateResult]]:
     """Tune one workload cell on one backend; returns the winning entry plus
-    every measured candidate (the heuristic tile is always among them)."""
+    every measured candidate (the heuristic tile is always among them).
+
+    With ``probe_epilogue`` (the default), epilogue-capable backends get one
+    extra fused-vs-post-hoc timing at the winning tile and the entry records
+    the verdict in ``fuse_epilogue``; pass ``False`` to run the probe
+    yourself (``probe_epilogue_fusion``) when you also want its raw timings.
+    """
     if backend not in TUNABLE_BACKENDS:
         if backend in ops.tunable_backends():
             raise ValueError(
@@ -244,6 +382,11 @@ def tune_shape(
             is_heuristic=blocks == heuristic,
         ))
     best = min(results, key=lambda r: r.us)
+    fuse: Optional[bool] = None
+    if probe_epilogue and ops.epilogue_capable(backend):
+        fuse = probe_epilogue_fusion(
+            backend, shape, best.block, iters=iters, warmup=warmup, seed=seed
+        ).fuse
     entry = TuneEntry(
         key=TuneKey(
             backend=backend, shape_family=shape.family,
@@ -253,6 +396,7 @@ def tune_shape(
         ),
         block=best.block, us=best.us, gflops=best.gflops,
         modeled_cycles=best.modeled_cycles,
+        fuse_epilogue=fuse,
     )
     return entry, results
 
@@ -284,6 +428,7 @@ def tune_workload(
                     f"{shape.dtype}: best {entry.block} {entry.us:.1f}us "
                     f"({entry.gflops:.2f} GFLOP/s), heuristic {heur.block} "
                     f"{heur.us:.1f}us -> {gain:.2f}x, "
-                    f"{len(results)} candidates timed"
+                    f"{len(results)} candidates timed, "
+                    f"fuse_epilogue={entry.fuse_epilogue}"
                 )
     return table

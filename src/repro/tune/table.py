@@ -119,6 +119,13 @@ class TuneEntry:
     gflops: float
     modeled_cycles: Optional[int] = None  # analytic pruner's estimate
     source: str = "measured"
+    # Measured fused-vs-post-hoc epilogue verdict for this cell: True =
+    # fusing the epilogue into the writeback was at least as fast, False =
+    # the post-hoc pass won (operand streaming perturbed the pipelining),
+    # None = never measured — ops falls back to fuse-by-default. Optional
+    # JSON field: tables written before this field existed load unchanged
+    # (from_json reads known keys only), so the schema version stays 1.
+    fuse_epilogue: Optional[bool] = None
 
     def to_json(self) -> Dict[str, object]:
         d = self.key.to_json()
@@ -126,6 +133,8 @@ class TuneEntry:
             block=list(self.block), us=self.us, gflops=self.gflops,
             modeled_cycles=self.modeled_cycles, source=self.source,
         )
+        if self.fuse_epilogue is not None:
+            d["fuse_epilogue"] = self.fuse_epilogue
         return d
 
     @classmethod
@@ -133,6 +142,7 @@ class TuneEntry:
         block = d["block"]
         if not (isinstance(block, (list, tuple)) and len(block) == 3):
             raise TableFormatError(f"bad block {block!r}")
+        fuse = d.get("fuse_epilogue")
         return cls(
             key=TuneKey.from_json(d),
             block=(int(block[0]), int(block[1]), int(block[2])),
@@ -143,6 +153,7 @@ class TuneEntry:
                 if d.get("modeled_cycles") is not None else None
             ),
             source=str(d.get("source", "measured")),
+            fuse_epilogue=None if fuse is None else bool(fuse),
         )
 
 
@@ -164,6 +175,7 @@ class TuningTable:
     def __init__(self, entries: Iterable[TuneEntry] = ()):
         self._entries: Dict[TuneKey, TuneEntry] = {}
         self._index: Dict[Tuple, Tuple[int, int, int]] = {}
+        self._fusion_index: Dict[Tuple, bool] = {}
         for e in entries:
             self.put(e)
 
@@ -187,11 +199,18 @@ class TuningTable:
             itemsize = _dtype_itemsize(entry.key.dtype)
         except Exception:
             return  # unknown dtype name: keep the entry, never serve it
-        self._index[self._index_key(
+        ikey = self._index_key(
             entry.key.backend, entry.key.shape_family,
             entry.key.m, entry.key.k, entry.key.n, entry.key.g,
             itemsize, entry.key.device_kind,
-        )] = entry.block
+        )
+        self._index[ikey] = entry.block
+        if entry.fuse_epilogue is not None:
+            self._fusion_index[ikey] = entry.fuse_epilogue
+        else:
+            # A re-tuned entry without a fusion verdict supersedes any stale
+            # verdict the replaced entry carried.
+            self._fusion_index.pop(ikey, None)
 
     def get(self, key: TuneKey) -> Optional[TuneEntry]:
         return self._entries.get(key)
@@ -210,6 +229,26 @@ class TuningTable:
     ) -> Optional[Tuple[int, int, int]]:
         """The tuned (bm, bn, bk) for this cell on this device, or None."""
         return self._index.get(self._index_key(
+            backend, shape_family, m, k, n, g, itemsize,
+            device if device is not None else device_kind(),
+        ))
+
+    def lookup_fusion(
+        self,
+        *,
+        backend: str,
+        shape_family: str,
+        m: int,
+        k: int,
+        n: int,
+        g: int = 0,
+        itemsize: int,
+        device: Optional[str] = None,
+    ) -> Optional[bool]:
+        """The measured fused-vs-post-hoc epilogue verdict for this cell on
+        this device, or None when the tuner never measured one (ops then
+        fuses by default on capable backends)."""
+        return self._fusion_index.get(self._index_key(
             backend, shape_family, m, k, n, g, itemsize,
             device if device is not None else device_kind(),
         ))

@@ -239,6 +239,160 @@ def test_grouped_gradients_match_reference(name):
         )
 
 
+# ---------------------------------------------------------------------------
+# the epilogue contract (backend x epilogue)
+# ---------------------------------------------------------------------------
+
+# Each case: (id, spec builder, independent reference fn) — the reference is
+# hand-written jnp (NOT repro.kernels.epilogue), so these assert the lane's
+# numerics against an implementation that shares no code with it.
+
+
+def _epilogue_cases(m, n, seed=11):
+    rng = np.random.default_rng(seed)
+    bias = jnp.asarray(rng.standard_normal(n), jnp.float32)
+    resid = jnp.asarray(rng.standard_normal((m, n)), jnp.float32)
+    gate = jnp.asarray(rng.standard_normal((m, n)), jnp.float32)
+    row = jnp.asarray(rng.standard_normal(n), jnp.float32)
+    return {
+        "gelu": ("gelu", lambda acc: jax.nn.gelu(acc)),
+        "silu": ("silu", lambda acc: jax.nn.silu(acc)),
+        "swish": ("swish", lambda acc: jax.nn.silu(acc)),
+        "relu": ("relu", lambda acc: jnp.maximum(acc, 0.0)),
+        "bias": ([("bias", bias)], lambda acc: acc + bias[None, :]),
+        "residual": ([("residual", resid)], lambda acc: acc + resid),
+        "scale": ([("scale", row)], lambda acc: acc * row[None, :]),
+        "silu-mul": (
+            ["silu", ("mul", gate)], lambda acc: jax.nn.silu(acc) * gate
+        ),
+        "bias-gelu": (
+            [("bias", bias), "gelu"],
+            lambda acc: jax.nn.gelu(acc + bias[None, :]),
+        ),
+    }
+
+
+EPILOGUE_IDS = sorted(_epilogue_cases(1, 1))
+
+
+@pytest.mark.parametrize("ep", EPILOGUE_IDS)
+@pytest.mark.parametrize("name", ALL_BACKENDS)
+def test_epilogue_matches_reference(name, ep):
+    _available_or_skip(name)
+    a, b = _operands(seed=10)
+    spec, ref_fn = _epilogue_cases(a.shape[0], b.shape[1])[ep]
+    acc = ops.matmul(a, b, backend=name, out_dtype=jnp.float32)
+    want = ref_fn(acc)  # this backend's accumulator + independent post-ops
+    got = ops.matmul(a, b, backend=name, epilogue=spec)
+    assert got.shape == want.shape
+    # The pipeline runs on the same accumulator in fp32 either way; only
+    # op-level rounding differs between fused/post-hoc and the jnp reference.
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5
+    )
+
+
+@pytest.mark.parametrize("ep", EPILOGUE_IDS)
+@pytest.mark.parametrize("name", ALL_BACKENDS)
+def test_epilogue_single_final_cast(name, ep):
+    # The epilogue runs on the fp32 accumulator BEFORE the single final
+    # cast: narrow output == fp32 output cast once, for every pipeline.
+    _available_or_skip(name)
+    a, b = _operands(seed=12)
+    spec, _ = _epilogue_cases(a.shape[0], b.shape[1])[ep]
+    wide = ops.matmul(a, b, backend=name, epilogue=spec, out_dtype=jnp.float32)
+    narrow = ops.matmul(a, b, backend=name, epilogue=spec, out_dtype=jnp.bfloat16)
+    assert narrow.dtype == jnp.bfloat16
+    np.testing.assert_array_equal(
+        np.asarray(narrow), np.asarray(wide.astype(jnp.bfloat16))
+    )
+
+
+@pytest.mark.parametrize("name", ALL_BACKENDS)
+def test_epilogue_vjp_matches_unfused(name):
+    # Gradients through the fused lane == gradients through the unfused
+    # full-precision composition (incl. the epilogue operand cotangents).
+    # Full-precision is the right reference for every family: the fused
+    # backward rematerializes the accumulator on the backend's *grad*
+    # backend, which the registry pins to fp for q8 members — so even a
+    # quantized forward differentiates the fp composition.
+    _available_or_skip(name)
+    a, b = _operands(m=24, k=48, n=32, seed=13)
+    gate = jnp.asarray(
+        np.random.default_rng(14).standard_normal((24, 32)), jnp.float32
+    )
+
+    def fused(a, b, g):
+        return ops.matmul(a, b, backend=name, epilogue=["silu", ("mul", g)]).sum()
+
+    def unfused(a, b, g):
+        return (jax.nn.silu(reference_matmul(a, b)) * g).sum()
+
+    got = jax.grad(fused, argnums=(0, 1, 2))(a, b, gate)
+    want = jax.grad(unfused, argnums=(0, 1, 2))(a, b, gate)
+    for gi, wi in zip(got, want):
+        np.testing.assert_allclose(
+            np.asarray(gi), np.asarray(wi), rtol=1e-4, atol=1e-4
+        )
+
+
+@pytest.mark.parametrize("name", GROUPED_BACKENDS)
+def test_grouped_epilogue_matches_stacked(name):
+    _available_or_skip(name)
+    a, b = _grouped_operands(seed=15)
+    g_, m, n = a.shape[0], a.shape[1], b.shape[2]
+    rng = np.random.default_rng(16)
+    gate = jnp.asarray(rng.standard_normal((g_, m, n)), jnp.float32)
+    bias = jnp.asarray(rng.standard_normal((g_, n)), jnp.float32)
+    got = ops.grouped_matmul(
+        a, b, backend=name, epilogue=[("bias", bias), "silu", ("mul", gate)]
+    )
+    want = jnp.stack(
+        [
+            ops.matmul(
+                a[i], b[i], backend=name,
+                epilogue=[("bias", bias[i]), "silu", ("mul", gate[i])],
+            )
+            for i in range(g_)
+        ]
+    )
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5
+    )
+
+
+@pytest.mark.parametrize("name", ALL_BACKENDS)
+def test_degradation_preserves_epilogue(name, monkeypatch):
+    # Regression: a request that degrades along the fallback chain must apply
+    # the epilogue exactly once on whatever backend serves it — never dropped
+    # (fused-capable member gone) and never doubled (post-hoc on top of
+    # fused). Equality with the terminal backend's own fused/post-hoc result
+    # rules out both failure modes.
+    b = ops._REGISTRY[name]
+    monkeypatch.setitem(
+        ops._REGISTRY, name, dataclasses.replace(b, available=lambda: False)
+    )
+    a_, b_ = _operands(seed=17)
+    resid = jnp.asarray(
+        np.random.default_rng(18).standard_normal((a_.shape[0], b_.shape[1])),
+        jnp.float32,
+    )
+    try:
+        with pytest.warns(RuntimeWarning, match="degrading to"):
+            got = ops.matmul(
+                a_, b_, backend=name, epilogue=["gelu", ("residual", resid)]
+            )
+            resolved = ops.resolve_backend(name)
+    except RuntimeError:
+        pytest.skip("no member of the chain is available on this platform")
+    want = jax.nn.gelu(
+        ops.matmul(a_, b_, backend=resolved, out_dtype=jnp.float32)
+    ) + resid
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5
+    )
+
+
 def test_resolution_never_crosses_family_boundaries():
     # A q8 backend registered WITHOUT a quantized fallback chain inherits the
     # default (fp) chain — the family guard must raise rather than silently

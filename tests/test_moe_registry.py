@@ -55,9 +55,9 @@ def test_policy_moe_role_reaches_expert_ffns(dispatch, monkeypatch):
     recorded = []
     orig = ops.grouped_matmul
 
-    def recording(a, b, c=None, *, backend=None, out_dtype=None):
+    def recording(a, b, c=None, *, backend=None, **kwargs):
         recorded.append(backend)
-        return orig(a, b, c, backend=backend, out_dtype=out_dtype)
+        return orig(a, b, c, backend=backend, **kwargs)
 
     monkeypatch.setattr(ops, "grouped_matmul", recording)
     pol = PrecisionPolicy(rules={"moe": "xla_q8"})

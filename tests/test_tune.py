@@ -301,6 +301,30 @@ class TestSearch:
         assert entry.us <= heur.us  # winner can only confirm or improve
         assert entry.block in [r.block for r in results]
         assert validate_block_shape(*entry.block, elem_bytes=4)
+        # epilogue-capable backend + default probe: a verdict was recorded
+        assert entry.fuse_epilogue in (True, False)
+
+    def test_tune_shape_probe_opt_out_leaves_verdict_unset(self):
+        shape = GemmShape("dense", 48, 96, 72, 0, "float32")
+        entry, _ = tune_shape(
+            "pallas_interpret", shape, top_k=1, iters=1, probe_epilogue=False
+        )
+        assert entry.fuse_epilogue is None
+
+    def test_probe_epilogue_fusion_times_both_lanes(self):
+        from repro.tune import probe_epilogue_fusion
+
+        probe = probe_epilogue_fusion(
+            "pallas_interpret", GemmShape("dense", 48, 128, 128),
+            (48, 128, 128), iters=1,
+        )
+        assert probe.fused_us > 0 and probe.posthoc_us > 0
+        assert probe.decided_us == min(probe.fused_us, probe.posthoc_us)
+        assert probe.fuse == (probe.fused_us <= probe.posthoc_us)
+        with pytest.raises(ValueError, match="not tunable"):
+            probe_epilogue_fusion(
+                "xla", GemmShape("dense", 8, 8, 8), (8, 128, 128)
+            )
 
     def test_tune_shape_rejects_untunable_backend(self):
         with pytest.raises(ValueError, match="no tile knob"):
