@@ -85,6 +85,10 @@ def run_continuous(engine, requests) -> Dict:
         "tokens_per_step": report.tokens_per_step,
         "mean_occupancy": report.mean_occupancy,
         "decode_compilations": engine.decode_compilations(),
+        "ttft_p50": report.ttft_p50,
+        "ttft_p99": report.ttft_p99,
+        "itl_p50": report.itl_p50,
+        "itl_p99": report.itl_p99,
     }
 
 
@@ -200,6 +204,9 @@ def main() -> None:
         print(f"  {row['engine']:<11} {row['tokens_per_sec']:8.1f} tok/s  "
               f"{row['tokens_per_step']:5.2f} tok/step  "
               f"occupancy {row['mean_occupancy']:.3f}")
+    print(f"  continuous latency: ttft p50/p99 {c['ttft_p50'] * 1e3:.1f}/"
+          f"{c['ttft_p99'] * 1e3:.1f} ms, itl p50/p99 {c['itl_p50'] * 1e3:.2f}/"
+          f"{c['itl_p99'] * 1e3:.2f} ms")
     print(f"  continuous/static: {result['speedup_tokens_per_sec']:.2f}x wall, "
           f"{result['speedup_tokens_per_step']:.2f}x per-step, "
           f"+{result['occupancy_gain']:.3f} occupancy -> {args.out}")

@@ -82,11 +82,14 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import threading
 import warnings
 from typing import Callable, Dict, List, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
+
+from repro import obs as _obs
 
 from . import epilogue as _epi
 from . import opope_gemm as _kern
@@ -115,6 +118,9 @@ __all__ = [
     "tile_source",
     "heuristic_tile",
     "tile_cache_info",
+    "tile_cache_stats",
+    "reset_tile_cache_stats",
+    "on_miss_streak",
     "clear_tile_cache",
     "capture_shapes",
 ]
@@ -389,46 +395,181 @@ def _tuned_tile(
     return tile
 
 
-@functools.lru_cache(maxsize=_TILE_CACHE_CAP)
-def _tile_for(
-    m: int,
-    k: int,
-    n: int,
-    itemsize: int,
-    family: str = "dense",
-    groups: int = 0,
-    backend: Optional[str] = None,
-) -> Tuple[int, int, int]:
-    """Memoized (LRU-bounded) block-shape resolution: tuned, else heuristic.
+# Resettable tile-lookup telemetry (distinct from the lru memo's own
+# CacheInfo, whose hit/miss totals cannot be zeroed without dropping the
+# memo): hits/misses feed the ``tile.lookups`` counter, the consecutive-miss
+# streak feeds the ``on_miss_streak`` auto-retune seam (ROADMAP item 4).
+_TILE_STATS_LOCK = threading.Lock()
+_TILE_STATS = {"hits": 0, "misses": 0, "streak": 0}
+# callback fn(key, streak) fired when the miss streak reaches the threshold
+# (and again at each further multiple while it persists). ``None`` routes to
+# the default repro.tune hook, which logs a "retune candidate" event.
+_MISS_STREAK_HOOK: Dict[str, object] = {"fn": None, "threshold": 8}
 
-    The key carries the shape family and group count (a grouped GEMM must
-    never share a memo slot — or a tuning-table entry — with a dense GEMM of
-    the same (M, K, N): their pipelining behaviour differs) and the backend
-    name, because tuned winners are measured per backend.
+# The key a miss-streak callback receives: everything the tuner needs to
+# reproduce (and tune) the shape that keeps missing the memo/table.
+TileKey = Tuple[Optional[str], str, int, int, int, int, int]
+
+
+def on_miss_streak(
+    callback: Optional[Callable[[TileKey, int], None]] = None,
+    *,
+    threshold: int = 8,
+) -> None:
+    """Register the sustained tile-cache-miss callback (the auto-retune seam).
+
+    ``callback(key, streak)`` fires when ``threshold`` consecutive tile
+    resolutions miss the memo — the signature of a long-lived process seeing
+    a shape stream the tuning table doesn't cover — and again at every
+    further multiple while the streak persists. ``key`` is ``(backend,
+    shape_family, m, k, n, groups, itemsize)``. ``callback=None`` restores
+    the default hook (``repro.tune.retune``: count + log the retune
+    candidate, never retune implicitly). Exceptions in the callback are
+    swallowed: a telemetry hook must never break tile resolution.
     """
-    tuned = _tuned_tile(backend, family, m, k, n, groups, itemsize)
-    if tuned is not None:
-        return tuned
-    b = _REGISTRY.get(backend) if backend else None
-    tile_fn = b.tile_fn if (b is not None and b.tile_fn is not None) else (
-        _kern.default_block_shape
-    )
-    return tile_fn(m, k, n, elem_bytes=itemsize)
+    if threshold < 1:
+        raise ValueError("miss-streak threshold must be >= 1")
+    _MISS_STREAK_HOOK["fn"] = callback
+    _MISS_STREAK_HOOK["threshold"] = int(threshold)
+
+
+def _default_miss_streak(key: TileKey, streak: int) -> None:
+    try:
+        from repro.tune.retune import retune_candidate
+    except Exception:
+        return
+    retune_candidate(key, streak)
+
+
+def _note_tile_lookup(missed: bool, key: TileKey) -> None:
+    with _TILE_STATS_LOCK:
+        if missed:
+            _TILE_STATS["misses"] += 1
+            _TILE_STATS["streak"] += 1
+            streak = _TILE_STATS["streak"]
+        else:
+            _TILE_STATS["hits"] += 1
+            _TILE_STATS["streak"] = 0
+            streak = 0
+    if _obs.enabled():
+        _obs.counter(
+            "tile.lookups", result="miss" if missed else "hit"
+        ).inc()
+    if missed:
+        thr = int(_MISS_STREAK_HOOK["threshold"])  # type: ignore[arg-type]
+        if streak >= thr and streak % thr == 0:
+            fn = _MISS_STREAK_HOOK["fn"] or _default_miss_streak
+            try:
+                fn(key, streak)  # type: ignore[operator]
+            except Exception:
+                pass
+
+
+class _TileResolver:
+    """The memoized block-shape resolver behind ``ops._tile_for``.
+
+    Drop-in for the plain ``lru_cache`` it replaces (``cache_info`` /
+    ``cache_clear`` keep their semantics) plus lookup telemetry: every call
+    notes hit-or-miss into the resettable stats + the ``tile.lookups``
+    counter and advances the miss streak (:func:`on_miss_streak`).
+
+    The memo key carries the shape family and group count (a grouped GEMM
+    must never share a memo slot — or a tuning-table entry — with a dense
+    GEMM of the same (M, K, N): their pipelining behaviour differs) and the
+    backend name, because tuned winners are measured per backend.
+    Resolution order: tuned table first, the backend's ``tile_fn``
+    heuristic second.
+    """
+
+    def __init__(self, maxsize: int) -> None:
+        self._cached = functools.lru_cache(maxsize=maxsize)(self._resolve)
+
+    @staticmethod
+    def _resolve(
+        m: int, k: int, n: int, itemsize: int, family: str, groups: int,
+        backend: Optional[str],
+    ) -> Tuple[int, int, int]:
+        tuned = _tuned_tile(backend, family, m, k, n, groups, itemsize)
+        if tuned is not None:
+            return tuned
+        b = _REGISTRY.get(backend) if backend else None
+        tile_fn = b.tile_fn if (b is not None and b.tile_fn is not None) else (
+            _kern.default_block_shape
+        )
+        return tile_fn(m, k, n, elem_bytes=itemsize)
+
+    def __call__(
+        self,
+        m: int,
+        k: int,
+        n: int,
+        itemsize: int,
+        family: str = "dense",
+        groups: int = 0,
+        backend: Optional[str] = None,
+    ) -> Tuple[int, int, int]:
+        before = self._cached.cache_info().misses
+        tile = self._cached(m, k, n, itemsize, family, groups, backend)
+        missed = self._cached.cache_info().misses != before
+        _note_tile_lookup(
+            missed, (backend, family, m, k, n, groups, itemsize)
+        )
+        return tile
+
+    def cache_info(self):
+        return self._cached.cache_info()
+
+    def cache_clear(self) -> None:
+        self._cached.cache_clear()
+
+
+_tile_for = _TileResolver(maxsize=_TILE_CACHE_CAP)
 
 
 def tile_cache_info():
-    """CacheInfo for the tile-selection memo (currsize never exceeds the cap)."""
+    """CacheInfo for the tile-selection memo (currsize never exceeds the cap).
+
+    Lifetime totals of the underlying LRU — for *resettable* counters (the
+    cross-test-bleed-safe surface) use :func:`tile_cache_stats`."""
     return _tile_for.cache_info()
+
+
+def tile_cache_stats() -> Dict[str, int]:
+    """Resettable tile-lookup stats: ``hits``/``misses`` since the last
+    :func:`reset_tile_cache_stats`, the current consecutive ``miss_streak``,
+    and the memo's ``currsize``/``maxsize``."""
+    info = _tile_for.cache_info()
+    with _TILE_STATS_LOCK:
+        return {
+            "hits": _TILE_STATS["hits"],
+            "misses": _TILE_STATS["misses"],
+            "miss_streak": _TILE_STATS["streak"],
+            "currsize": info.currsize,
+            "maxsize": info.maxsize,
+        }
+
+
+def reset_tile_cache_stats() -> None:
+    """Zero the resettable lookup counters and the miss streak WITHOUT
+    touching the memo itself (tests call this between cases so counts can't
+    leak across suite order; warm tiles stay warm)."""
+    with _TILE_STATS_LOCK:
+        _TILE_STATS["hits"] = 0
+        _TILE_STATS["misses"] = 0
+        _TILE_STATS["streak"] = 0
 
 
 def clear_tile_cache() -> None:
     """Drop the tile memo, the epilogue-fusion memo AND the loaded
     tuning-table state: the next tile resolution re-reads the table from
-    ``REPRO_TUNE_TABLE`` / the default location."""
+    ``REPRO_TUNE_TABLE`` / the default location. The miss streak resets too
+    (post-clear misses are expected, not a retune signal)."""
     _tile_for.cache_clear()
     _fusion_for.cache_clear()
     _TUNE_STATE["loaded"] = False
     _TUNE_STATE["table"] = None
+    with _TILE_STATS_LOCK:
+        _TILE_STATS["streak"] = 0
 
 
 def tunable_backends() -> List[str]:
@@ -597,6 +738,67 @@ def _record_shape(family: str, m: int, k: int, n: int, g: int, dtype) -> None:
             records.append(rec)
 
 
+def _note_gemm_call(
+    shape_family: str, backend: str, m: int, k: int, n: int, groups: int,
+    dtype,
+) -> None:
+    """Count one GEMM entry-point call into ``gemm.calls``.
+
+    Labels carry the resolved backend, its numerics family, the shape
+    family (dense/grouped) and — the introspection the autotuner feeds on —
+    whether the tile and the fusion verdict came from the tuned table or
+    the heuristic/default. Host-side only: inside ``jit`` this runs once at
+    trace time, never per step."""
+    if not _obs.enabled():
+        return
+    b = _REGISTRY.get(backend)
+    itemsize = jnp.dtype(dtype).itemsize
+    tile = "tuned" if _tuned_tile(
+        backend, shape_family, m, k, n, groups, itemsize
+    ) is not None else "heuristic"
+    fusion = "none"
+    if b is not None and b.epilogue_fused:
+        table = _tuning_table()
+        verdict = None
+        if table is not None:
+            verdict = table.lookup_fusion(
+                backend=backend, shape_family=shape_family, m=m, k=k, n=n,
+                g=groups, itemsize=itemsize,
+            )
+        fusion = "tuned" if verdict is not None else "default"
+    _obs.counter(
+        "gemm.calls",
+        backend=backend,
+        family=b.family if b is not None else "?",
+        shape=shape_family,
+        tile=tile,
+        fusion=fusion,
+    ).inc()
+
+
+def _note_degradation(
+    requested: str, resolved: str, reason: str, hop: int
+) -> None:
+    """Telemetry twin of the degradation warning: a counter (labelled by
+    requested/resolved backend and reason) plus a structured event carrying
+    the fallback-chain hop index."""
+    if not _obs.enabled():
+        return
+    _obs.counter(
+        "gemm.degradations",
+        requested=requested,
+        resolved=resolved,
+        reason=reason,
+    ).inc()
+    _obs.event(
+        "degradation",
+        requested=requested,
+        resolved=resolved,
+        reason=reason,
+        hop=hop,
+    )
+
+
 def _pallas_fn(interpret: bool) -> BackendFn:
     name = "pallas_interpret" if interpret else "pallas"
 
@@ -701,7 +903,7 @@ def resolve_backend(name: Optional[str] = None) -> str:
         )
     if _probe_ok(backend):
         return name
-    for fallback in backend.fallback or _FALLBACK_CHAIN:
+    for hop, fallback in enumerate(backend.fallback or _FALLBACK_CHAIN, 1):
         fb = _REGISTRY.get(fallback)
         # The family guard makes "degradation never changes numerics" a
         # runtime invariant, not just a registration convention: a backend
@@ -719,6 +921,7 @@ def resolve_backend(name: Optional[str] = None) -> str:
                 RuntimeWarning,
                 stacklevel=2,
             )
+            _note_degradation(name, fallback, "backend_unavailable", hop)
             return fallback
     raise RuntimeError(f"no available matmul backend (requested {name!r})")
 
@@ -737,7 +940,7 @@ def resolve_grouped_backend(name: Optional[str] = None) -> str:
     backend = _REGISTRY[resolved]
     if _grouped_ok(backend):
         return resolved
-    for fallback in backend.fallback or _FALLBACK_CHAIN:
+    for hop, fallback in enumerate(backend.fallback or _FALLBACK_CHAIN, 1):
         fb = _REGISTRY.get(fallback)
         # Same family guard as resolve_backend: a q8 backend missing its
         # grouped member raises rather than silently running grouped GEMMs
@@ -755,6 +958,7 @@ def resolve_grouped_backend(name: Optional[str] = None) -> str:
                 RuntimeWarning,
                 stacklevel=2,
             )
+            _note_degradation(resolved, fallback, "no_grouped_member", hop)
             return fallback
     raise RuntimeError(
         f"no available grouped matmul backend (requested {name or resolved!r})"
@@ -882,6 +1086,7 @@ def matmul(
     for d in batch_shape:
         m *= d
     _record_shape("dense", m, arr.shape[-1], b.shape[-1], 0, arr.dtype)
+    _note_gemm_call("dense", backend, m, arr.shape[-1], b.shape[-1], 0, arr.dtype)
     n = b.shape[-1]
     steps, raw_ops = _epi.normalize_epilogue(epilogue)
     if steps and c is not None:
@@ -1169,6 +1374,10 @@ def grouped_matmul(
     backend = resolve_grouped_backend(backend)
     _record_shape(
         "grouped", a.shape[1], a.shape[2], b.shape[2], a.shape[0], a.dtype
+    )
+    _note_gemm_call(
+        "grouped", backend, a.shape[1], a.shape[2], b.shape[2], a.shape[0],
+        a.dtype,
     )
     steps, raw_ops = _epi.normalize_epilogue(epilogue)
     if steps:

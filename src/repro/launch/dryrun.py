@@ -37,7 +37,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro import compat
+from repro import compat, obs
 from repro.configs import ARCHS, applicable_shapes, get_config, shape_by_name
 from repro.configs.base import ArchConfig, ShapeConfig
 from repro.core.hlo_census import census_hlo
@@ -274,6 +274,7 @@ def main() -> None:
     )
     args = ap.parse_args()
 
+    log = obs.get_logger("dryrun")
     archs = list(ARCHS) if args.arch == "all" else args.arch.split(",")
     meshes = (
         ["single", "multi"] if args.mesh == "both" else [args.mesh]
@@ -293,14 +294,16 @@ def main() -> None:
             )
             for shape in shapes:
                 if shape.name == "long_500k" and not cfg.supports_long:
-                    print(f"[dryrun] SKIP {arch} x {shape.name} (full-attn)")
+                    log.info("skip", arch=arch, shape=shape.name,
+                             reason="full-attn")
                     continue
                 out_path = os.path.join(
                     args.out, mesh_name, f"{arch}__{shape.name}.json"
                 )
                 os.makedirs(os.path.dirname(out_path), exist_ok=True)
                 if args.skip_existing and os.path.exists(out_path):
-                    print(f"[dryrun] cached {arch} x {shape.name} x {mesh_name}")
+                    log.info("cached", arch=arch, shape=shape.name,
+                             mesh=mesh_name)
                     continue
                 try:
                     rec = run_cell(
@@ -308,11 +311,12 @@ def main() -> None:
                         keep_hlo=args.keep_hlo,
                     )
                     r = rec["roofline"]
-                    print(
-                        f"[dryrun] OK {arch} x {shape.name} x {mesh_name}: "
-                        f"compile {rec['compile_s']:.1f}s "
-                        f"mem {rec['memory']['hbm_need_bytes']/1e9:.2f} GB/dev "
-                        f"dom={r['dominant']} frac={r['roofline_fraction']:.3f}"
+                    log.info(
+                        "ok", arch=arch, shape=shape.name, mesh=mesh_name,
+                        compile_s=rec["compile_s"],
+                        hbm_gb=rec["memory"]["hbm_need_bytes"] / 1e9,
+                        dominant=r["dominant"],
+                        roofline_frac=r["roofline_fraction"],
                     )
                 except Exception as e:
                     failures += 1
@@ -324,10 +328,11 @@ def main() -> None:
                         "error": f"{type(e).__name__}: {e}",
                         "traceback": traceback.format_exc()[-3000:],
                     }
-                    print(f"[dryrun] FAIL {arch} x {shape.name} x {mesh_name}: {e}")
+                    log.info("fail", arch=arch, shape=shape.name,
+                             mesh=mesh_name, error=str(e))
                 with open(out_path, "w") as f:
                     json.dump(rec, f, indent=1)
-    print(f"[dryrun] done; failures={failures}")
+    log.info("done", failures=failures)
     raise SystemExit(1 if failures else 0)
 
 

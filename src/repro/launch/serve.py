@@ -20,6 +20,7 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.configs import get_config
 from repro.models import api
 from repro.serve import (
@@ -52,12 +53,15 @@ def _static(cfg, params, args) -> None:
         cache_dtype=jnp.float32 if cfg.param_dtype == "float32" else jnp.bfloat16,
         temperature=args.temperature,
     )
+    log = obs.get_logger("serve")
     t0 = time.perf_counter()
     toks = eng.generate(batch, args.gen, key=key)
     dt = time.perf_counter() - t0
-    print(f"[serve] generated {toks.shape} in {dt:.2f}s "
-          f"({args.batch * args.gen / dt:.1f} tok/s)")
-    print("[serve] first sequence:", toks[0].tolist())
+    log.info(
+        "generated", shape=str(tuple(toks.shape)), wall_s=dt,
+        tokens_per_sec=args.batch * args.gen / dt,
+    )
+    log.info("first_sequence", tokens=str(toks[0].tolist()))
 
 
 def _continuous(cfg, params, args) -> None:
@@ -77,19 +81,31 @@ def _continuous(cfg, params, args) -> None:
         temperature=args.temperature,
         kv_format=args.kv_format,
     )
+    log = obs.get_logger("serve")
     report = eng.timed_serve(trace, key=jax.random.key(args.seed))
-    print(f"[serve] {len(trace)} requests, {report.generated_tokens} tokens "
-          f"in {report.wall_time_s:.2f}s ({report.tokens_per_sec:.1f} tok/s)")
-    print(f"[serve] decode steps {report.decode_steps}, prefill batches "
-          f"{report.prefill_batches}, mean slot occupancy "
-          f"{report.mean_occupancy:.3f}")
+    log.info(
+        "served", requests=len(trace), tokens=report.generated_tokens,
+        wall_s=report.wall_time_s, tokens_per_sec=report.tokens_per_sec,
+    )
+    log.info(
+        "counters", decode_steps=report.decode_steps,
+        prefill_batches=report.prefill_batches,
+        mean_occupancy=report.mean_occupancy,
+    )
+    log.info(
+        "latency", ttft_p50_s=report.ttft_p50, ttft_p99_s=report.ttft_p99,
+        itl_p50_s=report.itl_p50, itl_p99_s=report.itl_p99,
+    )
     if report.kv_bytes_per_slot:
-        fmt = args.kv_format or "full-width"
-        print(f"[serve] KV cache ({fmt}): "
-              f"{report.kv_bytes_per_slot / 1e3:.1f} kB/slot")
+        log.info(
+            "kv_cache", format=args.kv_format or "full-width",
+            kb_per_slot=report.kv_bytes_per_slot / 1e3,
+        )
     first = trace[0]
-    print(f"[serve] first request ({len(first.prompt)} prompt tokens):",
-          report.outputs[first.rid])
+    log.info(
+        "first_request", prompt_tokens=len(first.prompt),
+        output=str(report.outputs[first.rid]),
+    )
 
 
 def main() -> None:
@@ -123,8 +139,9 @@ def main() -> None:
     params = api.init_params(cfg, jax.random.key(args.seed))
     if args.engine == "static" or cfg.family in ("audio", "vlm"):
         if args.engine == "continuous":
-            print(f"[serve] {cfg.family} family: falling back to the static "
-                  f"lockstep engine")
+            obs.get_logger("serve").info(
+                "engine_fallback", family=cfg.family, engine="static"
+            )
         _static(cfg, params, args)
     else:
         _continuous(cfg, params, args)

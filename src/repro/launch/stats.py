@@ -1,0 +1,216 @@
+"""``repro-stats``: surface the repo's telemetry (see :mod:`repro.obs`).
+
+Metrics live in-process, so the CLI has two modes of access:
+
+* **post-mortem** — read artifacts another run wrote: a snapshot JSON
+  (``REPRO_METRICS_DUMP=snap.json`` makes any instrumented process dump one
+  at exit) or the JSONL event log (``REPRO_EVENTS=events.jsonl``).
+* **in-process** — drive a workload (the serve/train launchers) inside this
+  process and report its registry when it finishes, optionally bracketing
+  the run with ``jax.profiler.start_trace`` so the spans land on a
+  TensorBoard/Perfetto timeline.
+
+Examples::
+
+    # pretty-print / export a snapshot another run dumped
+    repro-stats snapshot --file snap.json
+    repro-stats snapshot --file snap.json --prom > metrics.prom
+
+    # tail the event log a serving or training process is appending to
+    repro-stats tail --file events.jsonl -n 20 --kind train_step
+
+    # run the serving driver here, then report (optionally with a profile)
+    repro-stats serve --profile /tmp/trace -- --arch chatglm3-6b --reduced
+    repro-stats train -- --arch chatglm3-6b --reduced --steps 20
+"""
+
+from __future__ import annotations
+
+import argparse
+import contextlib
+import json
+import sys
+from typing import Dict, List, Optional
+
+from repro import obs
+
+__all__ = ["main"]
+
+
+def _print_snapshot(snap: Dict, *, prom: bool = False, as_json: bool = False,
+                    out=None) -> None:
+    out = out if out is not None else sys.stdout
+    if prom:
+        out.write(obs.prometheus_text(snap))
+        return
+    if as_json:
+        json.dump(snap, out, indent=2)
+        out.write("\n")
+        return
+    counters = snap.get("counters", {})
+    gauges = snap.get("gauges", {})
+    hists = snap.get("histograms", {})
+    if not (counters or gauges or hists):
+        print("(empty registry)", file=out)
+        return
+    if counters:
+        print("counters:", file=out)
+        for name, fam in counters.items():
+            for labels, v in fam.items():
+                tag = f"{{{labels}}}" if labels else ""
+                print(f"  {name}{tag} = {v:g}", file=out)
+    if gauges:
+        print("gauges:", file=out)
+        for name, fam in gauges.items():
+            for labels, v in fam.items():
+                tag = f"{{{labels}}}" if labels else ""
+                print(f"  {name}{tag} = {v:g}", file=out)
+    if hists:
+        print("histograms:", file=out)
+        for name, fam in hists.items():
+            for labels, h in fam.items():
+                tag = f"{{{labels}}}" if labels else ""
+                print(
+                    f"  {name}{tag}: n={h['count']} mean={h['mean']:.6g} "
+                    f"p50={h['p50']:.6g} p99={h['p99']:.6g} "
+                    f"min={h['min']:.6g} max={h['max']:.6g}",
+                    file=out,
+                )
+
+
+def _load_snapshot(path: Optional[str]) -> Dict:
+    if path is None:
+        return obs.snapshot()
+    with open(path) as f:
+        return json.load(f)
+
+
+def _cmd_snapshot(args) -> None:
+    snap = _load_snapshot(args.file)
+    _print_snapshot(snap, prom=args.prom, as_json=args.json)
+
+
+def _cmd_tail(args) -> None:
+    path = args.file or obs.event_log_path()
+    if path is None:
+        raise SystemExit(
+            "no event log: pass --file or set REPRO_EVENTS=<path> on the "
+            "producing process"
+        )
+    try:
+        events = obs.read_events(path, n=None)
+    except FileNotFoundError:
+        # An instrumented run that emitted no events never creates the sink;
+        # an empty tail is a state worth reporting, not a crash.
+        print(f"no events recorded at {path}")
+        return
+    if args.kind:
+        events = [e for e in events if e.get("kind") == args.kind]
+    for e in events[-args.n:]:
+        print(json.dumps(e, default=str))
+
+
+@contextlib.contextmanager
+def _maybe_profile(trace_dir: Optional[str]):
+    if not trace_dir:
+        yield
+        return
+    import jax
+
+    jax.profiler.start_trace(trace_dir)
+    try:
+        yield
+    finally:
+        jax.profiler.stop_trace()
+        print(f"[stats] profile written to {trace_dir}", file=sys.stderr)
+
+
+def _run_driver(args, driver_main) -> None:
+    """Run a launch driver in-process under the span/profile bracket, then
+    report this process's registry."""
+    if not obs.enabled():
+        print("[stats] warning: REPRO_METRICS=0 — the run will record "
+              "nothing", file=sys.stderr)
+    sys.argv = [sys.argv[0]] + list(args.driver_args)
+    with _maybe_profile(args.profile):
+        with obs.span(f"stats.{args.cmd}"):
+            driver_main()
+    snap = obs.snapshot()
+    if args.out:
+        with open(args.out, "w") as f:
+            _print_snapshot(snap, prom=args.prom, as_json=not args.prom,
+                            out=f)
+        print(f"[stats] snapshot -> {args.out}", file=sys.stderr)
+    else:
+        _print_snapshot(snap, prom=args.prom)
+
+
+def _cmd_serve(args) -> None:
+    from repro.launch.serve import main as serve_main
+
+    _run_driver(args, serve_main)
+
+
+def _cmd_train(args) -> None:
+    from repro.launch.train import main as train_main
+
+    _run_driver(args, train_main)
+
+
+def _split_driver_args(argv: List[str]) -> (List[str], List[str]):
+    """Everything after ``--`` goes to the wrapped driver verbatim."""
+    if "--" in argv:
+        i = argv.index("--")
+        return argv[:i], argv[i + 1:]
+    return argv, []
+
+
+def main(argv: Optional[List[str]] = None) -> None:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    argv, driver_args = _split_driver_args(argv)
+
+    ap = argparse.ArgumentParser(
+        prog="repro-stats",
+        description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter,
+    )
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    sp = sub.add_parser("snapshot", help="pretty-print / export a snapshot")
+    sp.add_argument("--file", default=None,
+                    help="snapshot JSON written by REPRO_METRICS_DUMP "
+                         "(default: this process's live registry)")
+    sp.add_argument("--prom", action="store_true",
+                    help="Prometheus text exposition instead of pretty text")
+    sp.add_argument("--json", action="store_true",
+                    help="raw JSON instead of pretty text")
+    sp.set_defaults(fn=_cmd_snapshot)
+
+    tp = sub.add_parser("tail", help="print the last events of a JSONL log")
+    tp.add_argument("--file", default=None,
+                    help="event log path (default: $REPRO_EVENTS)")
+    tp.add_argument("-n", type=int, default=20, help="number of events")
+    tp.add_argument("--kind", default=None, help="filter by event kind")
+    tp.set_defaults(fn=_cmd_tail)
+
+    for name, fn in (("serve", _cmd_serve), ("train", _cmd_train)):
+        dp = sub.add_parser(
+            name,
+            help=f"run the {name} driver in-process, then report its "
+                 f"registry (driver args after --)",
+        )
+        dp.add_argument("--profile", default=None, metavar="DIR",
+                        help="bracket the run with jax.profiler.start_trace")
+        dp.add_argument("--prom", action="store_true",
+                        help="report as Prometheus text")
+        dp.add_argument("--out", default=None,
+                        help="write the report to a file instead of stdout")
+        dp.set_defaults(fn=fn)
+
+    args = ap.parse_args(argv)
+    args.driver_args = driver_args
+    args.fn(args)
+
+
+if __name__ == "__main__":
+    main()

@@ -13,6 +13,7 @@ import argparse
 
 import jax
 
+from repro import obs
 from repro.configs import get_config
 from repro.data import MarkovLMDataset, make_batch_fn
 from repro.optim import AdamWConfig
@@ -54,10 +55,14 @@ def main() -> None:
         ckpt_dir=args.ckpt_dir,
         log_every=max(1, args.steps // 20),
     )
-    res = train(cfg, opt, loop, make_batch_fn(ds), init_key=jax.random.key(args.seed))
-    print(
-        f"[train] done: loss {res.losses[0]:.3f} -> {res.losses[-1]:.3f} "
-        f"(stragglers flagged: {res.straggler_steps})"
+    log = obs.get_logger("train")
+    res = train(
+        cfg, opt, loop, make_batch_fn(ds),
+        init_key=jax.random.key(args.seed), log=log.raw,
+    )
+    log.info(
+        "done", loss_first=res.losses[0], loss_last=res.losses[-1],
+        stragglers=res.straggler_steps,
     )
 
 

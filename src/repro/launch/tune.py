@@ -26,6 +26,7 @@ import os
 import sys
 from typing import List, Optional
 
+from repro import obs
 from repro.kernels import ops
 from repro.tune import (
     ENV_VAR,
@@ -97,13 +98,14 @@ def main(argv: Optional[List[str]] = None) -> None:
     ap.add_argument("--list-backends", action="store_true",
                     help="print tunable/available backends and exit")
     args = ap.parse_args(argv)
+    log = obs.get_logger("tune")
 
     tunable = [
         b for b in ops.tunable_backends()
         if b in TUNABLE_BACKENDS and b in ops.available_backends()
     ]
     if args.list_backends:
-        print(f"tunable backends on {device_kind()}: {tunable}")
+        log.raw(f"tunable backends on {device_kind()}: {tunable}")
         return
 
     if args.backends is None:
@@ -136,7 +138,7 @@ def main(argv: Optional[List[str]] = None) -> None:
         harvested = harvest_model_shapes(
             arch, batch=args.batch, seq=args.seq
         )
-        print(f"harvested {len(harvested)} GEMM shapes from {arch} "
+        log.raw(f"harvested {len(harvested)} GEMM shapes from {arch} "
               f"(batch={args.batch}, seq={args.seq})")
         shapes += harvested
     shapes = list(dict.fromkeys(shapes))  # dedupe, keep order
@@ -148,30 +150,30 @@ def main(argv: Optional[List[str]] = None) -> None:
     if not args.fresh:
         try:
             table.merge(TuningTable.load(path))
-            print(f"merging into {len(table)} existing entries from {path}")
+            log.raw(f"merging into {len(table)} existing entries from {path}")
         except FileNotFoundError:
             pass
         except TableFormatError as e:
-            print(f"ignoring unusable existing table at {path}: {e}")
+            log.raw(f"ignoring unusable existing table at {path}: {e}")
 
-    print(f"tuning {len(shapes)} shapes x {len(backends)} backends "
+    log.raw(f"tuning {len(shapes)} shapes x {len(backends)} backends "
           f"on {device_kind()} (top-{args.top_k} of the modeled candidates, "
           f"{args.iters} samples each)")
     tune_workload(
         shapes, backends=backends, table=table,
         top_k=args.top_k, iters=args.iters, warmup=args.warmup,
-        log=lambda line: print("  " + line),
+        log=lambda line: log.raw("  " + line),
     )
     table.save(path)
     ops.clear_tile_cache()  # this process re-reads the table it just wrote
-    print(f"wrote {len(table)} entries -> {path}")
+    log.raw(f"wrote {len(table)} entries -> {path}")
     if path == active_table_path():
         if os.environ.get(ENV_VAR):
-            print(f"active while REPRO_TUNE_TABLE={path} is set")
+            log.raw(f"active while REPRO_TUNE_TABLE={path} is set")
         else:
-            print("written to the default location; active automatically")
+            log.raw("written to the default location; active automatically")
     else:
-        print(f"activate with: REPRO_TUNE_TABLE={path}")
+        log.raw(f"activate with: REPRO_TUNE_TABLE={path}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,84 @@
+"""``repro.obs`` — unified telemetry for the O-POPE substrate.
+
+The paper's headline claim is *measured* utilization (99.97% FPU busy); a
+reproduction aiming at production scale needs the same discipline about its
+own numbers. This package is the one place runtime observability lives:
+
+* :mod:`~repro.obs.metrics` — thread-safe Counter/Gauge/Histogram registry,
+  ``snapshot()`` (nested dict), JSON + Prometheus-text exporters, and the
+  ``REPRO_METRICS=0`` hard-off switch. All instrumentation in the repo is
+  host-side Python (trace-time inside ``jit``), so telemetry adds **zero
+  ops to compiled HLO** on or off — asserted on a jitted decode step by
+  ``tests/test_obs.py``.
+* :mod:`~repro.obs.spans` — ``span(name)``: ``jax.profiler.TraceAnnotation``
+  + ``jax.named_scope`` on the device side, a wall-clock histogram on the
+  host side.
+* :mod:`~repro.obs.logging` — structured launch-script logging
+  (``REPRO_LOG=text|json``) and the JSONL event log (``REPRO_EVENTS``,
+  ``repro-stats tail``) the train loop's per-step records flow through.
+
+Instrumented layers: ``kernels.ops`` (per-call GEMM counters by
+backend/family/tile/fusion source, degradation events, tile-cache hit/miss
++ the ``on_miss_streak`` auto-retune seam), ``serve.continuous``
+(per-request lifecycle -> TTFT/ITL histograms, queue/occupancy gauges),
+``train.loop`` (per-step wall/tokens-s/roofline events). The ``repro-stats``
+CLI (``repro.launch.stats``) surfaces all of it.
+"""
+
+from .logging import (
+    Logger,
+    clear_events,
+    event,
+    event_log_path,
+    get_logger,
+    log_mode,
+    read_events,
+    recent_events,
+    set_event_log,
+)
+from .metrics import (
+    DEFAULT_BUCKETS,
+    Counter,
+    Gauge,
+    Histogram,
+    Registry,
+    counter,
+    enabled,
+    gauge,
+    histogram,
+    percentile,
+    prometheus_text,
+    reset,
+    set_enabled,
+    snapshot,
+    to_json,
+)
+from .spans import span
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "Registry",
+    "DEFAULT_BUCKETS",
+    "counter",
+    "gauge",
+    "histogram",
+    "snapshot",
+    "reset",
+    "to_json",
+    "prometheus_text",
+    "percentile",
+    "enabled",
+    "set_enabled",
+    "span",
+    "Logger",
+    "get_logger",
+    "log_mode",
+    "event",
+    "clear_events",
+    "set_event_log",
+    "event_log_path",
+    "recent_events",
+    "read_events",
+]

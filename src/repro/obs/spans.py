@@ -1,0 +1,44 @@
+"""Trace spans: named brackets that show up on device *and* host.
+
+``span(name)`` is one context manager serving both worlds:
+
+* **device** — the body runs under ``jax.profiler.TraceAnnotation`` (the
+  bracket appears on the TensorBoard/Perfetto trace timeline when a profile
+  is being captured — see ``repro-stats --profile``) and ``jax.named_scope``
+  (the name lands in HLO metadata for anything traced inside, without
+  adding a single instruction);
+* **host** — a wall-clock timer records the bracket duration into the
+  ``span.seconds`` histogram, labelled by span name.
+
+With telemetry off (``REPRO_METRICS=0``) the whole thing is a bare
+``yield`` — no annotation objects, no timer, no scope — so a disabled
+process is bit-for-bit the un-instrumented one.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import time
+from typing import Iterator
+
+from . import metrics as _m
+
+__all__ = ["span"]
+
+
+@contextlib.contextmanager
+def span(name: str, **labels) -> Iterator[None]:
+    """Bracket a region: profiler annotation + HLO scope + host wall timer."""
+    if not _m.enabled():
+        yield
+        return
+    import jax
+
+    t0 = time.perf_counter()
+    try:
+        with jax.profiler.TraceAnnotation(name), jax.named_scope(name):
+            yield
+    finally:
+        _m.histogram("span.seconds", name=name, **labels).observe(
+            time.perf_counter() - t0
+        )

@@ -35,6 +35,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs as _obs
 from repro.configs.base import ArchConfig
 from repro.models import api as model_api
 
@@ -56,6 +57,17 @@ class ServingReport:
     mean_occupancy: float  # mean active-slot fraction per decode step
     wall_time_s: float
     kv_bytes_per_slot: float = 0.0  # K/V pool bytes per slot (+ quant scales)
+    # Host-observed latency percentiles (seconds). TTFT = wall clock from the
+    # request's arrival tick to its first token (sampled from prefill logits
+    # at join, so queueing + prefill dominate); ITL = wall clock between a
+    # lane's consecutive tokens. On the deferred-detokenization path (no EOS,
+    # no streaming callback) decode dispatches are async, so ITL measures
+    # host dispatch cadence, not device step latency — the sync path (EOS or
+    # ``on_token``) measures true token-to-token wall time.
+    ttft_p50: float = 0.0
+    ttft_p99: float = 0.0
+    itl_p50: float = 0.0
+    itl_p99: float = 0.0
 
     @property
     def tokens_per_sec(self) -> float:
@@ -193,6 +205,17 @@ class ContinuousEngine:
         sync = on_token is not None or self.eos_id is not None
         pending = []  # (device tokens [*, 1], [(row, rid), ...]) per step
 
+        # Lifecycle wall stamps (always kept — the report's percentile fields
+        # are product, not telemetry; only the obs emission is gated). A
+        # request's clock starts when the loop reaches its arrival tick.
+        wall = time.perf_counter
+        by_arrival = sorted(requests, key=lambda r: r.arrival)
+        n_arrival_stamped = 0
+        arrive_wall: Dict[int, float] = {}
+        last_tok_wall: Dict[int, float] = {}
+        ttfts: List[float] = []
+        itls: List[float] = []
+
         step = 0
         decode_steps = 0
         prefill_batches = 0
@@ -205,6 +228,12 @@ class ContinuousEngine:
         while not (sched.drained and pool.n_active == 0):
             if step > limit:
                 raise RuntimeError(f"serving did not drain within {limit} steps")
+            while (
+                n_arrival_stamped < len(by_arrival)
+                and by_arrival[n_arrival_stamped].arrival <= step
+            ):
+                arrive_wall[by_arrival[n_arrival_stamped].rid] = wall()
+                n_arrival_stamped += 1
 
             # -- join: refill free slots from the queue ---------------------
             joined = False
@@ -223,6 +252,17 @@ class ContinuousEngine:
                 prefill_batches += 1
                 generated += n_gen  # one token per request from prefill logits
                 joined = True
+                # First token exists now (sampled from prefill logits): the
+                # join stamp closes each admitted request's TTFT window.
+                now = wall()
+                _obs.counter("serve.requests", event="admitted").inc(len(batch))
+                for r in batch:
+                    ttft = now - arrive_wall.get(r.rid, now)
+                    ttfts.append(ttft)
+                    last_tok_wall[r.rid] = now
+                    _obs.histogram("serve.ttft_seconds").observe(ttft)
+                    if sched.states[r.rid].done:  # one-token request
+                        _obs.counter("serve.requests", event="retired").inc()
             if joined:
                 active_dev = jnp.asarray(active)
 
@@ -233,6 +273,7 @@ class ContinuousEngine:
                 continue
 
             # -- decode: one fused masked step over the whole pool ----------
+            t_step = wall()
             n_live = sum(active)
             if self.temperature > 0:
                 key, sub = jax.random.split(key)
@@ -247,11 +288,12 @@ class ContinuousEngine:
 
             # -- evict: stream tokens, retire finished requests -------------
             live = [s for s in pool.active_slots() if active[s]]
+            live_rids = [pool.owner_of(s) for s in live]
+            n_retired = 0
             changed = False
             if sync:
                 emitted = np.asarray(tok[:, 0])
-                for slot in live:
-                    rid = pool.owner_of(slot)
+                for slot, rid in zip(live, live_rids):
                     t = int(emitted[slot])
                     if on_token is not None:
                         on_token(rid, t)
@@ -260,17 +302,35 @@ class ContinuousEngine:
                         pool.release(slot)
                         active[slot] = False
                         changed = True
+                        n_retired += 1
             else:
-                pending.append((tok, [(s, pool.owner_of(s)) for s in live]))
-                for slot in live:
-                    rid = pool.owner_of(slot)
+                pending.append((tok, list(zip(live, live_rids))))
+                for slot, rid in zip(live, live_rids):
                     generated += 1
                     if sched.record_emitted(rid, now=step):
                         pool.release(slot)
                         active[slot] = False
                         changed = True
+                        n_retired += 1
             if changed:
                 active_dev = jnp.asarray(active)
+
+            # Per-tick telemetry: step wall time, each live lane's
+            # inter-token gap, queue/occupancy gauges.
+            now = wall()
+            _obs.histogram("serve.step_seconds").observe(now - t_step)
+            for rid in live_rids:
+                prev = last_tok_wall.get(rid)
+                if prev is not None:
+                    itl = now - prev
+                    itls.append(itl)
+                    _obs.histogram("serve.itl_seconds").observe(itl)
+                last_tok_wall[rid] = now
+            _obs.counter("serve.tokens").inc(len(live_rids))
+            if n_retired:
+                _obs.counter("serve.requests", event="retired").inc(n_retired)
+            _obs.gauge("serve.queue_depth").set(sched.n_arrived(step))
+            _obs.gauge("serve.occupancy").set(n_live / self.n_slots)
 
         # Deferred fetch: one host sync for the whole run.
         for arr, pairs in pending:
@@ -279,7 +339,7 @@ class ContinuousEngine:
                 sched.states[rid].tokens.append(int(vals[row]))
         jax.block_until_ready(tok)
         outputs = {rid: st.tokens for rid, st in sched.states.items()}
-        return ServingReport(
+        report = ServingReport(
             outputs=outputs,
             generated_tokens=generated,
             decode_steps=decode_steps,
@@ -287,7 +347,23 @@ class ContinuousEngine:
             mean_occupancy=(occupancy_acc / decode_steps) if decode_steps else 0.0,
             wall_time_s=0.0,  # stamped by timed_serve
             kv_bytes_per_slot=self._last_kv_bytes_per_slot,
+            ttft_p50=_obs.percentile(ttfts, 50),
+            ttft_p99=_obs.percentile(ttfts, 99),
+            itl_p50=_obs.percentile(itls, 50),
+            itl_p99=_obs.percentile(itls, 99),
         )
+        _obs.event(
+            "serving_report",
+            requests=len(requests),
+            generated_tokens=report.generated_tokens,
+            decode_steps=report.decode_steps,
+            mean_occupancy=report.mean_occupancy,
+            ttft_p50=report.ttft_p50,
+            ttft_p99=report.ttft_p99,
+            itl_p50=report.itl_p50,
+            itl_p99=report.itl_p99,
+        )
+        return report
 
     def timed_serve(self, requests: List[Request], **kw) -> ServingReport:
         t0 = time.perf_counter()

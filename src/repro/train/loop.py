@@ -27,7 +27,9 @@ from typing import Any, Callable, Dict, Optional
 import jax
 import jax.numpy as jnp
 
+from repro import obs as _obs
 from repro.configs.base import ArchConfig
+from repro.core import roofline as _roofline
 from repro.models import api as model_api
 from repro.optim.adamw import AdamWConfig, OptState, apply_updates, init_opt_state
 from repro.checkpoint import checkpoint as ckpt
@@ -168,6 +170,10 @@ def train(
     step_fn = make_train_step(cfg, opt_cfg, policy=policy)
     wd = _Watchdog(loop.watchdog_factor)
     losses = []
+    # Per-step telemetry baseline: parameter count for the 6*N*D train-FLOP
+    # estimate (core.roofline.model_flops), so each step event carries
+    # achieved GFLOP/s and its fraction of the reference roofline.
+    n_params = sum(int(x.size) for x in jax.tree.leaves(params))
     try:
         for step in range(start, loop.total_steps):
             if loop.fail_at_step is not None and step == loop.fail_at_step:
@@ -178,8 +184,29 @@ def train(
             loss = float(metrics["loss"])
             losses.append(loss)
             dt = time.perf_counter() - t0
+            if _obs.enabled():
+                tok_arr = batch.get("tokens", next(iter(batch.values())))
+                tokens = int(tok_arr.size)
+                flops = _roofline.model_flops(n_params, tokens, kind="train")
+                tok_s = tokens / dt if dt else 0.0
+                gflops = flops / dt / 1e9 if dt else 0.0
+                _obs.histogram("train.step_seconds").observe(dt)
+                _obs.gauge("train.tokens_per_sec").set(tok_s)
+                _obs.event(
+                    "train_step",
+                    step=step,
+                    loss=loss,
+                    wall_s=dt,
+                    tokens=tokens,
+                    tokens_per_sec=tok_s,
+                    gflops_per_sec=gflops,
+                    roofline_frac=flops / dt / _roofline.TPU_V5E.peak_flops
+                    if dt else 0.0,
+                )
             if wd.observe(dt):
                 log(f"[train] straggler: step {step} took {dt:.3f}s")
+                _obs.counter("train.stragglers").inc()
+                _obs.event("straggler", step=step, wall_s=dt)
             if loop.log_every and step % loop.log_every == 0:
                 log(
                     f"[train] step {step} loss {loss:.4f} "

@@ -1,0 +1,52 @@
+"""The auto-retune seam: what a sustained tile-cache miss streak triggers.
+
+``kernels.ops.on_miss_streak`` fires when a long-lived process keeps
+resolving tile shapes the memo (and, usually, the tuning table) has never
+seen — the signature of a workload the last ``repro-tune`` run did not
+cover. The default hook deliberately does **not** retune: an in-process
+search would steal device time from the serving loop it is trying to help.
+It records the candidate — a ``tune.retune_candidates`` counter labelled by
+shape family and backend, plus a ``retune_candidate`` event carrying the
+full shape key — so an operator (or a future background tuner, ROADMAP
+item 4) can run ``repro-tune`` offline against exactly the shapes that
+were missing.
+
+Processes that *want* an active policy register their own callback::
+
+    from repro.kernels import ops
+    ops.on_miss_streak(lambda key, streak: my_queue.put(key), threshold=16)
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+from repro import obs as _obs
+
+__all__ = ["retune_candidate"]
+
+# (backend, shape_family, m, k, n, groups, itemsize) — ops.TileKey.
+Key = Tuple[Optional[str], str, int, int, int, int, int]
+
+
+def retune_candidate(key: Key, streak: int) -> None:
+    """Record one retune candidate (never retunes implicitly)."""
+    if not _obs.enabled():
+        return
+    backend, family, m, k, n, groups, itemsize = key
+    _obs.counter(
+        "tune.retune_candidates",
+        backend=str(backend),
+        family=family,
+    ).inc()
+    _obs.event(
+        "retune_candidate",
+        backend=str(backend),
+        family=family,
+        m=m,
+        k=k,
+        n=n,
+        groups=groups,
+        itemsize=itemsize,
+        streak=streak,
+    )

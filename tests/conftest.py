@@ -19,3 +19,25 @@ def import_quant_bench():
     finally:
         sys.path.pop(0)
     return quant_bench
+
+
+import pytest  # noqa: E402
+
+
+@pytest.fixture(autouse=True)
+def _reset_telemetry():
+    """No cross-test telemetry bleed: every test starts with an empty metrics
+    registry and zeroed tile-lookup counters (the tile *memo* itself is NOT
+    dropped — warm tiles across tests are fine and fast; tests that need a
+    cold memo call ops.clear_tile_cache() themselves)."""
+    from repro import obs
+    from repro.kernels import ops
+
+    obs.reset()
+    obs.clear_events()
+    ops.reset_tile_cache_stats()
+    yield
+    obs.reset()
+    obs.clear_events()
+    ops.reset_tile_cache_stats()
+    ops.on_miss_streak(None)  # restore the default retune-candidate hook

@@ -1,0 +1,459 @@
+"""repro.obs: registry semantics, exporters, spans, events — and the
+instrumented layers (kernels, serving, training) emitting through them.
+
+The load-bearing claim is the last test class: ALL instrumentation is
+host-side Python (executed at trace time inside ``jit``), so the compiled
+decode-step HLO carries an identical instruction census whether telemetry
+is on or off — ``REPRO_METRICS=0`` provably costs zero device work because
+``REPRO_METRICS=1`` already does.
+"""
+
+import collections
+import json
+import re
+import warnings
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import obs
+from repro.kernels import ops
+
+# ---------------------------------------------------------------------------
+# metrics registry
+# ---------------------------------------------------------------------------
+
+
+class TestCounters:
+    def test_inc_and_labels(self):
+        obs.counter("t.calls", backend="xla").inc()
+        obs.counter("t.calls", backend="xla").inc(2)
+        obs.counter("t.calls", backend="pallas").inc()
+        snap = obs.snapshot()
+        assert snap["counters"]["t.calls"]["backend=xla"] == 3.0
+        assert snap["counters"]["t.calls"]["backend=pallas"] == 1.0
+
+    def test_counters_only_go_up(self):
+        with pytest.raises(ValueError):
+            obs.counter("t.calls").inc(-1)
+
+    def test_label_order_is_canonical(self):
+        obs.counter("t.c", b="2", a="1").inc()
+        obs.counter("t.c", a="1", b="2").inc()
+        snap = obs.snapshot()
+        assert snap["counters"]["t.c"] == {"a=1,b=2": 2.0}
+
+    def test_metric_name_is_positional_only(self):
+        # a label literally called "name" must not collide with the metric
+        # name parameter (spans label their histogram by span name)
+        obs.counter("t.named", name="x").inc()
+        assert obs.snapshot()["counters"]["t.named"]["name=x"] == 1.0
+
+
+class TestGauges:
+    def test_set_and_add(self):
+        obs.gauge("t.g").set(4.0)
+        obs.gauge("t.g").add(-1.5)
+        assert obs.snapshot()["gauges"]["t.g"][""] == 2.5
+
+
+class TestHistograms:
+    def test_summary_stats(self):
+        h = obs.histogram("t.h")
+        for v in (0.1, 0.2, 0.3, 0.4):
+            h.observe(v)
+        s = obs.snapshot()["histograms"]["t.h"][""]
+        assert s["count"] == 4
+        assert s["sum"] == pytest.approx(1.0)
+        assert s["mean"] == pytest.approx(0.25)
+        assert s["min"] == pytest.approx(0.1)
+        assert s["max"] == pytest.approx(0.4)
+
+    def test_cumulative_buckets(self):
+        h = obs.histogram("t.b", buckets=[1.0, 2.0, 4.0])
+        for v in (0.5, 1.5, 3.0, 100.0):
+            h.observe(v)
+        s = obs.snapshot()["histograms"]["t.b"][""]
+        # snapshot buckets are cumulative counts per le-edge (+Inf last)
+        assert s["buckets"] == {"1.0": 1, "2.0": 2, "4.0": 3, "+Inf": 4}
+
+    def test_percentile_linear_interpolation(self):
+        assert obs.percentile([], 50) == 0.0
+        assert obs.percentile([3.0], 99) == 3.0
+        assert obs.percentile([1.0, 2.0, 3.0, 4.0], 50) == pytest.approx(2.5)
+        assert obs.percentile([1.0, 2.0, 3.0, 4.0], 100) == 4.0
+        xs = list(range(101))
+        assert obs.percentile(xs, 99) == pytest.approx(99.0)
+
+    def test_reset_drops_everything(self):
+        obs.counter("t.c").inc()
+        obs.histogram("t.h").observe(1.0)
+        obs.reset()
+        snap = obs.snapshot()
+        assert snap["counters"] == {} and snap["histograms"] == {}
+
+
+class TestExporters:
+    def test_to_json_roundtrips(self):
+        obs.counter("t.c", x="1").inc()
+        assert json.loads(obs.to_json())["counters"]["t.c"]["x=1"] == 1.0
+
+    def test_prometheus_text(self):
+        obs.counter("gemm.calls", backend="xla").inc(2)
+        obs.gauge("serve.occupancy").set(0.5)
+        obs.histogram("t.h").observe(0.3)
+        text = obs.prometheus_text()
+        assert 'repro_gemm_calls_total{backend="xla"} 2.0' in text
+        assert "repro_serve_occupancy 0.5" in text
+        assert "repro_t_h_count 1" in text
+        assert 'repro_t_h_bucket{le="+Inf"} 1' in text
+
+    def test_prometheus_from_file_snapshot(self):
+        # the CLI renders snapshots other processes dumped: exporter must
+        # work from a plain dict, not just the live registry
+        obs.counter("t.c").inc()
+        snap = json.loads(json.dumps(obs.snapshot()))
+        obs.reset()
+        assert "repro_t_c_total 1.0" in obs.prometheus_text(snap)
+
+
+class TestDisabled:
+    def test_disabled_fetches_are_null(self):
+        prev = obs.set_enabled(False)
+        try:
+            c = obs.counter("t.off")
+            c.inc(5)
+            obs.histogram("t.off.h").observe(1.0)
+            assert obs.snapshot()["counters"] == {}
+        finally:
+            obs.set_enabled(prev)
+
+    def test_disabled_span_and_event_are_noops(self):
+        prev = obs.set_enabled(False)
+        try:
+            with obs.span("t.span"):
+                pass
+            obs.event("t.kind", x=1)
+            assert obs.snapshot()["histograms"] == {}
+            assert obs.recent_events(10, kind="t.kind") == []
+        finally:
+            obs.set_enabled(prev)
+
+
+# ---------------------------------------------------------------------------
+# spans, logger, events
+# ---------------------------------------------------------------------------
+
+
+class TestSpans:
+    def test_span_records_wall_time(self):
+        with obs.span("t.block", phase="x"):
+            pass
+        s = obs.snapshot()["histograms"]["span.seconds"]["name=t.block,phase=x"]
+        assert s["count"] == 1 and s["max"] >= 0.0
+
+    def test_span_propagates_exceptions_but_still_records(self):
+        with pytest.raises(RuntimeError):
+            with obs.span("t.boom"):
+                raise RuntimeError("boom")
+        assert obs.snapshot()["histograms"]["span.seconds"]["name=t.boom"][
+            "count"
+        ] == 1
+
+
+class TestLogger:
+    def test_text_mode(self, capsys, monkeypatch):
+        monkeypatch.delenv("REPRO_LOG", raising=False)
+        obs.get_logger("serve").info("generated", tokens=128, wall_s=1.25)
+        out = capsys.readouterr().out
+        assert out == "[serve] generated tokens=128 wall_s=1.25\n"
+
+    def test_json_mode(self, capsys, monkeypatch):
+        monkeypatch.setenv("REPRO_LOG", "json")
+        obs.get_logger("serve").info("generated", tokens=128)
+        rec = json.loads(capsys.readouterr().out)
+        assert rec["component"] == "serve"
+        assert rec["event"] == "generated" and rec["tokens"] == 128
+
+    def test_raw_passthrough_and_json_wrap(self, capsys, monkeypatch):
+        monkeypatch.delenv("REPRO_LOG", raising=False)
+        obs.get_logger("tune").raw("wrote 2 entries -> /tmp/t.json")
+        assert capsys.readouterr().out == "wrote 2 entries -> /tmp/t.json\n"
+        monkeypatch.setenv("REPRO_LOG", "json")
+        obs.get_logger("tune").raw("hello world")
+        assert json.loads(capsys.readouterr().out)["msg"] == "hello world"
+
+
+class TestEvents:
+    def test_ring_buffer_and_kind_filter(self):
+        obs.event("a", i=1)
+        obs.event("b", i=2)
+        obs.event("a", i=3)
+        evts = obs.recent_events(10, kind="a")
+        assert [e["i"] for e in evts] == [1, 3]
+
+    def test_jsonl_sink_and_read_back(self, tmp_path):
+        path = str(tmp_path / "events.jsonl")
+        prev = obs.set_event_log(path)
+        try:
+            obs.event("train_step", step=0, loss=2.5)
+            obs.event("train_step", step=1, loss=2.25)
+        finally:
+            obs.set_event_log(prev)
+        evts = obs.read_events(path)
+        assert len(evts) == 2 and evts[1]["loss"] == 2.25
+        assert obs.read_events(path, n=1)[0]["step"] == 1
+
+
+# ---------------------------------------------------------------------------
+# instrumented layers
+# ---------------------------------------------------------------------------
+
+
+class TestKernelTelemetry:
+    def test_gemm_call_counter_labels(self):
+        a = jnp.ones((4, 16), jnp.float32)
+        b = jnp.ones((16, 8), jnp.float32)
+        ops.matmul(a, b, backend="xla")
+        snap = obs.snapshot()
+        key = "backend=xla,family=fp,fusion=none,shape=dense,tile=heuristic"
+        assert snap["counters"]["gemm.calls"][key] == 1.0
+
+    def test_grouped_gemm_call_counter(self):
+        a = jnp.ones((2, 4, 16), jnp.float32)
+        b = jnp.ones((2, 16, 8), jnp.float32)
+        ops.grouped_matmul(a, b, backend="xla")
+        fam = obs.snapshot()["counters"]["gemm.calls"]
+        assert any("shape=grouped" in k for k in fam)
+
+    def test_degradation_counter_and_event(self):
+        # compiled pallas cannot lower on CPU: an explicit request degrades
+        # along its chain — and the warning now has a telemetry twin
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", RuntimeWarning)
+            resolved = ops.resolve_backend("pallas")
+        assert resolved != "pallas"
+        fam = obs.snapshot()["counters"]["gemm.degradations"]
+        (key,) = fam
+        assert "requested=pallas" in key
+        assert f"resolved={resolved}" in key
+        assert "reason=backend_unavailable" in key
+        evt = obs.recent_events(5, kind="degradation")[-1]
+        assert evt["requested"] == "pallas" and evt["hop"] >= 1
+
+    def test_tile_lookup_stats_and_counter(self):
+        ops.reset_tile_cache_stats()
+        ops._tile_for(1234, 256, 128, 4)
+        ops._tile_for(1234, 256, 128, 4)
+        st = ops.tile_cache_stats()
+        assert st["misses"] >= 1 and st["hits"] >= 1
+        fam = obs.snapshot()["counters"]["tile.lookups"]
+        assert fam["result=miss"] >= 1 and fam["result=hit"] >= 1
+
+    def test_reset_stats_keeps_memo_warm(self):
+        ops._tile_for(1235, 256, 128, 4)
+        size = ops.tile_cache_info().currsize
+        ops.reset_tile_cache_stats()
+        assert ops.tile_cache_stats()["misses"] == 0
+        assert ops.tile_cache_info().currsize == size
+        ops._tile_for(1235, 256, 128, 4)  # still a hit
+        assert ops.tile_cache_stats()["hits"] == 1
+
+    def test_miss_streak_hook_fires_at_threshold_multiples(self):
+        fired = []
+        ops.on_miss_streak(lambda key, s: fired.append(s), threshold=3)
+        ops.reset_tile_cache_stats()
+        for i in range(7):
+            ops._tile_for(4096 + i, 256, 128, 4)
+        assert fired == [3, 6]
+
+    def test_hit_resets_the_streak(self):
+        fired = []
+        ops.on_miss_streak(lambda key, s: fired.append(s), threshold=3)
+        ops.reset_tile_cache_stats()
+        ops._tile_for(5000, 256, 128, 4)
+        ops._tile_for(5001, 256, 128, 4)
+        ops._tile_for(5000, 256, 128, 4)  # hit: streak back to 0
+        ops._tile_for(5002, 256, 128, 4)
+        assert fired == []
+        assert ops.tile_cache_stats()["miss_streak"] == 1
+
+    def test_hook_exceptions_are_swallowed(self):
+        def bad(key, streak):
+            raise RuntimeError("hook bug")
+
+        ops.on_miss_streak(bad, threshold=1)
+        ops.reset_tile_cache_stats()
+        assert ops._tile_for(6000, 256, 128, 4)  # must not raise
+
+    def test_default_hook_logs_retune_candidate(self):
+        ops.on_miss_streak(None, threshold=2)
+        ops.reset_tile_cache_stats()
+        ops._tile_for(7000, 256, 128, 4, "dense", 0, "xla")
+        ops._tile_for(7001, 256, 128, 4, "dense", 0, "xla")
+        evts = obs.recent_events(5, kind="retune_candidate")
+        assert evts and evts[-1]["m"] == 7001 and evts[-1]["streak"] == 2
+        fam = obs.snapshot()["counters"]["tune.retune_candidates"]
+        assert fam["backend=xla,family=dense"] == 1.0
+
+
+class TestServingTelemetry:
+    @pytest.fixture(scope="class")
+    def report_and_snap(self):
+        from repro.configs import get_config
+        from repro.models import api
+        from repro.serve import ContinuousEngine, poisson_trace
+
+        obs.reset()
+        cfg = get_config("chatglm3-6b").reduced()
+        params = api.init_params(cfg, jax.random.key(0))
+        trace = poisson_trace(
+            6, seed=0, vocab=cfg.vocab, prompt_lens=(4, 8), gen_lens=(3, 6)
+        )
+        eng = ContinuousEngine(
+            cfg=cfg, params=params, n_slots=2, max_len=32,
+            cache_dtype=jnp.float32,
+        )
+        report = eng.timed_serve(trace)
+        return report, obs.snapshot()
+
+    def test_percentiles_are_sane(self, report_and_snap):
+        report, _ = report_and_snap
+        # a Poisson trace through a 2-slot pool queues: TTFT spans queueing
+        # + prefill and must be positive and ordered
+        assert 0 < report.ttft_p50 <= report.ttft_p99
+        assert 0 < report.itl_p50 <= report.itl_p99
+        assert report.ttft_p99 < report.wall_time_s
+
+    def test_lifecycle_histograms_and_counters(self, report_and_snap):
+        report, snap = report_and_snap
+        h = snap["histograms"]
+        assert h["serve.ttft_seconds"][""]["count"] == 6
+        # every generated token beyond each request's first closes an
+        # inter-token gap
+        assert h["serve.itl_seconds"][""]["count"] == (
+            report.generated_tokens - 6
+        )
+        assert h["serve.step_seconds"][""]["count"] == report.decode_steps
+        c = snap["counters"]["serve.requests"]
+        assert c["event=admitted"] == 6.0 and c["event=retired"] == 6.0
+        assert set(snap["gauges"]) >= {"serve.occupancy", "serve.queue_depth"}
+
+    def test_bench_row_carries_percentiles(self, report_and_snap):
+        import os
+        import sys
+
+        report, _ = report_and_snap
+        sys.path.insert(
+            0, os.path.join(os.path.dirname(__file__), "..", "benchmarks")
+        )
+        try:
+            from serving_bench import run_continuous
+        finally:
+            sys.path.pop(0)
+
+        class _Eng:
+            def timed_serve(self, requests):
+                return report
+
+            def decode_compilations(self):
+                return 1
+
+        row = run_continuous(_Eng(), [])
+        for k in ("ttft_p50", "ttft_p99", "itl_p50", "itl_p99"):
+            assert row[k] == getattr(report, k)
+
+
+class TestTrainTelemetry:
+    def test_per_step_events_with_roofline(self):
+        import numpy as np
+
+        from repro.configs import get_config
+        from repro.optim.adamw import AdamWConfig
+        from repro.train.loop import TrainLoopConfig, train
+
+        cfg = get_config("chatglm3-6b").reduced()
+
+        def batch_fn(step):
+            rng = np.random.default_rng(step)
+            toks = rng.integers(0, cfg.vocab, (2, 17))
+            return {
+                "tokens": jnp.asarray(toks[:, :-1], jnp.int32),
+                "labels": jnp.asarray(toks[:, 1:], jnp.int32),
+            }
+
+        train(
+            cfg, AdamWConfig(), TrainLoopConfig(total_steps=3, log_every=0),
+            batch_fn, log=lambda m: None,
+        )
+        evts = obs.recent_events(10, kind="train_step")
+        assert [e["step"] for e in evts] == [0, 1, 2]
+        for e in evts:
+            assert e["tokens"] == 32
+            assert e["tokens_per_sec"] > 0
+            assert e["gflops_per_sec"] > 0
+            assert 0 < e["roofline_frac"] < 1
+        snap = obs.snapshot()
+        assert snap["histograms"]["train.step_seconds"][""]["count"] == 3
+        assert snap["gauges"]["train.tokens_per_sec"][""] > 0
+
+
+# ---------------------------------------------------------------------------
+# the zero-cost claim: telemetry adds NO ops to compiled HLO
+# ---------------------------------------------------------------------------
+
+_OPCODE = re.compile(r"=\s*[a-z0-9\[\],{}\s]*?([a-z][a-z0-9\-]*)\(")
+
+
+def _instruction_census(hlo: str) -> collections.Counter:
+    return collections.Counter(
+        m.group(1) for line in hlo.splitlines() if " = " in line
+        for m in [_OPCODE.search(line)] if m
+    )
+
+
+def test_census_helper_positive_control():
+    a = jnp.ones((8, 8))
+    t1 = jax.jit(lambda x: x @ x).lower(a).compile().as_text()
+    t2 = jax.jit(lambda x: jnp.tanh(x @ x)).lower(a).compile().as_text()
+    assert _instruction_census(t1) != _instruction_census(t2)
+
+
+@pytest.mark.slow
+def test_metrics_off_decode_step_hlo_is_identical():
+    """REPRO_METRICS=0 must be provably free: the jitted decode step lowers
+    to the same instruction census with telemetry on and off, because every
+    instrument is host-side Python that runs at trace time only."""
+    from repro.configs import ARCHS
+    from repro.models import api
+
+    cfg = ARCHS["chatglm3-6b"].reduced()
+    params = api.init_params(cfg, jax.random.key(0))
+    tokens = jax.random.randint(jax.random.key(1), (2, 8), 0, cfg.vocab)
+    _, caches = api.prefill(
+        cfg, params, {"tokens": tokens}, max_len=16, cache_dtype=jnp.float32
+    )
+    tok = jnp.zeros((2, 1), jnp.int32)
+    pos = jnp.asarray(8, jnp.int32)
+
+    def lower():
+        step = jax.jit(lambda p, t, c, q: api.decode(cfg, p, t, c, q))
+        return step.lower(params, tok, caches, pos).compile().as_text()
+
+    prev = obs.set_enabled(True)
+    try:
+        on = _instruction_census(lower())
+        obs.set_enabled(False)
+        off = _instruction_census(lower())
+    finally:
+        obs.set_enabled(prev)
+
+    assert sum(on.values()) > 0
+    assert on == off, (
+        "telemetry changed the compiled decode step: "
+        f"on-off={on - off!r} off-on={off - on!r}"
+    )
+    # and with metrics ON the trace recorded host-side counters — proof the
+    # instrumentation ran during the identical-HLO compile
+    assert "gemm.calls" in obs.snapshot()["counters"]
