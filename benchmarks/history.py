@@ -1,0 +1,189 @@
+"""Benchmark trajectory: commit-keyed JSONL history + the regression gate.
+
+``BENCH_*.json`` artifacts are single snapshots — overwrite one and the
+old number is gone, so a perf or numerics regression ships silently. Every
+bench writer therefore *also* appends one flat-metrics row per run to
+``BENCH_history/<name>.jsonl`` (append-only, one JSON object per line,
+stable key order), stamped with the shared :func:`benchmarks.run.bench_meta`
+provenance block (git commit, device kind, jax version).
+
+``repro-stats bench`` (``repro.launch.stats``) diffs two rows with the
+per-metric tolerance table below and exits non-zero on regression — the CI
+gate. Tolerances are direction-aware and honest about noise:
+
+* **deterministic** metrics (tokens/step, occupancy, greedy agreement, KV
+  compression) are wall-clock free — same trace, same value on any
+  machine — and gate tight (5% / 1%);
+* **wall-clock** metrics (GFLOP/s, ttft/itl percentiles) vary with the
+  machine the row was produced on, so the committed-baseline gate allows an
+  order of magnitude before failing: it catches "the kernel got 20x
+  slower" (a real regression always lands far beyond 10x when the tile or
+  dataflow breaks), never "the CI runner is slower than the dev box".
+
+Metrics present in only one row are reported informationally, never fatal
+— benches grow columns.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import fnmatch
+import json
+import os
+from typing import Dict, List, Optional
+
+__all__ = [
+    "HISTORY_DIR",
+    "Tolerance",
+    "DEFAULT_TOLERANCES",
+    "Finding",
+    "append_row",
+    "load_rows",
+    "history_path",
+    "diff_rows",
+]
+
+HISTORY_DIR = "BENCH_history"
+
+
+@dataclasses.dataclass(frozen=True)
+class Tolerance:
+    """Gate rule for metrics matching ``pattern`` (fnmatch).
+
+    ``direction`` says which way is good: ``"higher"`` fails when current <
+    baseline * (1 - allowance), ``"lower"`` fails when current > baseline *
+    (1 + allowance).
+    """
+
+    pattern: str
+    direction: str  # "higher" | "lower"
+    allowance: float
+
+    def limit(self, baseline: float) -> float:
+        if self.direction == "higher":
+            return baseline * (1.0 - self.allowance)
+        return baseline * (1.0 + self.allowance)
+
+    def regressed(self, baseline: float, current: float) -> bool:
+        if self.direction == "higher":
+            return current < self.limit(baseline)
+        return current > self.limit(baseline)
+
+
+# Order matters: first pattern match wins.
+DEFAULT_TOLERANCES: List[Tolerance] = [
+    # deterministic (wall-clock free) — tight
+    Tolerance("*greedy_agreement*", "higher", 0.01),
+    Tolerance("*tokens_per_step*", "higher", 0.05),
+    Tolerance("*occupancy*", "higher", 0.05),
+    Tolerance("*kv_bytes_ratio*", "higher", 0.05),
+    Tolerance("*speedup_tokens_per_step*", "higher", 0.05),
+    # wall-clock — generous (machine-to-machine variance is real)
+    Tolerance("gflops_tuned/*", "higher", 0.9),
+    Tolerance("gflops_heuristic/*", "higher", 0.9),
+    Tolerance("*ttft_p99*", "lower", 9.0),
+    Tolerance("*ttft_p50*", "lower", 9.0),
+    Tolerance("*itl_p99*", "lower", 9.0),
+    Tolerance("*itl_p50*", "lower", 9.0),
+    Tolerance("*tokens_per_sec*", "higher", 0.9),
+]
+
+
+@dataclasses.dataclass
+class Finding:
+    """One metric's verdict from :func:`diff_rows`."""
+
+    metric: str
+    baseline: Optional[float]
+    current: Optional[float]
+    limit: Optional[float]
+    status: str  # "ok" | "regression" | "missing" | "new" | "untracked"
+
+    def row(self) -> str:
+        def f(v):
+            return "null" if v is None else f"{v:.6g}"
+
+        return (f"{self.status:<10} {self.metric:<52} "
+                f"base={f(self.baseline):<12} cur={f(self.current):<12} "
+                f"limit={f(self.limit)}")
+
+
+def history_path(name: str, directory: str = HISTORY_DIR) -> str:
+    return os.path.join(directory, f"{name}.jsonl")
+
+
+def append_row(
+    name: str,
+    metrics: Dict[str, Optional[float]],
+    meta: Dict[str, str],
+    *,
+    directory: str = HISTORY_DIR,
+) -> str:
+    """Append one run's flat metrics row; returns the file path.
+
+    ``metrics`` values are floats or ``None`` (a percentile with no
+    samples). Keys inside each block are sorted so rows diff cleanly.
+    """
+    path = history_path(name, directory)
+    os.makedirs(directory, exist_ok=True)
+    row = {
+        "meta": {k: meta[k] for k in sorted(meta)},
+        "metrics": {k: metrics[k] for k in sorted(metrics)},
+    }
+    with open(path, "a") as f:
+        f.write(json.dumps(row, sort_keys=False) + "\n")
+    return path
+
+
+def load_rows(name: str, directory: str = HISTORY_DIR) -> List[Dict]:
+    path = history_path(name, directory)
+    rows: List[Dict] = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                rows.append(json.loads(line))
+    return rows
+
+
+def _tolerance_for(
+    metric: str, tolerances: List[Tolerance]
+) -> Optional[Tolerance]:
+    for tol in tolerances:
+        if fnmatch.fnmatch(metric, tol.pattern):
+            return tol
+    return None
+
+
+def diff_rows(
+    baseline: Dict,
+    current: Dict,
+    *,
+    tolerances: Optional[List[Tolerance]] = None,
+) -> List[Finding]:
+    """Compare two history rows metric-by-metric.
+
+    Findings cover the union of metric names: ``regression`` only for
+    metrics present (and non-null) in both rows and matched by a tolerance
+    rule; one-sided or unmatched metrics are informational.
+    """
+    tols = tolerances if tolerances is not None else DEFAULT_TOLERANCES
+    base_m = baseline.get("metrics", {})
+    cur_m = current.get("metrics", {})
+    findings: List[Finding] = []
+    for metric in sorted(set(base_m) | set(cur_m)):
+        b, c = base_m.get(metric), cur_m.get(metric)
+        if metric not in cur_m or c is None:
+            findings.append(Finding(metric, b, c, None, "missing"))
+            continue
+        if metric not in base_m or b is None:
+            findings.append(Finding(metric, b, c, None, "new"))
+            continue
+        tol = _tolerance_for(metric, tols)
+        if tol is None:
+            findings.append(Finding(metric, b, c, None, "untracked"))
+            continue
+        limit = tol.limit(float(b))
+        status = "regression" if tol.regressed(float(b), float(c)) else "ok"
+        findings.append(Finding(metric, float(b), float(c), limit, status))
+    return findings

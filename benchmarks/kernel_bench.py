@@ -62,6 +62,13 @@ from repro.tune import (
 )
 from repro.tune.search import median_time_us
 
+try:  # package layout (benchmarks.kernel_bench) vs direct script run
+    from .run import bench_meta
+    from . import history as bench_history
+except ImportError:  # pragma: no cover - script-mode fallback
+    from run import bench_meta
+    import history as bench_history
+
 Row = Tuple[str, float, str]
 
 # (m, k, n) dense and (g, m, k, n) grouped benchmark shape sets.
@@ -256,6 +263,7 @@ def bench_kernels_json(
         )
     return {
         "schema": 1,
+        "meta": bench_meta(),
         "epilogue_probe": list(PROBE_EPILOGUE),
         "device_kind": device_kind(),
         "roofline_reference": TPU_V5E.name,
@@ -291,6 +299,23 @@ def bench_kernel() -> List[Row]:
     return rows
 
 
+def history_metrics(report: Dict[str, object]) -> Dict[str, float]:
+    """Flatten a kernel report into the BENCH_history row schema: one
+    ``gflops_{tuned,heuristic}/<backend>/<family>:<shape>`` entry per row
+    (the regression gate's keys) plus the tuned roofline utilization."""
+    metrics: Dict[str, float] = {}
+    for r in report["rows"]:
+        sid = (
+            (f"{r['g']}x" if r["family"] == "grouped" else "")
+            + f"{r['m']}x{r['k']}x{r['n']}"
+        )
+        key = f"{r['backend']}/{r['family']}:{sid}"
+        metrics[f"gflops_tuned/{key}"] = r["gflops_tuned"]
+        metrics[f"gflops_heuristic/{key}"] = r["gflops_heuristic"]
+        metrics[f"utilization_tuned/{key}"] = r["utilization_tuned"]
+    return metrics
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
@@ -300,6 +325,10 @@ def main() -> None:
     ap.add_argument("--iters", type=int, default=2)
     ap.add_argument("--write-table", action="store_true",
                     help="persist sweep winners into the active tuning table")
+    ap.add_argument("--history-dir", default=bench_history.HISTORY_DIR,
+                    help="append a commit-keyed row here (see history.py)")
+    ap.add_argument("--no-history", action="store_true",
+                    help="skip the BENCH_history append")
     args = ap.parse_args()
     report = bench_kernels_json(
         smoke=args.smoke, top_k=args.top_k, iters=args.iters,
@@ -308,6 +337,12 @@ def main() -> None:
     with open(args.out, "w") as f:
         json.dump(report, f, indent=1, sort_keys=True)
         f.write("\n")
+    if not args.no_history:
+        hp = bench_history.append_row(
+            "kernel", history_metrics(report), report["meta"],
+            directory=args.history_dir,
+        )
+        print(f"history row -> {hp}")
     worst = min(
         (r["gflops_tuned"] / r["gflops_heuristic"] for r in report["rows"]),
         default=1.0,

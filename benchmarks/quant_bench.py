@@ -45,6 +45,13 @@ import json
 import time
 from typing import Dict, List
 
+try:  # package layout (benchmarks.quant_bench) vs direct script run
+    from .run import bench_meta
+    from . import history as bench_history
+except ImportError:  # pragma: no cover - script-mode fallback
+    from run import bench_meta
+    import history as bench_history
+
 
 def trained_model(cfg, *, steps: int, seed: int = 0, seq_len: int = 32):
     """Fit the reduced model on cyclic sequences t[i] = (a + stride*i) % V.
@@ -415,6 +422,21 @@ def bench_serving(cfg, params, *, smoke: bool, seed: int, kv_format: str) -> Dic
     }
 
 
+def history_metrics(result: Dict) -> Dict:
+    """Flatten the quant comparison into the BENCH_history row schema.
+    Deterministic accuracy/compression metrics only — the gemm wall times in
+    this bench run too few reps to gate on."""
+    s = result["serving"]
+    mo = result["moe"]
+    return {
+        "serving.greedy_agreement": s["greedy_agreement"],
+        "serving.kv_bytes_ratio": s["kv_bytes_ratio"],
+        "serving.quant_tokens_per_step": s["quant"]["tokens_per_step"],
+        "moe.greedy_agreement": mo["greedy_agreement"],
+        "policy.loss_abs_delta": result["policy"]["loss_abs_delta"],
+    }
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", default="chatglm3-6b")
@@ -424,6 +446,10 @@ def main() -> None:
     ap.add_argument("--out", default="BENCH_quant.json")
     ap.add_argument("--smoke", action="store_true",
                     help="small trace for CI (still asserts the targets)")
+    ap.add_argument("--history-dir", default=bench_history.HISTORY_DIR,
+                    help="append a commit-keyed row here (see history.py)")
+    ap.add_argument("--no-history", action="store_true",
+                    help="skip the BENCH_history append")
     args = ap.parse_args()
 
     from repro.configs import get_config
@@ -435,6 +461,7 @@ def main() -> None:
     )
 
     result = {
+        "meta": bench_meta(),
         "arch": cfg.name,
         "seed": args.seed,
         "smoke": args.smoke,
@@ -455,6 +482,12 @@ def main() -> None:
     }
     with open(args.out, "w") as f:
         json.dump(result, f, indent=2)
+    if not args.no_history:
+        hist = bench_history.append_row(
+            "quant", history_metrics(result), result["meta"],
+            directory=args.history_dir,
+        )
+        print(f"[quant_bench] history row -> {hist}")
 
     s = result["serving"]
     print(f"[quant_bench] {cfg.name}: trained {args.train_steps} steps "

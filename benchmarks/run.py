@@ -6,8 +6,39 @@ the natural unit otherwise — unit stated in the derived column).
 
 from __future__ import annotations
 
+import subprocess
 import sys
 import traceback
+
+
+def bench_meta() -> dict:
+    """Shared provenance block every BENCH_* writer embeds (and every
+    BENCH_history row carries): which commit, device and jax produced the
+    numbers. Key order is fixed so regenerated artifacts diff cleanly."""
+    try:
+        commit = subprocess.run(
+            ["git", "rev-parse", "HEAD"],
+            capture_output=True, text=True, timeout=10,
+        ).stdout.strip() or "unknown"
+    except Exception:
+        commit = "unknown"
+    try:
+        from repro.tune.table import device_kind
+
+        device = device_kind()
+    except Exception:
+        device = "unknown"
+    try:
+        import jax
+
+        jax_version = jax.__version__
+    except Exception:
+        jax_version = "unknown"
+    return {
+        "git_commit": commit,
+        "device_kind": device,
+        "jax_version": jax_version,
+    }
 
 
 def main() -> None:

@@ -27,6 +27,13 @@ from typing import Dict, List
 
 import numpy as np
 
+try:  # package layout (benchmarks.serving_bench) vs direct script run
+    from .run import bench_meta
+    from . import history as bench_history
+except ImportError:  # pragma: no cover - script-mode fallback
+    from run import bench_meta
+    import history as bench_history
+
 
 def run_static(engine, requests, n_slots: int) -> Dict:
     """FIFO groups of ``n_slots`` through one lockstep ``ServeEngine``.
@@ -157,6 +164,7 @@ def bench_serving(
     static = run_static(static_eng, trace, n_slots)
     continuous = run_continuous(cont_eng, trace)
     return {
+        "meta": bench_meta(),
         "arch": cfg.name,
         "n_requests": n_requests,
         "n_slots": n_slots,
@@ -170,6 +178,28 @@ def bench_serving(
     }
 
 
+def history_metrics(result: Dict) -> Dict:
+    """Flatten a serving comparison into the BENCH_history row schema.
+    Percentiles may be None (no samples) — history keeps the null."""
+    c = result["continuous"]
+    return {
+        "continuous.tokens_per_step": c["tokens_per_step"],
+        "continuous.tokens_per_sec": c["tokens_per_sec"],
+        "continuous.mean_occupancy": c["mean_occupancy"],
+        "continuous.ttft_p50": c["ttft_p50"],
+        "continuous.ttft_p99": c["ttft_p99"],
+        "continuous.itl_p50": c["itl_p50"],
+        "continuous.itl_p99": c["itl_p99"],
+        "speedup_tokens_per_step": result["speedup_tokens_per_step"],
+        "occupancy_gain": result["occupancy_gain"],
+    }
+
+
+def _ms(v) -> str:
+    """None-safe ms rendering: an empty trace has no percentile, not 0 ms."""
+    return "n/a" if v is None else f"{v * 1e3:.2f}"
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", default="chatglm3-6b")
@@ -180,6 +210,10 @@ def main() -> None:
     ap.add_argument("--out", default="BENCH_serving.json")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny trace for CI (still asserts the win)")
+    ap.add_argument("--history-dir", default=bench_history.HISTORY_DIR,
+                    help="append a commit-keyed row here (see history.py)")
+    ap.add_argument("--no-history", action="store_true",
+                    help="skip the BENCH_history append")
     args = ap.parse_args()
 
     kw = {}
@@ -196,6 +230,12 @@ def main() -> None:
     )
     with open(args.out, "w") as f:
         json.dump(result, f, indent=2)
+    if not args.no_history:
+        hist = bench_history.append_row(
+            "serving", history_metrics(result), result["meta"],
+            directory=args.history_dir,
+        )
+        print(f"[serving_bench] history row -> {hist}")
 
     s, c = result["static"], result["continuous"]
     print(f"[serving_bench] {result['arch']}: {result['n_requests']} requests, "
@@ -204,9 +244,9 @@ def main() -> None:
         print(f"  {row['engine']:<11} {row['tokens_per_sec']:8.1f} tok/s  "
               f"{row['tokens_per_step']:5.2f} tok/step  "
               f"occupancy {row['mean_occupancy']:.3f}")
-    print(f"  continuous latency: ttft p50/p99 {c['ttft_p50'] * 1e3:.1f}/"
-          f"{c['ttft_p99'] * 1e3:.1f} ms, itl p50/p99 {c['itl_p50'] * 1e3:.2f}/"
-          f"{c['itl_p99'] * 1e3:.2f} ms")
+    print(f"  continuous latency: ttft p50/p99 {_ms(c['ttft_p50'])}/"
+          f"{_ms(c['ttft_p99'])} ms, itl p50/p99 {_ms(c['itl_p50'])}/"
+          f"{_ms(c['itl_p99'])} ms")
     print(f"  continuous/static: {result['speedup_tokens_per_sec']:.2f}x wall, "
           f"{result['speedup_tokens_per_step']:.2f}x per-step, "
           f"+{result['occupancy_gain']:.3f} occupancy -> {args.out}")

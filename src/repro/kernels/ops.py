@@ -121,6 +121,7 @@ __all__ = [
     "tile_cache_stats",
     "reset_tile_cache_stats",
     "on_miss_streak",
+    "on_util_gap",
     "clear_tile_cache",
     "capture_shapes",
 ]
@@ -465,6 +466,89 @@ def _note_tile_lookup(missed: bool, key: TileKey) -> None:
                 pass
 
 
+# The drift sibling of the miss-streak seam (ROADMAP item 4): on_miss_streak
+# sees shapes the tuning table MISSES; on_util_gap sees shapes the table
+# COVERS whose live roofline fraction (obs.attr attribution) keeps landing
+# below a threshold — a tuned entry gone stale (new jax version, different
+# device, workload drift). Same contract: fires at streak multiples,
+# exceptions swallowed, None restores the default repro.tune hook.
+_UTIL_GAP_HOOK: Dict[str, object] = {"fn": None, "threshold": 0.5, "streak": 4}
+_UTIL_STREAKS: Dict[TileKey, int] = {}
+
+
+def on_util_gap(
+    callback: Optional[Callable[[TileKey, int, float], None]] = None,
+    *,
+    threshold: float = 0.5,
+    streak: int = 4,
+) -> None:
+    """Register the tuned-but-underperforming callback (the drift-retune seam).
+
+    Fed by :func:`repro.obs.attr.observe_step`: every attributed execution
+    of a *tuned* GEMM class scores a roofline fraction; when a key's
+    fraction falls below ``threshold`` x its own best observed fraction for
+    ``streak`` consecutive observations, ``callback(key, streak_len,
+    fraction)`` fires (and again at every further multiple while the gap
+    persists). Relative-to-own-best, not absolute: a CPU run scores ~1e-4
+    of the TPU-v5e roofline while being perfectly healthy — drift is a
+    shape performing worse than *itself*, which is exactly the signature of
+    a stale tuning-table entry. ``callback=None`` restores the default hook
+    (``repro.tune.retune.retune_candidate(..., reason="util_gap")``: count +
+    log, never retune implicitly). Exceptions in the callback are swallowed.
+    Heuristic-tiled observations reset the streak only — an untuned shape is
+    the miss-streak seam's business, not this one's.
+    """
+    if not (0.0 < threshold <= 1.0):
+        raise ValueError("util-gap threshold must be in (0, 1]")
+    if streak < 1:
+        raise ValueError("util-gap streak must be >= 1")
+    _UTIL_GAP_HOOK["fn"] = callback
+    _UTIL_GAP_HOOK["threshold"] = float(threshold)
+    _UTIL_GAP_HOOK["streak"] = int(streak)
+
+
+def _default_util_gap(key: TileKey, streak: int, fraction: float) -> None:
+    try:
+        from repro.tune.retune import retune_candidate
+    except Exception:
+        return
+    retune_candidate(key, streak, reason="util_gap")
+
+
+# Best roofline fraction ever observed per tuned key: the self-relative
+# baseline the gap test compares against.
+_UTIL_BEST: Dict[TileKey, float] = {}
+
+
+def _note_util_observation(key: TileKey, fraction: float, source: str) -> None:
+    """One attributed utilization observation for ``key`` (obs.attr calls
+    this). Only tuned tiles advance the gap streak."""
+    if source != "tuned":
+        _UTIL_STREAKS.pop(key, None)
+        return
+    with _TILE_STATS_LOCK:
+        best = _UTIL_BEST.get(key, 0.0)
+        if fraction > best:
+            _UTIL_BEST[key] = fraction
+            best = fraction
+        thr = float(_UTIL_GAP_HOOK["threshold"])  # type: ignore[arg-type]
+        if best > 0.0 and fraction < thr * best:
+            streak = _UTIL_STREAKS.get(key, 0) + 1
+            _UTIL_STREAKS[key] = streak
+        else:
+            _UTIL_STREAKS.pop(key, None)
+            return
+    if _obs.enabled():
+        _obs.counter("gemm.util_gap_observations").inc()
+    need = int(_UTIL_GAP_HOOK["streak"])  # type: ignore[arg-type]
+    if streak >= need and streak % need == 0:
+        fn = _UTIL_GAP_HOOK["fn"] or _default_util_gap
+        try:
+            fn(key, streak, fraction)  # type: ignore[operator]
+        except Exception:
+            pass
+
+
 class _TileResolver:
     """The memoized block-shape resolver behind ``ops._tile_for``.
 
@@ -557,6 +641,8 @@ def reset_tile_cache_stats() -> None:
         _TILE_STATS["hits"] = 0
         _TILE_STATS["misses"] = 0
         _TILE_STATS["streak"] = 0
+        _UTIL_STREAKS.clear()
+        _UTIL_BEST.clear()
 
 
 def clear_tile_cache() -> None:
@@ -740,15 +826,18 @@ def _record_shape(family: str, m: int, k: int, n: int, g: int, dtype) -> None:
 
 def _note_gemm_call(
     shape_family: str, backend: str, m: int, k: int, n: int, groups: int,
-    dtype,
+    dtype, b_dtype=None, out_dtype=None,
 ) -> None:
     """Count one GEMM entry-point call into ``gemm.calls``.
 
     Labels carry the resolved backend, its numerics family, the shape
     family (dense/grouped) and — the introspection the autotuner feeds on —
     whether the tile and the fusion verdict came from the tuned table or
-    the heuristic/default. Host-side only: inside ``jit`` this runs once at
-    trace time, never per step."""
+    the heuristic/default. When an :class:`repro.obs.attr.capture_gemms`
+    bracket is active, the same facts (plus the actual operand dtypes, for
+    honest byte accounting) are appended as a :class:`GemmRecord` so a timed
+    span owner can attribute its measured step time. Host-side only: inside
+    ``jit`` this runs once at trace time, never per step."""
     if not _obs.enabled():
         return
     b = _REGISTRY.get(backend)
@@ -774,6 +863,45 @@ def _note_gemm_call(
         tile=tile,
         fusion=fusion,
     ).inc()
+    if _obs.attr.capturing():
+        _obs.attr.record_call(_obs.attr.GemmRecord(
+            shape_family=shape_family,
+            backend=backend,
+            family=b.family if b is not None else "?",
+            m=int(m), k=int(k), n=int(n), g=int(groups),
+            a_dtype=jnp.dtype(dtype).name,
+            b_dtype=jnp.dtype(b_dtype if b_dtype is not None else dtype).name,
+            out_dtype=jnp.dtype(
+                out_dtype if out_dtype is not None else dtype
+            ).name,
+            tile_source=tile,
+            tile_key=(
+                backend, shape_family, int(m), int(k), int(n), int(groups),
+                _tile_itemsize(backend, dtype),
+            ),
+        ))
+
+
+def _maybe_audit_gemm(kind, backend, out, ref_fn, m, k, n, g=0):
+    """Shadow-audit hook for quantized-family entry-point calls.
+
+    Cheap rejections first (fp family, tracer output, metrics off) so the
+    non-audited hot path pays a couple of host-side branches; the sampling
+    gate itself lives in :mod:`repro.obs.audit`. Runs only on concrete
+    outputs — inside ``jit`` the output is a tracer and the call is a no-op,
+    which is what keeps the compiled HLO bit-identical with auditing on or
+    off (the PR 7 zero-cost contract)."""
+    if not _obs.enabled():
+        return
+    fam = family_of(backend)
+    if fam == "fp":
+        return
+    if isinstance(out, jax.core.Tracer):
+        return
+    _obs.audit.maybe_audit_gemm(
+        kind=kind, backend=backend, family=fam, out=out, ref_fn=ref_fn,
+        m=int(m), k=int(k), n=int(n), g=int(g),
+    )
 
 
 def _note_degradation(
@@ -1086,7 +1214,10 @@ def matmul(
     for d in batch_shape:
         m *= d
     _record_shape("dense", m, arr.shape[-1], b.shape[-1], 0, arr.dtype)
-    _note_gemm_call("dense", backend, m, arr.shape[-1], b.shape[-1], 0, arr.dtype)
+    _note_gemm_call(
+        "dense", backend, m, arr.shape[-1], b.shape[-1], 0, arr.dtype,
+        b_dtype=b.dtype, out_dtype=out_dtype,
+    )
     n = b.shape[-1]
     steps, raw_ops = _epi.normalize_epilogue(epilogue)
     if steps and c is not None:
@@ -1117,12 +1248,23 @@ def matmul(
     if steps:
         ep_ops = _epi.canonicalize_operands(steps, raw_ops, n=n, m=m)
         out = _matmul_ep(a2, b, ep_ops, backend, out_dtype, steps)
+        ref = lambda: _matmul_impl(  # noqa: E731
+            a2, b, None, grad_backend_of(backend), out_dtype, steps, ep_ops)
     elif c is None:
         out = _matmul_nc(a2, b, backend, out_dtype)
+        ref = lambda: _matmul_impl(  # noqa: E731
+            a2, b, None, grad_backend_of(backend), out_dtype)
     elif c.ndim == 1:
         out = _matmul_bias(a2, b, c, backend, out_dtype)
+        bias = c
+        ref = lambda: _matmul_impl(  # noqa: E731
+            a2, b, bias, grad_backend_of(backend), out_dtype)
     else:
-        out = _matmul(a2, b, c.reshape(m, n), backend, out_dtype)
+        c2 = c.reshape(m, n)
+        out = _matmul(a2, b, c2, backend, out_dtype)
+        ref = lambda: _matmul_impl(  # noqa: E731
+            a2, b, c2, grad_backend_of(backend), out_dtype)
+    _maybe_audit_gemm("dense", backend, out, ref, m, arr.shape[-1], n)
     return out.reshape(*batch_shape, n)
 
 
@@ -1377,7 +1519,7 @@ def grouped_matmul(
     )
     _note_gemm_call(
         "grouped", backend, a.shape[1], a.shape[2], b.shape[2], a.shape[0],
-        a.dtype,
+        a.dtype, b_dtype=b.dtype, out_dtype=out_dtype,
     )
     steps, raw_ops = _epi.normalize_epilogue(epilogue)
     if steps:
@@ -1389,9 +1531,25 @@ def grouped_matmul(
         ep_ops = _epi.canonicalize_operands(
             steps, raw_ops, n=b.shape[2], m=a.shape[1], groups=a.shape[0]
         )
-        return _grouped_ep(a, b, ep_ops, backend, out_dtype, steps)
-    if c is None:
-        return _grouped_nc(a, b, backend, out_dtype)
-    if c.ndim == 2:
-        return _grouped_bias(a, b, c, backend, out_dtype)
-    return _grouped_c(a, b, c, backend, out_dtype)
+        out = _grouped_ep(a, b, ep_ops, backend, out_dtype, steps)
+        ref = lambda: _grouped_impl(  # noqa: E731
+            a, b, None,
+            resolve_grouped_backend(grad_backend_of(backend)), out_dtype,
+            steps, ep_ops)
+    elif c is None:
+        out = _grouped_nc(a, b, backend, out_dtype)
+        ref = lambda: _grouped_impl(  # noqa: E731
+            a, b, None,
+            resolve_grouped_backend(grad_backend_of(backend)), out_dtype)
+    else:
+        out = (_grouped_bias if c.ndim == 2 else _grouped_c)(
+            a, b, c, backend, out_dtype)
+        ref = lambda: _grouped_impl(  # noqa: E731
+            a, b, c,
+            resolve_grouped_backend(grad_backend_of(backend)), out_dtype)
+    if not hasattr(a, "q"):  # pre-quantized A has no fp twin to audit against
+        _maybe_audit_gemm(
+            "grouped", backend, out, ref,
+            a.shape[1], a.shape[2], b.shape[2], g=a.shape[0],
+        )
+    return out

@@ -22,6 +22,12 @@ Examples::
     # run the serving driver here, then report (optionally with a profile)
     repro-stats serve --profile /tmp/trace -- --arch chatglm3-6b --reduced
     repro-stats train -- --arch chatglm3-6b --reduced --steps 20
+
+    # rank GEMM shape buckets by attributed device time + utilization gap
+    repro-stats top --file snap.json -n 10
+
+    # diff the latest BENCH_history rows against the committed baseline
+    repro-stats bench --dir BENCH_history --baseline first --current last
 """
 
 from __future__ import annotations
@@ -35,6 +41,12 @@ from typing import Dict, List, Optional
 from repro import obs
 
 __all__ = ["main"]
+
+
+def _fmt(v, width: int = 0) -> str:
+    """``None``-safe number rendering ("n/a": no data is not a zero)."""
+    s = "n/a" if v is None else f"{v:.4g}"
+    return s.rjust(width) if width else s
 
 
 def _print_snapshot(snap: Dict, *, prom: bool = False, as_json: bool = False,
@@ -70,10 +82,18 @@ def _print_snapshot(snap: Dict, *, prom: bool = False, as_json: bool = False,
         for name, fam in hists.items():
             for labels, h in fam.items():
                 tag = f"{{{labels}}}" if labels else ""
+                # Percentiles are None on an empty histogram, and only a
+                # trailing window once the sample reservoir has evicted
+                # (snapshot's percentile_mode) — say so instead of printing
+                # a confident exact-looking number.
+                win = ""
+                if h.get("percentile_mode") == "windowed":
+                    dropped = h.get("samples_dropped", 0)
+                    win = f" [windowed: {dropped} dropped]"
                 print(
                     f"  {name}{tag}: n={h['count']} mean={h['mean']:.6g} "
-                    f"p50={h['p50']:.6g} p99={h['p99']:.6g} "
-                    f"min={h['min']:.6g} max={h['max']:.6g}",
+                    f"p50={_fmt(h['p50'])} p99={_fmt(h['p99'])} "
+                    f"min={h['min']:.6g} max={h['max']:.6g}{win}",
                     file=out,
                 )
 
@@ -108,6 +128,136 @@ def _cmd_tail(args) -> None:
         events = [e for e in events if e.get("kind") == args.kind]
     for e in events[-args.n:]:
         print(json.dumps(e, default=str))
+
+
+def _cmd_top(args) -> None:
+    """Rank GEMM shape buckets by attributed device time + utilization gap.
+
+    Joins the ``gemm.device_seconds`` counters with the
+    ``gemm.roofline_fraction`` histograms (both written by
+    ``repro.obs.attr`` during any timed serving/bench run) on their shared
+    label set. The gap column is ``1 - mean fraction``: how far the bucket
+    runs below the roofline bound it was costed against.
+    """
+    snap = _load_snapshot(args.file)
+    device_s = snap.get("counters", {}).get("gemm.device_seconds", {})
+    fractions = snap.get("histograms", {}).get("gemm.roofline_fraction", {})
+    if not device_s:
+        print("no utilization attribution recorded (gemm.device_seconds is "
+              "empty) — run a serving/bench workload with REPRO_METRICS=1")
+        return
+    rows = []
+    for labels, seconds in device_s.items():
+        parts = dict(p.split("=", 1) for p in labels.split(",") if "=" in p)
+        h = fractions.get(labels, {})
+        rows.append({
+            "bucket": parts.get("bucket", "?"),
+            "backend": parts.get("backend", "?"),
+            "tile": parts.get("tile", "?"),
+            "seconds": seconds,
+            "steps": h.get("count", 0),
+            "frac_mean": h.get("mean"),
+            "frac_p50": h.get("p50"),
+            "windowed": h.get("percentile_mode") == "windowed",
+        })
+    rows.sort(key=lambda r: r["seconds"], reverse=True)
+    print(f"{'bucket':<34} {'backend':<20} {'tile':<10} "
+          f"{'device_s':>9} {'steps':>6} {'util p50':>9} {'gap':>7}")
+    for r in rows[: args.n]:
+        gap = None if r["frac_mean"] is None else 1.0 - r["frac_mean"]
+        star = "~" if r["windowed"] else ""
+        print(f"{r['bucket']:<34} {r['backend']:<20} {r['tile']:<10} "
+              f"{r['seconds']:>9.4f} {r['steps']:>6} "
+              f"{_fmt(r['frac_p50'], 9)}{star} {_fmt(gap, 7)}")
+
+
+def _history_module():
+    """Import ``benchmarks.history`` (repo-root layout; the history gate is
+    a development/CI artifact, not an installed-package feature)."""
+    try:
+        from benchmarks import history
+        return history
+    except ImportError:
+        import os
+
+        root = os.path.abspath(
+            os.path.join(os.path.dirname(__file__), "..", "..", "..")
+        )
+        sys.path.insert(0, root)
+        try:
+            from benchmarks import history
+            return history
+        finally:
+            sys.path.remove(root)
+
+
+def _pick_row(rows: List[Dict], sel: str, path: str) -> Dict:
+    if sel == "first":
+        return rows[0]
+    if sel == "last":
+        return rows[-1]
+    try:
+        return rows[int(sel)]
+    except ValueError:
+        pass
+    for row in reversed(rows):  # newest row for the commit
+        if row.get("meta", {}).get("git_commit", "").startswith(sel):
+            return row
+    raise SystemExit(f"no row matching {sel!r} in {path}")
+
+
+def _cmd_bench(args) -> None:
+    """Diff BENCH_history rows (the perf-regression gate). Exit 1 on any
+    regression unless ``--warn-only``."""
+    import glob
+    import os
+
+    hist = _history_module()
+    if args.name:
+        names = [args.name]
+    else:
+        names = sorted(
+            os.path.splitext(os.path.basename(p))[0]
+            for p in glob.glob(os.path.join(args.dir, "*.jsonl"))
+        )
+        if not names:
+            raise SystemExit(f"no history files under {args.dir}")
+    regressions = 0
+    for name in names:
+        path = hist.history_path(name, args.dir)
+        try:
+            rows = hist.load_rows(name, args.dir)
+        except FileNotFoundError:
+            raise SystemExit(f"no history at {path}")
+        if not rows:
+            raise SystemExit(f"empty history at {path}")
+        baseline = _pick_row(rows, args.baseline, path)
+        if args.current_file:
+            with open(args.current_file) as f:
+                current = json.load(f)
+        else:
+            current = _pick_row(rows, args.current, path)
+        findings = hist.diff_rows(baseline, current)
+        bad = [f for f in findings if f.status == "regression"]
+        regressions += len(bad)
+        b_meta = baseline.get("meta", {})
+        c_meta = current.get("meta", {})
+        print(f"{name}: baseline {b_meta.get('git_commit', '?')[:12]} "
+              f"({b_meta.get('device_kind', '?')}, "
+              f"jax {b_meta.get('jax_version', '?')}) vs current "
+              f"{c_meta.get('git_commit', '?')[:12]} "
+              f"({c_meta.get('device_kind', '?')}, "
+              f"jax {c_meta.get('jax_version', '?')})")
+        shown = findings if args.verbose else [
+            f for f in findings if f.status != "ok"
+        ]
+        for f in shown:
+            print("  " + f.row())
+        ok = sum(1 for f in findings if f.status == "ok")
+        print(f"  {ok} ok, {len(bad)} regression(s), "
+              f"{len(findings) - ok - len(bad)} informational")
+    if regressions and not args.warn_only:
+        raise SystemExit(1)
 
 
 @contextlib.contextmanager
@@ -192,6 +342,37 @@ def main(argv: Optional[List[str]] = None) -> None:
     tp.add_argument("-n", type=int, default=20, help="number of events")
     tp.add_argument("--kind", default=None, help="filter by event kind")
     tp.set_defaults(fn=_cmd_tail)
+
+    op = sub.add_parser(
+        "top",
+        help="rank GEMM shape buckets by attributed device time and "
+             "utilization gap (obs.attr)",
+    )
+    op.add_argument("--file", default=None,
+                    help="snapshot JSON (default: live registry)")
+    op.add_argument("-n", type=int, default=15, help="rows to show")
+    op.set_defaults(fn=_cmd_top)
+
+    bp = sub.add_parser(
+        "bench",
+        help="diff BENCH_history rows with per-metric tolerances "
+             "(the perf-regression gate; exit 1 on regression)",
+    )
+    bp.add_argument("--dir", default="BENCH_history",
+                    help="history directory (default: BENCH_history)")
+    bp.add_argument("--name", default=None,
+                    help="one history file (default: every *.jsonl in --dir)")
+    bp.add_argument("--baseline", default="first",
+                    help="baseline row: first|last|<index>|<commit-prefix>")
+    bp.add_argument("--current", default="last",
+                    help="current row: first|last|<index>|<commit-prefix>")
+    bp.add_argument("--current-file", default=None,
+                    help="read the current row from a JSON file instead")
+    bp.add_argument("--warn-only", action="store_true",
+                    help="report regressions but exit 0")
+    bp.add_argument("--verbose", action="store_true",
+                    help="also print metrics that passed")
+    bp.set_defaults(fn=_cmd_bench)
 
     for name, fn in (("serve", _cmd_serve), ("train", _cmd_train)):
         dp = sub.add_parser(

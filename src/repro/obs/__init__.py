@@ -16,6 +16,15 @@ own numbers. This package is the one place runtime observability lives:
 * :mod:`~repro.obs.logging` — structured launch-script logging
   (``REPRO_LOG=text|json``) and the JSONL event log (``REPRO_EVENTS``,
   ``repro-stats tail``) the train loop's per-step records flow through.
+* :mod:`~repro.obs.attr` — live utilization attribution: captured GEMM
+  workloads costed with :mod:`repro.core.roofline`, measured step time
+  attributed per shape bucket (``gemm.achieved_gflops`` /
+  ``gemm.roofline_fraction``; ``repro-stats top``), feeding the
+  ``ops.on_util_gap`` drift-retune seam.
+* :mod:`~repro.obs.audit` — shadow numerics auditor: ``REPRO_AUDIT=N``
+  samples quantized-family GEMMs for fp re-execution on the
+  ``grad_backend`` (``numerics.abs_err``/``rel_err``, NaN/Inf sentinels,
+  ``numerics_drift`` events against per-family policies).
 
 Instrumented layers: ``kernels.ops`` (per-call GEMM counters by
 backend/family/tile/fusion source, degradation events, tile-cache hit/miss
@@ -25,6 +34,7 @@ backend/family/tile/fusion source, degradation events, tile-cache hit/miss
 CLI (``repro.launch.stats``) surfaces all of it.
 """
 
+from . import attr, audit
 from .logging import (
     Logger,
     clear_events,
@@ -56,6 +66,8 @@ from .metrics import (
 from .spans import span
 
 __all__ = [
+    "attr",
+    "audit",
     "Counter",
     "Gauge",
     "Histogram",

@@ -90,14 +90,15 @@ def set_enabled(flag: bool) -> bool:
     return prev
 
 
-def percentile(values: Sequence[float], q: float) -> float:
+def percentile(values: Sequence[float], q: float) -> Optional[float]:
     """Exact linear-interpolated percentile of ``values`` (q in [0, 100]).
 
-    Returns 0.0 for an empty sequence — serving reports render percentiles
-    unconditionally and an empty trace must not raise.
+    Returns ``None`` for an empty sequence — "no data" and "zero latency"
+    are different facts, and conflating them once poisoned a serving
+    report. Consumers serialize it as JSON ``null``.
     """
     if not values:
-        return 0.0
+        return None
     xs = sorted(values)
     if len(xs) == 1:
         return float(xs[0])
@@ -200,13 +201,25 @@ class Histogram:
             self.max = max(self.max, v)
             self._samples.append(v)
 
-    def percentile(self, q: float) -> float:
+    def percentile(self, q: float) -> Optional[float]:
         with self._lock:
             return percentile(list(self._samples), q)
 
     @property
     def mean(self) -> float:
         return self.sum / self.count if self.count else 0.0
+
+    @property
+    def samples_seen(self) -> int:
+        """Total observations, whether or not still in the reservoir."""
+        return self.count
+
+    @property
+    def samples_dropped(self) -> int:
+        """Observations evicted from the reservoir: >0 means percentiles are
+        computed over a trailing window, not the full history."""
+        with self._lock:
+            return self.count - len(self._samples)
 
 
 class _NullInstrument:
@@ -226,13 +239,15 @@ class _NullInstrument:
     def observe(self, v: float) -> None:
         pass
 
-    def percentile(self, q: float) -> float:
-        return 0.0
+    def percentile(self, q: float) -> Optional[float]:
+        return None
 
     value = 0.0
     count = 0
     sum = 0.0
     mean = 0.0
+    samples_seen = 0
+    samples_dropped = 0
 
 
 _NULL = _NullInstrument()
@@ -301,7 +316,14 @@ class Registry:
              "gauges":     {name: {label_str: value}},
              "histograms": {name: {label_str: {count, sum, mean, min, max,
                                                p50, p90, p99,
+                                               samples_seen, samples_dropped,
+                                               percentile_mode,
                                                buckets: {le: cumulative}}}}}
+
+        Percentiles are ``None`` when the histogram is empty. Once the
+        bounded reservoir evicts old samples, they cover a trailing window
+        only — ``percentile_mode`` says ``"exact"`` vs ``"windowed"`` so
+        readers (``repro-stats``) can tag them honestly.
         """
         with self._lock:
             counters = {
@@ -334,6 +356,7 @@ class Registry:
                     cumulative += c
                     buckets[repr(edge)] = cumulative
                 buckets["+Inf"] = h.count
+                dropped = h.samples_dropped
                 fam_out[_label_str(k)] = {
                     "count": h.count,
                     "sum": h.sum,
@@ -343,6 +366,9 @@ class Registry:
                     "p50": h.percentile(50),
                     "p90": h.percentile(90),
                     "p99": h.percentile(99),
+                    "samples_seen": h.samples_seen,
+                    "samples_dropped": dropped,
+                    "percentile_mode": "windowed" if dropped else "exact",
                     "buckets": buckets,
                 }
             out["histograms"][name] = fam_out

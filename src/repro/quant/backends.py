@@ -42,6 +42,7 @@ import jax.lax as lax
 import jax.numpy as jnp
 
 from repro.kernels import ops
+from repro.obs import audit
 
 from .pallas_q8 import opope_gemm_q8, opope_gemm_q8_grouped, q8_block_shape
 from .quantize import quantize
@@ -232,6 +233,12 @@ def register_quant_backends() -> None:
         tile_fn=q8_block_shape,
         epilogue_fused=True,
     )
+    # Shadow-audit drift policy for the family (obs.audit, REPRO_AUDIT=N):
+    # per-row/per-channel int8 keeps max error within a few quantization
+    # steps of the reference's max magnitude — well under 5% on any real
+    # activation/weight distribution. Breaching it means a wrong scale, an
+    # overflow, or a kernel bug, not ordinary quantization noise.
+    audit.set_policy("q8", rel_err=0.05)
 
 
 register_quant_backends()

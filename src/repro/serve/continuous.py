@@ -36,6 +36,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import obs as _obs
+from repro.obs import attr as _attr
 from repro.configs.base import ArchConfig
 from repro.models import api as model_api
 
@@ -57,17 +58,19 @@ class ServingReport:
     mean_occupancy: float  # mean active-slot fraction per decode step
     wall_time_s: float
     kv_bytes_per_slot: float = 0.0  # K/V pool bytes per slot (+ quant scales)
-    # Host-observed latency percentiles (seconds). TTFT = wall clock from the
+    # Host-observed latency percentiles (seconds), or ``None`` when the run
+    # produced no samples — "no data" must never masquerade as "zero
+    # latency" (JSON renders it as null). TTFT = wall clock from the
     # request's arrival tick to its first token (sampled from prefill logits
     # at join, so queueing + prefill dominate); ITL = wall clock between a
     # lane's consecutive tokens. On the deferred-detokenization path (no EOS,
     # no streaming callback) decode dispatches are async, so ITL measures
     # host dispatch cadence, not device step latency — the sync path (EOS or
     # ``on_token``) measures true token-to-token wall time.
-    ttft_p50: float = 0.0
-    ttft_p99: float = 0.0
-    itl_p50: float = 0.0
-    itl_p99: float = 0.0
+    ttft_p50: Optional[float] = None
+    ttft_p99: Optional[float] = None
+    itl_p50: Optional[float] = None
+    itl_p99: Optional[float] = None
 
     @property
     def tokens_per_sec(self) -> float:
@@ -145,6 +148,12 @@ class ContinuousEngine:
 
         self._prefill = _prefill
         self._decode = _decode
+        # Utilization-attribution state (obs.attr): the GEMM workload of each
+        # compiled step, captured once at trace time, then charged with every
+        # subsequent dispatch's measured wall time. Keyed per compiled
+        # program: one decode step; prefills per (rows, bucket).
+        self._decode_workload = None
+        self._prefill_workloads: Dict[tuple, dict] = {}
 
     # -- introspection -----------------------------------------------------
 
@@ -279,9 +288,15 @@ class ContinuousEngine:
                 key, sub = jax.random.split(key)
             else:
                 sub = key
-            tok, pool.caches, pos = self._decode(
-                self.params, pool.caches, tok, pos, active_dev, sub
-            )
+            with _attr.capture_gemms() as step_recs:
+                tok, pool.caches, pos = self._decode(
+                    self.params, pool.caches, tok, pos, active_dev, sub
+                )
+            if step_recs:
+                # This dispatch traced (records only appear at trace time):
+                # remember the step's GEMM workload, but skip attributing
+                # this tick — its wall bracket includes trace + compile.
+                self._decode_workload = _attr.aggregate(step_recs)
             decode_steps += 1
             occupancy_acc += n_live / self.n_slots
             step += 1
@@ -319,6 +334,10 @@ class ContinuousEngine:
             # inter-token gap, queue/occupancy gauges.
             now = wall()
             _obs.histogram("serve.step_seconds").observe(now - t_step)
+            if not step_recs and self._decode_workload:
+                # Same host-wall caveat as ITL: on the deferred path this is
+                # dispatch cadence, on the sync path token-to-token time.
+                _attr.observe_step(self._decode_workload, now - t_step)
             for rid in live_rids:
                 prev = last_tok_wall.get(rid)
                 if prev is not None:
@@ -403,9 +422,17 @@ class ContinuousEngine:
             tokens[len(batch):] = tokens[0]
             lengths[len(batch):] = lengths[0]
 
-        logits, caches = self._prefill(
-            self.params, jnp.asarray(tokens), jnp.asarray(lengths)
-        )
+        t_pf = time.perf_counter()
+        with _attr.capture_gemms() as pf_recs:
+            logits, caches = self._prefill(
+                self.params, jnp.asarray(tokens), jnp.asarray(lengths)
+            )
+        if pf_recs:
+            self._prefill_workloads[(rows, lb)] = _attr.aggregate(pf_recs)
+        else:
+            wl = self._prefill_workloads.get((rows, lb))
+            if wl:
+                _attr.observe_step(wl, time.perf_counter() - t_pf)
         first = sample_token(logits, key, self.temperature)
 
         slots = pool.allocate([r.rid for r in batch])

@@ -1,20 +1,29 @@
-"""The auto-retune seam: what a sustained tile-cache miss streak triggers.
+"""The auto-retune seam: what the registry's drift detectors trigger.
 
-``kernels.ops.on_miss_streak`` fires when a long-lived process keeps
-resolving tile shapes the memo (and, usually, the tuning table) has never
-seen — the signature of a workload the last ``repro-tune`` run did not
-cover. The default hook deliberately does **not** retune: an in-process
-search would steal device time from the serving loop it is trying to help.
-It records the candidate — a ``tune.retune_candidates`` counter labelled by
-shape family and backend, plus a ``retune_candidate`` event carrying the
-full shape key — so an operator (or a future background tuner, ROADMAP
-item 4) can run ``repro-tune`` offline against exactly the shapes that
-were missing.
+Two sibling hooks in ``kernels.ops`` route here by default:
+
+* ``on_miss_streak`` — a long-lived process keeps resolving tile shapes the
+  memo (and, usually, the tuning table) has never seen: the signature of a
+  workload the last ``repro-tune`` run did not cover (``reason:
+  "miss_streak"``).
+* ``on_util_gap`` — a shape the table *does* cover keeps scoring a live
+  roofline fraction (``repro.obs.attr``) well below its own best: the
+  signature of a tuned entry gone stale (``reason: "util_gap"``).
+
+The default hook deliberately does **not** retune: an in-process search
+would steal device time from the serving loop it is trying to help. It
+records the candidate — a ``tune.retune_candidates`` counter labelled by
+shape family, backend and reason, plus a ``retune_candidate`` event
+carrying the full shape key — so an operator (or a future background
+tuner, ROADMAP item 4) can run ``repro-tune`` offline against exactly the
+shapes that need it.
 
 Processes that *want* an active policy register their own callback::
 
     from repro.kernels import ops
     ops.on_miss_streak(lambda key, streak: my_queue.put(key), threshold=16)
+    ops.on_util_gap(lambda key, streak, frac: my_queue.put(key),
+                    threshold=0.5, streak=8)
 """
 
 from __future__ import annotations
@@ -29,7 +38,8 @@ __all__ = ["retune_candidate"]
 Key = Tuple[Optional[str], str, int, int, int, int, int]
 
 
-def retune_candidate(key: Key, streak: int) -> None:
+def retune_candidate(key: Key, streak: int, *,
+                     reason: str = "miss_streak") -> None:
     """Record one retune candidate (never retunes implicitly)."""
     if not _obs.enabled():
         return
@@ -38,6 +48,7 @@ def retune_candidate(key: Key, streak: int) -> None:
         "tune.retune_candidates",
         backend=str(backend),
         family=family,
+        reason=reason,
     ).inc()
     _obs.event(
         "retune_candidate",
@@ -49,4 +60,5 @@ def retune_candidate(key: Key, streak: int) -> None:
         groups=groups,
         itemsize=itemsize,
         streak=streak,
+        reason=reason,
     )

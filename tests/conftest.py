@@ -32,6 +32,7 @@ def _reset_telemetry():
     cold memo call ops.clear_tile_cache() themselves)."""
     from repro import obs
     from repro.kernels import ops
+    from repro.obs import audit
 
     obs.reset()
     obs.clear_events()
@@ -39,5 +40,7 @@ def _reset_telemetry():
     yield
     obs.reset()
     obs.clear_events()
-    ops.reset_tile_cache_stats()
+    ops.reset_tile_cache_stats()  # also drops util-gap streaks/bests
     ops.on_miss_streak(None)  # restore the default retune-candidate hook
+    ops.on_util_gap(None)  # restore the default util-gap hook
+    audit.set_audit_every(None)  # back to env-driven sampling (off in tests)

@@ -1,0 +1,230 @@
+"""benchmarks/history.py + the ``repro-stats bench`` regression gate.
+
+The gate's contract: a committed-baseline row and a fresh row from the same
+code pass; a synthetically regressed row (an order of magnitude past even
+the generous wall-clock tolerances) fails with exit 1; metrics present in
+only one row are informational, never fatal.
+"""
+
+import json
+import os
+
+import pytest
+
+_BENCHMARKS_DIR = os.path.join(os.path.dirname(__file__), "..", "benchmarks")
+
+
+def _history():
+    import sys
+
+    sys.path.insert(0, _BENCHMARKS_DIR)
+    try:
+        import history
+    finally:
+        sys.path.pop(0)
+    return history
+
+
+def _run_module():
+    import sys
+
+    sys.path.insert(0, _BENCHMARKS_DIR)
+    try:
+        import run as bench_run
+    finally:
+        sys.path.pop(0)
+    return bench_run
+
+
+META = {"git_commit": "abc123", "device_kind": "cpu", "jax_version": "0.4"}
+METRICS = {
+    "continuous.tokens_per_step": 1.5,
+    "continuous.ttft_p99": 0.080,
+    "gflops_tuned/pallas/fp:256x256x256": 12.0,
+    "serving.greedy_agreement": 1.0,
+}
+
+
+class TestRows:
+    def test_append_and_load_roundtrip(self, tmp_path):
+        hist = _history()
+        p = hist.append_row("t", METRICS, META, directory=str(tmp_path))
+        assert p == hist.history_path("t", str(tmp_path))
+        hist.append_row("t", METRICS, META, directory=str(tmp_path))
+        rows = hist.load_rows("t", str(tmp_path))
+        assert len(rows) == 2
+        assert rows[0]["meta"] == META
+        assert rows[0]["metrics"] == METRICS
+
+    def test_rows_have_stable_key_order(self, tmp_path):
+        hist = _history()
+        hist.append_row(
+            "t", {"b": 1.0, "a": 2.0}, {"z": "1", "a": "2"},
+            directory=str(tmp_path),
+        )
+        raw = open(hist.history_path("t", str(tmp_path))).read()
+        row = json.loads(raw)
+        assert list(row["meta"]) == ["a", "z"]
+        assert list(row["metrics"]) == ["a", "b"]
+
+    def test_null_metrics_survive(self, tmp_path):
+        hist = _history()
+        hist.append_row(
+            "t", {"ttft_p99": None}, META, directory=str(tmp_path)
+        )
+        rows = hist.load_rows("t", str(tmp_path))
+        assert rows[0]["metrics"]["ttft_p99"] is None
+
+
+class TestDiff:
+    def _row(self, metrics):
+        return {"meta": META, "metrics": metrics}
+
+    def test_identical_rows_pass(self):
+        hist = _history()
+        findings = hist.diff_rows(self._row(METRICS), self._row(METRICS))
+        assert all(f.status in ("ok", "untracked") for f in findings)
+
+    def test_synthetic_regression_fails(self):
+        """The CI acceptance scenario: ~100x worse wall-clock metrics land
+        far beyond even the 10x machine-variance allowance."""
+        hist = _history()
+        bad = dict(METRICS)
+        bad["continuous.ttft_p99"] = METRICS["continuous.ttft_p99"] * 100
+        bad["gflops_tuned/pallas/fp:256x256x256"] = (
+            METRICS["gflops_tuned/pallas/fp:256x256x256"] / 100
+        )
+        findings = hist.diff_rows(self._row(METRICS), self._row(bad))
+        regressed = {f.metric for f in findings if f.status == "regression"}
+        assert regressed == {
+            "continuous.ttft_p99",
+            "gflops_tuned/pallas/fp:256x256x256",
+        }
+
+    def test_deterministic_metrics_gate_tight(self):
+        hist = _history()
+        bad = dict(METRICS)
+        bad["serving.greedy_agreement"] = 0.95  # >1% drop in agreement
+        bad["continuous.tokens_per_step"] = 1.35  # 10% drop, 5% allowed
+        findings = hist.diff_rows(self._row(METRICS), self._row(bad))
+        regressed = {f.metric for f in findings if f.status == "regression"}
+        assert "serving.greedy_agreement" in regressed
+        assert "continuous.tokens_per_step" in regressed
+
+    def test_wallclock_noise_is_tolerated(self):
+        hist = _history()
+        noisy = dict(METRICS)
+        noisy["continuous.ttft_p99"] = METRICS["continuous.ttft_p99"] * 5
+        noisy["gflops_tuned/pallas/fp:256x256x256"] = 12.0 / 5
+        findings = hist.diff_rows(self._row(METRICS), self._row(noisy))
+        assert not [f for f in findings if f.status == "regression"]
+
+    def test_one_sided_metrics_are_informational(self):
+        hist = _history()
+        cur = dict(METRICS)
+        cur.pop("serving.greedy_agreement")
+        cur["brand_new_metric"] = 1.0
+        findings = hist.diff_rows(self._row(METRICS), self._row(cur))
+        by_metric = {f.metric: f.status for f in findings}
+        assert by_metric["serving.greedy_agreement"] == "missing"
+        assert by_metric["brand_new_metric"] == "new"
+        assert "regression" not in by_metric.values()
+
+    def test_null_current_is_missing_not_regression(self):
+        hist = _history()
+        cur = dict(METRICS)
+        cur["continuous.ttft_p99"] = None  # empty trace this run
+        findings = hist.diff_rows(self._row(METRICS), self._row(cur))
+        by_metric = {f.metric: f.status for f in findings}
+        assert by_metric["continuous.ttft_p99"] == "missing"
+
+    def test_tolerance_directionality(self):
+        hist = _history()
+        tol_up = hist.Tolerance("x", "higher", 0.1)
+        assert tol_up.regressed(100.0, 89.0)
+        assert not tol_up.regressed(100.0, 91.0)
+        assert not tol_up.regressed(100.0, 500.0)  # improvements never fail
+        tol_dn = hist.Tolerance("x", "lower", 0.1)
+        assert tol_dn.regressed(100.0, 111.0)
+        assert not tol_dn.regressed(100.0, 109.0)
+        assert not tol_dn.regressed(100.0, 1.0)
+
+
+class TestBenchMeta:
+    def test_meta_keys_and_order(self):
+        meta = _run_module().bench_meta()
+        assert list(meta) == ["git_commit", "device_kind", "jax_version"]
+        assert all(isinstance(v, str) and v for v in meta.values())
+        assert meta["git_commit"] != "unknown"  # we run inside the repo
+
+
+class TestStatsBenchCLI:
+    def _seed_history(self, tmp_path, *rows):
+        hist = _history()
+        for metrics in rows:
+            hist.append_row("serving", metrics, META,
+                            directory=str(tmp_path))
+
+    def test_gate_passes_identical_rows(self, tmp_path, capsys):
+        from repro.launch.stats import main as stats_main
+
+        self._seed_history(tmp_path, METRICS, METRICS)
+        stats_main(["bench", "--dir", str(tmp_path)])
+        out = capsys.readouterr().out
+        assert "0 regression(s)" in out
+
+    def test_gate_fails_synthetic_regression(self, tmp_path, capsys):
+        from repro.launch.stats import main as stats_main
+
+        bad = dict(METRICS)
+        bad["continuous.ttft_p99"] = METRICS["continuous.ttft_p99"] * 100
+        self._seed_history(tmp_path, METRICS, bad)
+        with pytest.raises(SystemExit) as exc:
+            stats_main(["bench", "--dir", str(tmp_path)])
+        assert exc.value.code == 1
+        assert "regression" in capsys.readouterr().out
+
+    def test_warn_only_reports_but_passes(self, tmp_path, capsys):
+        from repro.launch.stats import main as stats_main
+
+        bad = dict(METRICS)
+        bad["serving.greedy_agreement"] = 0.5
+        self._seed_history(tmp_path, METRICS, bad)
+        stats_main(["bench", "--dir", str(tmp_path), "--warn-only"])
+        assert "1 regression(s)" in capsys.readouterr().out
+
+    def test_current_file_mode(self, tmp_path, capsys):
+        """CI feeds the gate a fresh row via --current-file (the synthetic
+        regression check works the same way)."""
+        from repro.launch.stats import main as stats_main
+
+        self._seed_history(tmp_path, METRICS)
+        bad = {"meta": META, "metrics": dict(
+            METRICS, **{"continuous.ttft_p99": 99.0}
+        )}
+        cur = tmp_path / "cur.json"
+        cur.write_text(json.dumps(bad))
+        with pytest.raises(SystemExit) as exc:
+            stats_main(["bench", "--dir", str(tmp_path),
+                        "--current-file", str(cur)])
+        assert exc.value.code == 1
+
+    def test_commit_prefix_selector(self, tmp_path, capsys):
+        hist = _history()
+        hist.append_row("serving", METRICS, META, directory=str(tmp_path))
+        hist.append_row(
+            "serving", METRICS,
+            dict(META, git_commit="def456"), directory=str(tmp_path),
+        )
+        from repro.launch.stats import main as stats_main
+
+        stats_main(["bench", "--dir", str(tmp_path),
+                    "--baseline", "abc", "--current", "def456"])
+        out = capsys.readouterr().out
+        assert "abc123" in out and "def456" in out
+
+    def test_missing_history_is_an_error(self, tmp_path):
+        from repro.launch.stats import main as stats_main
+
+        with pytest.raises(SystemExit):
+            stats_main(["bench", "--dir", str(tmp_path / "nope")])
