@@ -13,7 +13,14 @@ engines and emits ``BENCH_serving.json``:
 
 Metrics per engine: useful tokens/sec (wall-clock, after a warmup pass that
 absorbs compiles), useful tokens per decode step (deterministic, wall-clock
-free), and mean decode-slot occupancy. Run::
+free), and mean decode-slot occupancy.
+
+A second section replays a **shared-system-prompt** Poisson trace through
+the continuous engine with the prefix cache off vs on
+(:func:`bench_prefix_cache`): cache-on must keep greedy outputs bitwise
+identical and drop TTFT p50 (joins resume from cached prefix K/V instead of
+re-prefilling it). Both sections land in ``BENCH_serving.json`` and one
+BENCH_history row (``continuous.*`` + ``prefix.*`` columns). Run::
 
     PYTHONPATH=src python benchmarks/serving_bench.py [--smoke] [--out PATH]
 """
@@ -80,10 +87,9 @@ def run_static(engine, requests, n_slots: int) -> Dict:
     }
 
 
-def run_continuous(engine, requests) -> Dict:
-    report = engine.timed_serve(requests)
+def _report_row(name: str, report, engine) -> Dict:
     return {
-        "engine": "continuous",
+        "engine": name,
         "useful_tokens": report.generated_tokens,
         "decode_steps": report.decode_steps,
         "prefill_batches": report.prefill_batches,
@@ -97,6 +103,10 @@ def run_continuous(engine, requests) -> Dict:
         "itl_p50": report.itl_p50,
         "itl_p99": report.itl_p99,
     }
+
+
+def run_continuous(engine, requests) -> Dict:
+    return _report_row("continuous", engine.timed_serve(requests), engine)
 
 
 def serving_config(arch: str):
@@ -178,11 +188,89 @@ def bench_serving(
     }
 
 
-def history_metrics(result: Dict) -> Dict:
+def bench_prefix_cache(
+    arch: str = "chatglm3-6b",
+    *,
+    n_requests: int = 12,
+    n_slots: int = 4,
+    max_len: int = 288,
+    seed: int = 0,
+    prefix_len: int = 192,
+    tail_lens=(8, 12, 16),
+    gen_lens=(8, 16, 24),
+    chunk: int = 32,
+    warmup: bool = True,
+) -> Dict:
+    """Shared-system-prompt Poisson trace through the continuous engine,
+    prefix cache off vs on (cache-on also chunk-prefills the suffix).
+
+    Greedy tokens must agree bitwise — the cache changes *where* prefix K/V
+    comes from, never its values — and cache-on TTFT should drop: joins
+    resume from the cached prefix instead of re-prefilling it.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.models import api
+    from repro.serve import ContinuousEngine, shared_prefix_trace
+
+    cfg = serving_config(arch)
+    params = api.init_params(cfg, jax.random.key(seed))
+    trace = shared_prefix_trace(
+        n_requests, seed=seed, vocab=cfg.vocab, prefix_len=prefix_len,
+        tail_lens=tail_lens, gen_lens=gen_lens, mean_interarrival=2.0,
+    )
+    assert all(len(r.prompt) + r.max_new_tokens <= max_len for r in trace)
+
+    off_eng = ContinuousEngine(
+        cfg=cfg, params=params, n_slots=n_slots, max_len=max_len,
+        cache_dtype=jnp.float32, prefill_chunk=None, prefix_cache=False,
+    )
+    on_eng = ContinuousEngine(
+        cfg=cfg, params=params, n_slots=n_slots, max_len=max_len,
+        cache_dtype=jnp.float32, prefill_chunk=chunk, prefix_cache=True,
+        prefix_block=chunk,
+    )
+    if warmup:
+        # One full replay each: every compiled shape (prefill buckets, chunk
+        # steps, decode) is hot, and the warmup also populates the trie — the
+        # timed cache-on pass measures steady-state hits, which is the
+        # regime a long-lived server sits in.
+        off_eng.timed_serve(trace)
+        on_eng.timed_serve(trace)
+
+    off_rep = off_eng.timed_serve(trace)
+    on_rep = on_eng.timed_serve(trace)
+    off = _report_row("cache_off", off_rep, off_eng)
+    on = _report_row("cache_on", on_rep, on_eng)
+    on["prefix_cache"] = on_eng.prefix_cache_stats()
+    # Bitwise greedy agreement, request by request, from the timed runs.
+    agreement = sum(
+        1 for r in trace if off_rep.outputs[r.rid] == on_rep.outputs[r.rid]
+    ) / len(trace)
+    return {
+        "meta": bench_meta(),
+        "arch": cfg.name,
+        "n_requests": n_requests,
+        "n_slots": n_slots,
+        "prefix_len": prefix_len,
+        "chunk": chunk,
+        "seed": seed,
+        "cache_off": off,
+        "cache_on": on,
+        "greedy_agreement": agreement,
+        "ttft_p50_ratio": (
+            on["ttft_p50"] / off["ttft_p50"]
+            if on["ttft_p50"] and off["ttft_p50"] else None
+        ),
+    }
+
+
+def history_metrics(result: Dict, prefix: Dict = None) -> Dict:
     """Flatten a serving comparison into the BENCH_history row schema.
     Percentiles may be None (no samples) — history keeps the null."""
     c = result["continuous"]
-    return {
+    row = {
         "continuous.tokens_per_step": c["tokens_per_step"],
         "continuous.tokens_per_sec": c["tokens_per_sec"],
         "continuous.mean_occupancy": c["mean_occupancy"],
@@ -193,6 +281,17 @@ def history_metrics(result: Dict) -> Dict:
         "speedup_tokens_per_step": result["speedup_tokens_per_step"],
         "occupancy_gain": result["occupancy_gain"],
     }
+    if prefix is not None:
+        on, off = prefix["cache_on"], prefix["cache_off"]
+        row.update({
+            "prefix.ttft_p50_on": on["ttft_p50"],
+            "prefix.ttft_p50_off": off["ttft_p50"],
+            "prefix.ttft_p50_ratio": prefix["ttft_p50_ratio"],
+            "prefix.tokens_per_sec_on": on["tokens_per_sec"],
+            "prefix.greedy_agreement": prefix["greedy_agreement"],
+            "prefix.hits": (on.get("prefix_cache") or {}).get("hits"),
+        })
+    return row
 
 
 def _ms(v) -> str:
@@ -217,22 +316,29 @@ def main() -> None:
     args = ap.parse_args()
 
     kw = {}
+    pkw = {}
     if args.smoke:
         # Decode-heavy, high-variance generation lengths: the regime where
         # static batching pins whole groups on the longest request.
         kw = dict(n_requests=8, n_slots=2, max_len=80,
                   prompt_lens=(6, 12, 17), gen_lens=(4, 16, 48))
+        # 3 slots keep the queue shallow: queue wait is identical cache-on
+        # and cache-off, so it only dilutes the TTFT ratio the gate checks.
+        pkw = dict(n_requests=6, n_slots=3, max_len=128, prefix_len=64,
+                   tail_lens=(6, 10), gen_lens=(4, 8), chunk=16)
     result = bench_serving(
         args.arch, seed=args.seed, **(
             kw or dict(n_requests=args.n_requests, n_slots=args.slots,
                        max_len=args.max_len)
         )
     )
+    prefix = bench_prefix_cache(args.arch, seed=args.seed, **pkw)
+    result["prefix_cache"] = prefix
     with open(args.out, "w") as f:
         json.dump(result, f, indent=2)
     if not args.no_history:
         hist = bench_history.append_row(
-            "serving", history_metrics(result), result["meta"],
+            "serving", history_metrics(result, prefix), result["meta"],
             directory=args.history_dir,
         )
         print(f"[serving_bench] history row -> {hist}")
@@ -250,11 +356,26 @@ def main() -> None:
     print(f"  continuous/static: {result['speedup_tokens_per_sec']:.2f}x wall, "
           f"{result['speedup_tokens_per_step']:.2f}x per-step, "
           f"+{result['occupancy_gain']:.3f} occupancy -> {args.out}")
+    pon, poff = prefix["cache_on"], prefix["cache_off"]
+    stats = pon.get("prefix_cache") or {}
+    print(f"  prefix cache ({prefix['n_requests']} reqs, shared "
+          f"{prefix['prefix_len']}-token prompt): ttft p50 "
+          f"{_ms(poff['ttft_p50'])} -> {_ms(pon['ttft_p50'])} ms, "
+          f"{stats.get('hits', 0)} hits, greedy agreement "
+          f"{prefix['greedy_agreement']:.2f}")
     if not (
         result["speedup_tokens_per_step"] > 1.0
         and result["occupancy_gain"] > 0.0
     ):
         raise SystemExit("continuous batching did not beat static batching")
+    if prefix["greedy_agreement"] != 1.0:
+        raise SystemExit("prefix cache changed greedy outputs")
+    if not (
+        pon["ttft_p50"] is not None
+        and poff["ttft_p50"] is not None
+        and pon["ttft_p50"] < poff["ttft_p50"]
+    ):
+        raise SystemExit("prefix cache did not improve TTFT p50")
 
 
 if __name__ == "__main__":

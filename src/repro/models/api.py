@@ -31,6 +31,7 @@ __all__ = [
     "loss_fn",
     "prefill",
     "prefill_bucketed",
+    "prefill_chunk",
     "decode",
     "decode_at",
     "init_state",
@@ -202,6 +203,50 @@ def prefill_bucketed(
         params, tokens, cfg, mode="prefill", caches=caches, backend=backend
     )
     last = hidden[jnp.arange(b), lengths.astype(jnp.int32) - 1]
+    logits = tf_mod.lm_logits(params, last[:, None], cfg)[:, 0]
+    return logits, caches
+
+
+def prefill_chunk(
+    cfg: ArchConfig,
+    params,
+    tokens: jax.Array,
+    caches,
+    offsets: jax.Array,
+    last_idx: jax.Array,
+    *,
+    backend=None,
+) -> Tuple[jax.Array, Any]:
+    """Advance a prompt-chunk window: tokens [B, C] appended at per-row
+    ``offsets[b]``; returns (logits [B, V], caches).
+
+    The resume-from-cached-length prefill entry: row ``b``'s chunk occupies
+    absolute positions ``offsets[b] .. offsets[b]+C-1`` of its cache — which
+    may start past 0 because earlier chunks (or a reused prefix-cache span)
+    already fill positions below ``offsets[b]``. Like :func:`decode_at`,
+    ``offsets`` is the source of truth for cache fill, so a cache attached
+    from the prefix trie needs no per-layer counter surgery. Rows whose
+    prompt is already exhausted pass a sentinel offset ``>= S_max`` — every
+    write drops and their lane is pure ballast in the fused step.
+
+    Logits are read at chunk index ``last_idx[b]`` (the row's final prompt
+    token when this chunk finishes it; don't-care otherwise — callers mask).
+    Token-prompt attention-only LM families; recurrent mixers raise inside
+    the forward (state can't resume from a scatter).
+    """
+    if cfg.family in ("audio", "vlm"):
+        raise NotImplementedError(
+            f"chunked prefill: token-prompt LM families only, not {cfg.family}"
+        )
+    b, c = tokens.shape
+    offsets = offsets.astype(jnp.int32)
+    positions = offsets[:, None] + jnp.arange(c, dtype=jnp.int32)[None, :]
+    caches = _with_slot_lengths(caches, offsets)
+    hidden, caches, _ = tf_mod.lm_forward(
+        params, tokens, cfg, mode="chunk", caches=caches,
+        positions=positions, backend=backend,
+    )
+    last = hidden[jnp.arange(b), last_idx.astype(jnp.int32)]
     logits = tf_mod.lm_logits(params, last[:, None], cfg)[:, 0]
     return logits, caches
 

@@ -32,6 +32,7 @@ __all__ = [
     "attention_init",
     "attention_apply",
     "blockwise_attention",
+    "chunk_attention",
     "decode_attention",
     "KVCache",
 ]
@@ -283,6 +284,60 @@ def decode_attention(
         return o.transpose(0, 3, 1, 2, 4).reshape(b, 1, hq, d).astype(q.dtype)
 
 
+def chunk_attention(
+    q: jax.Array,
+    cache: KVCache,
+    q_pos: jax.Array,
+    *,
+    n_kv: int,
+    window: Optional[int] = None,
+    attn_softcap: Optional[float] = None,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Chunked-prefill attention: C query tokens per row, each at its own
+    absolute position, against the row's cache history.
+    q: [B,C,Hq,D]; q_pos: [B,C] int32 -> [B,C,Hq,D].
+
+    The multi-token sibling of :func:`decode_attention`: query token
+    ``(b, j)`` attends over every cache position ``kp <= q_pos[b, j]`` — the
+    chunk's own K/V has already been appended at those positions, so
+    causality *within* the chunk and attention over the previously-filled
+    prefix (earlier chunks, or a reused cached prefix) are one mask. Rows in
+    the same dispatch may sit at different offsets (one mid-prompt, one
+    resuming from a shared-prefix cache), which is what lets one compiled
+    chunk step serve a mixed join batch.
+    """
+    b, c, hq, d = q.shape
+    t = cache.k.shape[1]
+    hkv = n_kv
+    g = hq // hkv
+    scale = scale if scale is not None else d**-0.5
+    qg = q.reshape(b, c, hkv, g, d)
+    k = cache.k.reshape(b, t, hkv, d)
+    v = cache.v.reshape(b, t, hkv, d)
+    # named_scope: scores / masking / softmax / PV are the attention core —
+    # reduction-coupled softmax math, not GEMM-writeback passes — exempted
+    # by the decode-step HLO census.
+    with jax.named_scope("attn_core"):
+        s = jnp.einsum(
+            "bqhgd,bkhd->bhgqk", qg, k, preferred_element_type=jnp.float32
+        ) * scale
+        if attn_softcap is not None:
+            s = attn_softcap * jnp.tanh(s / attn_softcap)
+        kp = jnp.arange(t)
+        valid = kp[None, None, :] <= q_pos[:, :, None]  # [B, C, T]
+        if window is not None:
+            valid &= kp[None, None, :] > q_pos[:, :, None] - window
+        s = jnp.where(valid[:, None, None, :, :], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        # bf16 x bf16 -> f32 accumulate (widening MAC); no f32 cache copy.
+        o = jnp.einsum(
+            "bhgqk,bkhd->bhgqd", p.astype(v.dtype), v,
+            preferred_element_type=jnp.float32,
+        )
+        return o.transpose(0, 3, 1, 2, 4).reshape(b, c, hq, d).astype(q.dtype)
+
+
 def attention_apply(
     params,
     x: jax.Array,
@@ -303,6 +358,7 @@ def attention_apply(
     seq_shard: bool = False,
     backend: Optional[str] = None,
     residual: Optional[jax.Array] = None,
+    chunk: bool = False,
 ) -> Tuple[jax.Array, Optional[KVCache]]:
     """Full attention block: projections + RoPE + core + output projection.
 
@@ -313,6 +369,9 @@ def attention_apply(
     Modes:
     * ``cache is None``      — training / prefill without cache.
     * ``cache`` + ``x.shape[1] == 1`` — single-token decode (append + attend).
+    * ``cache`` + ``chunk=True`` — chunked prefill: append C tokens at the
+      per-row ``positions`` (which may start past 0 — resuming from earlier
+      chunks or a reused cached prefix), attend over the cache history.
     * ``cache`` + longer x   — prefill that fills and returns the cache.
     * ``cross_x``            — cross-attention (no RoPE on KV, not causal).
     """
@@ -328,7 +387,37 @@ def attention_apply(
             k = apply_rope(k, positions, rotary_frac=rotary_frac, theta=rope_theta)
 
     new_cache = None
-    if cache is not None and s == 1:
+    if cache is not None and chunk and s > 1:
+        # Chunked prefill: scatter this chunk's K/V at the per-row absolute
+        # positions, then attend each query token over its own history. Rows
+        # that finished in an earlier chunk carry sentinel positions >= S_max
+        # so every one of their writes drops.
+        from repro.quant.kvcache import QuantKVCache
+
+        if isinstance(cache, QuantKVCache):
+            # Chunks fill standalone FULL-PRECISION caches; quantization
+            # happens once, at the slot-pool join scatter, where scales are
+            # calibrated over the complete prompt span (and adopted from the
+            # cached prefix). Mid-prompt quantization would fix scales before
+            # the span's amax is known — refuse loudly.
+            raise NotImplementedError(
+                "chunked prefill into a QuantKVCache is unsupported: chunk "
+                "into a full-precision cache and quantize at the slot-pool "
+                "join (serve.cache.scatter_slots)"
+            )
+        rows = jnp.arange(b)[:, None]
+        kf = k.reshape(b, s, n_kv * head_dim).astype(cache.k.dtype)
+        vf = v.reshape(b, s, n_kv * head_dim).astype(cache.v.dtype)
+        new_cache = KVCache(
+            k=cache.k.at[rows, positions].set(kf, mode="drop"),
+            v=cache.v.at[rows, positions].set(vf, mode="drop"),
+            length=positions[:, -1].astype(jnp.int32) + 1,
+        )
+        o = chunk_attention(
+            q, new_cache, positions,
+            n_kv=n_kv, window=window, attn_softcap=attn_softcap,
+        )
+    elif cache is not None and s == 1:
         # Decode: append one token (fused-head layout), attend over the cache.
         from repro.quant.kvcache import QuantKVCache
 

@@ -11,6 +11,8 @@ Modes:
 * ``train``   — full sequence, no caches, returns final hidden states.
 * ``prefill`` — full sequence, fills and returns per-layer caches.
 * ``decode``  — one token against the caches.
+* ``chunk``   — chunked prefill: a fixed-width window of prompt tokens
+  appended at per-row ``positions`` (attention-only patterns).
 
 Caches are per-period-position stacked pytrees (KVCache / MambaState /
 MLSTMState / SLSTMState), scanned alongside the parameters.
@@ -186,6 +188,7 @@ def _block_apply(
     positions,
     cache,
     backend=None,
+    chunk=False,
 ):
     """One layer. Returns (x, new_cache, aux_loss)."""
     from .layers import role_backend
@@ -198,6 +201,10 @@ def _block_apply(
     # attention / mlp / moe resolve their own precision-policy roles inside;
     # the recurrent mixers take a plain backend name resolved here.
     mixer_be = role_backend(backend, "mixer")
+    if chunk and bd.mixer not in ("attn", "attn_local", "none"):
+        # Recurrent state can't resume mid-prompt from a cache scatter; the
+        # engine gates chunked prefill to attention-only patterns.
+        raise NotImplementedError("chunked prefill requires attention mixers")
     if bd.mixer in ("attn", "attn_local"):
         # The mixer's residual add rides the output projection's epilogue:
         # attention returns x + attn(h) in one writeback.
@@ -218,6 +225,7 @@ def _block_apply(
             seq_shard=cfg.attn_seq_shard,
             backend=backend,
             residual=x,
+            chunk=chunk,
         )
         mixer_out = stream  # non-None marks "this block has a mixer"
     elif bd.mixer == "mamba":
@@ -323,6 +331,7 @@ def lm_forward(
 
     n_pos = len(cfg.pattern)
     have_caches = caches is not None
+    chunk = mode == "chunk"  # chunked prefill: scatter-append at `positions`
 
     def period_body(carry, xs):
         x, aux = carry
@@ -342,6 +351,7 @@ def lm_forward(
                 positions=positions,
                 cache=cache_in,
                 backend=backend,
+                chunk=chunk,
             )
             aux = aux + a
             new_caches.append(nc if nc is not None else placeholder)

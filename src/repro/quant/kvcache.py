@@ -36,6 +36,7 @@ __all__ = [
     "QuantKVCache",
     "quantize_kv",
     "quantize_kv_rows",
+    "adopt_scale_floor",
     "kv_bytes_per_slot",
     "DEFAULT_KV_MARGIN",
 ]
@@ -126,26 +127,64 @@ def quantize_kv_rows(
     *,
     fmt: Union[str, QuantFormat] = "int8",
     margin: float = DEFAULT_KV_MARGIN,
+    k_scale_floor: Optional[jax.Array] = None,
+    v_scale_floor: Optional[jax.Array] = None,
 ):
     """Calibrate per-(slot, head) scales from full-precision K/V rows and
     quantize them. k/v: [..., S, n_kv * head_dim] (the prefilled prompt
     span); amax reduces over positions and head-dim, keeping heads.
 
+    ``k_scale_floor`` / ``v_scale_floor`` ([..., n_kv], broadcastable) lower-
+    bound the calibrated scales — the prefix-cache **scale adoption** hook: a
+    quantized cached prefix was originally quantized at some scale ``s0``;
+    when its (dequantized) span is re-quantized into a fresh slot, the floor
+    ``s0`` is adopted outright while the row's amax fits its representable
+    range (``amax <= qmax * s0`` — the floor already carries the original
+    calibration margin), making the round trip ``cast(q * s0 / s0) == q``
+    **bitwise-exact** whenever the prefix dominates the prompt; a suffix
+    whose values exceed that range recalibrates with margin, still never
+    *finer* than the floor — re-quantizing a coarse prefix at a finer scale
+    would fabricate precision that the narrow lanes never carried.
+
     Returns ``(k_q, v_q, k_scale, v_scale)`` with scales shaped [..., n_kv].
     """
     f = format_of(fmt)
 
-    def one(x):
+    def one(x, floor):
         *lead, s, fused = x.shape
         xh = x.reshape(*lead, s, n_kv, fused // n_kv).astype(jnp.float32)
         amax = jnp.max(jnp.abs(xh), axis=(-3, -1))  # [..., n_kv]
         scale = jnp.maximum(amax * margin, _TINY) / f.qmax
+        if floor is not None:
+            fl = floor.astype(jnp.float32)
+            # The floor already carries its own calibration margin (it was
+            # amax * margin / qmax at insert time), so adopt it outright
+            # whenever the values fit its representable range
+            # (amax <= qmax * floor). Re-applying ``margin`` to a
+            # round-tripped amax would nudge the scale one rounding step
+            # past the floor (round(qmax/margin) * margin > qmax) and break
+            # the bitwise ``cast(q * s0 / s) == q`` adoption guarantee.
+            scale = jnp.where(
+                amax <= f.qmax * fl, fl, jnp.maximum(scale, fl)
+            )
         q = f.cast(xh / scale[..., None, :, None]).reshape(*lead, s, fused)
         return q, scale
 
-    k_q, k_scale = one(k)
-    v_q, v_scale = one(v)
+    k_q, k_scale = one(k, k_scale_floor)
+    v_q, v_scale = one(v, v_scale_floor)
     return k_q, v_q, k_scale, v_scale
+
+
+def adopt_scale_floor(prefix_scales: jax.Array, n_rows: int) -> jax.Array:
+    """Broadcast a cached prefix's per-(period, head) scales [P, n_kv] to the
+    per-row floor layout [P, n_rows, n_kv] that :func:`quantize_kv_rows`
+    expects for a stacked [P, rows, S, fused] join batch. Rows that attach
+    this prefix adopt its scales as a lower bound (see ``quantize_kv_rows``);
+    rows without a prefix pass 0 — a no-op floor."""
+    return jnp.broadcast_to(
+        prefix_scales.astype(jnp.float32)[:, None, :],
+        (prefix_scales.shape[0], n_rows, prefix_scales.shape[-1]),
+    )
 
 
 def quantize_kv(

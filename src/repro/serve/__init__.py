@@ -7,7 +7,7 @@
   fused masked decode step that requests join and leave mid-flight without
   recompiling.
 """
-from .cache import SlotPool, init_slot_caches, scatter_slots
+from .cache import PrefixCache, SlotPool, init_slot_caches, scatter_slots
 from .continuous import ContinuousEngine, ServingReport
 from .engine import ServeEngine, sample_token
 from .scheduler import (
@@ -17,6 +17,7 @@ from .scheduler import (
     bucket_length,
     gen_len_spread,
     poisson_trace,
+    shared_prefix_trace,
 )
 
 __all__ = [
@@ -24,6 +25,7 @@ __all__ = [
     "ContinuousEngine",
     "ServingReport",
     "SlotPool",
+    "PrefixCache",
     "init_slot_caches",
     "scatter_slots",
     "Scheduler",
@@ -32,5 +34,6 @@ __all__ = [
     "bucket_length",
     "gen_len_spread",
     "poisson_trace",
+    "shared_prefix_trace",
     "sample_token",
 ]

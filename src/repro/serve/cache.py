@@ -34,7 +34,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -48,7 +48,13 @@ from repro.quant.kvcache import (
     quantize_kv_rows,
 )
 
-__all__ = ["SlotPool", "init_slot_caches", "scatter_slots"]
+__all__ = [
+    "SlotPool",
+    "PrefixCache",
+    "PrefixNode",
+    "init_slot_caches",
+    "scatter_slots",
+]
 
 
 def init_slot_caches(
@@ -98,7 +104,7 @@ def init_slot_caches(
 
 
 @functools.partial(jax.jit, donate_argnums=(0,))
-def scatter_slots(pool_caches, prefill_caches, slots: jax.Array):
+def scatter_slots(pool_caches, prefill_caches, slots: jax.Array, scale_floors=None):
     """Scatter prefilled request state into pool slots. slots: [Bb] int32.
 
     KV buffers copy only the prompt span ``[:, slots, :Lb]`` (the rest of the
@@ -106,9 +112,18 @@ def scatter_slots(pool_caches, prefill_caches, slots: jax.Array):
     (mamba conv/ssm, xlstm) copy their whole slot row. Prefill batches padded
     up to a compile-friendly row count pass an out-of-range slot index for
     the filler rows — those writes drop.
+
+    ``scale_floors`` (quantized pools only) is a tuple aligned with the cache
+    entries: ``None`` or ``(k_floor, v_floor)`` per entry, each
+    ``[n_periods, Bb, n_kv]`` — lower bounds on the join-time calibrated
+    scales. Rows that attached a quantized cached prefix pass the prefix's
+    original scales here (zeros elsewhere), so re-quantizing the dequantized
+    prefix span reproduces the stored narrow values bit-for-bit whenever the
+    prefix's amax dominates the prompt (see ``quant.kvcache``).
     """
     out = []
-    for pc, fc in zip(pool_caches, prefill_caches):
+    floors = scale_floors or (None,) * len(pool_caches)
+    for pc, fc, fl in zip(pool_caches, prefill_caches, floors):
         if pc is None or fc is None:
             out.append(pc)
         elif isinstance(pc, QuantKVCache):
@@ -119,7 +134,9 @@ def scatter_slots(pool_caches, prefill_caches, slots: jax.Array):
             # until the next join overwrites the lane.
             lb = fc.k.shape[2]
             k_q, v_q, k_s, v_s = quantize_kv_rows(
-                fc.k, fc.v, pc.n_kv, fmt=pc.k.dtype, margin=DEFAULT_KV_MARGIN
+                fc.k, fc.v, pc.n_kv, fmt=pc.k.dtype, margin=DEFAULT_KV_MARGIN,
+                k_scale_floor=None if fl is None else fl[0],
+                v_scale_floor=None if fl is None else fl[1],
             )
             out.append(
                 pc._replace(
@@ -217,22 +234,33 @@ class SlotPool:
             self._owner[s] = rid
         return slots
 
-    def release(self, slot: int) -> None:
+    def release(self, slot: int) -> bool:
+        """Return ``slot`` to the free list. Idempotent: releasing an
+        in-range slot that is already free is a no-op returning ``False``
+        (a request can retire both at its join tick — one-token prompts —
+        and in the same tick's evict sweep); an out-of-range slot id is a
+        caller bug and still raises."""
+        if not (0 <= slot < self.n_slots):
+            raise KeyError(f"slot {slot} out of range [0, {self.n_slots})")
         rid = self._owner.pop(slot, None)
         if rid is None:
-            raise KeyError(f"slot {slot} is not leased")
+            return False
         self._free.append(slot)
+        return True
 
-    def join(self, prefill_caches, slots: List[int]) -> None:
+    def join(self, prefill_caches, slots: List[int], scale_floors=None) -> None:
         """Scatter a prefilled bucket into the leased ``slots`` (device op).
 
         ``prefill_caches`` may hold more rows than ``slots`` (compile-width
         padding); filler rows are routed to slot index ``n_slots`` and drop.
+        ``scale_floors`` passes through to :func:`scatter_slots` (quantized
+        prefix-scale adoption).
         """
         n_rows = _n_rows(prefill_caches)
         idx = list(slots) + [self.n_slots] * (n_rows - len(slots))
         self.caches = scatter_slots(
-            self.caches, prefill_caches, jnp.asarray(idx, jnp.int32)
+            self.caches, prefill_caches, jnp.asarray(idx, jnp.int32),
+            scale_floors,
         )
 
 
@@ -243,3 +271,288 @@ def _n_rows(prefill_caches) -> int:
         if c is not None and not (isinstance(c, jax.Array) and c.size == 0):
             return jax.tree.leaves(c)[0].shape[1]
     raise ValueError("prefill caches contain no per-row state")
+
+
+# ---------------------------------------------------------------------------
+# Radix prefix cache
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class PrefixNode:
+    """One block of cached prompt K/V: an edge in the radix trie.
+
+    ``payload`` is a tuple aligned with the pool-cache entries: ``None`` for
+    non-attention positions, else per-layer-stack K/V for this block's token
+    span — full-precision ``(k, v)`` blocks ``[n_periods, bs, fused]``, or
+    quantized ``(k_q, v_q, k_scale, v_scale)`` with per-(period, head) fp32
+    scales ``[n_periods, n_kv]`` when the trie stores narrow lanes.
+    """
+
+    block: tuple  # the token-id block keying this edge
+    parent: Optional["PrefixNode"]
+    children: Dict[tuple, "PrefixNode"] = dataclasses.field(default_factory=dict)
+    payload: tuple = ()
+    refcount: int = 0
+    last_used: int = 0
+    # Memoized ``gather`` result for the root->this-node path. Payloads are
+    # immutable (first writer wins) and ancestors outlive this node (eviction
+    # only takes childless leaves), so the memo stays valid for the node's
+    # whole residency and dies with it on eviction.
+    gathered: Optional[tuple] = None
+
+
+class PrefixCache:
+    """Radix-style prompt-prefix cache over token-id blocks.
+
+    Requests sharing a system prompt re-prefill the same K/V on every join —
+    the serving-side version of the data-reuse the paper wrings out of the
+    MAC array. This trie keys blocks of ``block_size`` token ids; each edge
+    holds that block's per-layer K/V slice (quantized to the pool's narrow
+    format when ``kv_format`` is set, ~4x cheaper to keep resident). The
+    engine matches a new prompt against the trie, attaches the longest cached
+    prefix into the request's standalone prefill caches, and chunk-prefills
+    only the suffix.
+
+    Residency: matched nodes are ref-counted (``acquire``/``release``) for
+    the request's prefill lifetime so eviction can never yank a block that a
+    pending chunk pipeline is attached to. Eviction is LRU over refcount-0
+    leaves whenever ``cached_tokens`` exceeds ``capacity_tokens``.
+
+    Host-side object; the payloads are device arrays. Pure bookkeeping — no
+    jit, nothing here can recompile the decode step.
+    """
+
+    def __init__(
+        self,
+        *,
+        block_size: int = 16,
+        capacity_tokens: int = 1 << 16,
+        kv_format: Optional[str] = None,
+        n_kv: Optional[int] = None,
+        margin: float = DEFAULT_KV_MARGIN,
+    ):
+        if block_size < 1:
+            raise ValueError("block_size must be >= 1")
+        if kv_format is not None and n_kv is None:
+            raise ValueError("quantized prefix trie needs n_kv for its scales")
+        self.block_size = int(block_size)
+        self.capacity_tokens = int(capacity_tokens)
+        self.kv_format = kv_format
+        self.n_kv = n_kv
+        self.margin = margin
+        self._root = PrefixNode(block=(), parent=None)
+        self._clock = 0
+        self._n_nodes = 0
+        self.evictions = 0
+        self.hits = 0
+        self.misses = 0
+
+    # -- introspection ------------------------------------------------------
+
+    @property
+    def cached_tokens(self) -> int:
+        return self._n_nodes * self.block_size
+
+    @property
+    def n_nodes(self) -> int:
+        return self._n_nodes
+
+    # -- match / residency --------------------------------------------------
+
+    def match(self, tokens) -> Tuple[List[PrefixNode], int]:
+        """Longest cached prefix of ``tokens``, in whole blocks, capped so at
+        least one prompt token is left to prefill (the join still needs real
+        last-token logits). Returns ``(path nodes, matched token count)``
+        and refreshes the LRU clock of every node on the path."""
+        toks = [int(t) for t in tokens]
+        node, path, matched = self._root, [], 0
+        while matched + self.block_size <= len(toks) - 1:
+            blk = tuple(toks[matched : matched + self.block_size])
+            child = node.children.get(blk)
+            if child is None:
+                break
+            path.append(child)
+            matched += self.block_size
+            node = child
+        self._clock += 1
+        for n in path:
+            n.last_used = self._clock
+        return path, matched
+
+    def acquire(self, nodes: List[PrefixNode]) -> None:
+        for n in nodes:
+            n.refcount += 1
+
+    def release(self, nodes: List[PrefixNode]) -> None:
+        for n in nodes:
+            assert n.refcount > 0, "prefix node released more times than acquired"
+            n.refcount -= 1
+
+    # -- insert -------------------------------------------------------------
+
+    def insert(self, tokens, plen: int, prefill_caches, row: int) -> int:
+        """Insert the full blocks of ``tokens[:plen]`` from one finished
+        prefill: ``prefill_caches`` is the request's standalone (always
+        full-precision) cache stack, ``row`` its lane. Blocks already present
+        keep their original payloads (first writer wins — re-quantizing a
+        round-tripped prefix would accumulate drift copies). Returns the
+        number of new blocks, then evicts down to capacity."""
+        toks = [int(t) for t in tokens[:plen]]
+        n_blocks = len(toks) // self.block_size
+        if not n_blocks:
+            return 0
+        quant = self.kv_format is not None
+        scales = _span_scales(
+            prefill_caches, row, n_blocks * self.block_size,
+            fmt=self.kv_format, n_kv=self.n_kv, margin=self.margin,
+        ) if quant else None
+        node, created = self._root, 0
+        self._clock += 1
+        for j in range(n_blocks):
+            blk = tuple(toks[j * self.block_size : (j + 1) * self.block_size])
+            child = node.children.get(blk)
+            if child is None:
+                payload = _slice_payload(
+                    prefill_caches, row,
+                    j * self.block_size, (j + 1) * self.block_size,
+                    fmt=self.kv_format, span_scales=scales,
+                )
+                child = PrefixNode(block=blk, parent=node, payload=payload)
+                node.children[blk] = child
+                self._n_nodes += 1
+                created += 1
+            child.last_used = self._clock
+            node = child
+        self._evict_to_capacity()
+        return created
+
+    # -- gather -------------------------------------------------------------
+
+    def gather(self, nodes: List[PrefixNode]):
+        """Concatenate a matched path into attachable per-entry spans.
+
+        Returns ``(spans, floors)``: ``spans`` aligned with the cache
+        entries — ``None`` or full-precision ``(k, v)`` of shape
+        ``[n_periods, L, fused]`` (quantized payloads dequantize here; chunk
+        prefill always runs full-precision standalone caches) — and
+        ``floors`` — ``None`` or per-entry ``(k_scale, v_scale)``
+        ``[n_periods, n_kv]`` scale floors (elementwise max over the path's
+        block scales) for join-time scale adoption; ``None`` for
+        full-precision tries."""
+        if not nodes:
+            raise ValueError("gather of an empty prefix path")
+        if nodes[-1].gathered is not None:
+            return nodes[-1].gathered
+        n_entries = len(nodes[0].payload)
+        spans, floors = [], []
+        for e in range(n_entries):
+            parts = [n.payload[e] for n in nodes]
+            if parts[0] is None:
+                spans.append(None)
+                floors.append(None)
+                continue
+            if self.kv_format is None:
+                k = jnp.concatenate([p[0] for p in parts], axis=1)
+                v = jnp.concatenate([p[1] for p in parts], axis=1)
+                spans.append((k, v))
+                floors.append(None)
+            else:
+                from repro.quant.kvcache import _dequant  # noqa: PLC2701
+
+                k = jnp.concatenate(
+                    [_dequant(p[0], p[2], jnp.float32) for p in parts], axis=1
+                )
+                v = jnp.concatenate(
+                    [_dequant(p[1], p[3], jnp.float32) for p in parts], axis=1
+                )
+                k_fl = functools.reduce(jnp.maximum, [p[2] for p in parts])
+                v_fl = functools.reduce(jnp.maximum, [p[3] for p in parts])
+                spans.append((k, v))
+                floors.append((k_fl, v_fl))
+        out = tuple(spans), (None if self.kv_format is None else tuple(floors))
+        nodes[-1].gathered = out
+        return out
+
+    # -- eviction -----------------------------------------------------------
+
+    def _evict_to_capacity(self) -> None:
+        while self.cached_tokens > self.capacity_tokens:
+            victim = None
+            stack = [self._root]
+            while stack:
+                n = stack.pop()
+                stack.extend(n.children.values())
+                if (
+                    n is not self._root
+                    and not n.children
+                    and n.refcount == 0
+                    and (victim is None or n.last_used < victim.last_used)
+                ):
+                    victim = n
+            if victim is None:
+                return  # everything resident is referenced — over capacity
+            del victim.parent.children[victim.block]
+            self._n_nodes -= 1
+            self.evictions += 1
+
+
+def _kv_entries(prefill_caches, row: int):
+    """Yield ``(index, KVCache)`` for the attention entries of a standalone
+    prefill cache stack ``[n_periods, rows, Lb, fused]``."""
+    for i, c in enumerate(prefill_caches):
+        if isinstance(c, KVCache):
+            yield i, c
+        elif isinstance(c, QuantKVCache):
+            raise TypeError(
+                "prefix insertion reads full-precision standalone caches; "
+                "quantization happens inside the trie"
+            )
+
+
+def _span_scales(prefill_caches, row: int, span: int, *, fmt, n_kv, margin):
+    """Per-entry per-(period, head) scales calibrated over the whole inserted
+    span — every block of one insertion shares one scale, so a path inserted
+    together dequantizes/re-quantizes against a single floor."""
+    from repro.quant.quantize import format_of
+
+    f = format_of(fmt)
+    scales = {}
+    for i, c in _kv_entries(prefill_caches, row):
+        out = []
+        for x in (c.k, c.v):
+            xh = x[:, row, :span].astype(jnp.float32)
+            p, s, fused = xh.shape
+            xh = xh.reshape(p, s, n_kv, fused // n_kv)
+            amax = jnp.max(jnp.abs(xh), axis=(1, 3))  # [n_periods, n_kv]
+            out.append(jnp.maximum(amax * margin, 1e-12) / f.qmax)
+        scales[i] = tuple(out)
+    return scales
+
+
+def _slice_payload(prefill_caches, row, lo, hi, *, fmt, span_scales):
+    """One block's payload tuple (aligned with the cache entries)."""
+    from repro.quant.quantize import format_of
+
+    payload = []
+    kv_at = dict(_kv_entries(prefill_caches, row))
+    for i, c in enumerate(prefill_caches):
+        if i not in kv_at:
+            payload.append(None)
+            continue
+        k = c.k[:, row, lo:hi]
+        v = c.v[:, row, lo:hi]
+        if fmt is None:
+            payload.append((k, v))
+        else:
+            f = format_of(fmt)
+            k_s, v_s = span_scales[i]
+            n_kv = k_s.shape[-1]
+
+            def q(x, s):
+                p, sp, fused = x.shape
+                xh = x.astype(jnp.float32).reshape(p, sp, n_kv, fused // n_kv)
+                return f.cast(xh / s[:, None, :, None]).reshape(p, sp, fused)
+
+            payload.append((q(k, k_s), q(v, v_s), k_s, v_s))
+    return tuple(payload)

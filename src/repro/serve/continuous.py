@@ -21,12 +21,34 @@ Step loop (one tick = one fused decode dispatch):
    (inactive lanes are masked: they hold their token and position).
 3. **evict** — stream each active lane's sampled token to its request;
    EOS / max-token requests retire and free their slot for the next tick.
+
+Two compounding prompt-side optimizations (attention-only patterns, both
+off by default — ``prefill_chunk`` / ``prefix_cache`` fields or the
+``REPRO_PREFILL_CHUNK`` / ``REPRO_PREFIX_CACHE`` env knobs):
+
+* **Chunked prefill** — instead of one monolithic bucket prefill that
+  stalls every in-flight decode for the length of the longest prompt, a
+  join becomes a *pending pipeline*: its standalone caches advance by one
+  fixed power-of-two chunk (``api.prefill_chunk``) per tick, interleaved
+  with the pool's decode steps, and the batch joins the pool only when
+  every row's prompt is consumed. Chunk width and bucket are compile-time
+  shapes; per-row offsets are data — the chunk step compiles once per
+  (rows, bucket, width), and the decode step still never recompiles.
+* **Prefix cache** — a radix trie over token-id blocks
+  (``serve.cache.PrefixCache``) remembers finished prompts' K/V. A new
+  request attaches its longest cached prefix (snapped down to a chunk
+  boundary — resume offsets stay chunk-aligned) directly into its
+  standalone caches and chunk-prefills only the suffix; quantized pools
+  re-quantize the attached span under the prefix's original scales
+  (scale adoption — see ``quant.kvcache``). Emits
+  ``serve.prefix_cache.{hits,misses,evictions,cached_tokens}``.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import functools
+import os
 import time
 import warnings
 from typing import Any, Callable, Dict, List, Optional
@@ -40,11 +62,41 @@ from repro.obs import attr as _attr
 from repro.configs.base import ArchConfig
 from repro.models import api as model_api
 
-from .cache import SlotPool
+from .cache import PrefixCache, SlotPool
 from .engine import sample_token
 from .scheduler import Request, Scheduler
 
 __all__ = ["ContinuousEngine", "ServingReport"]
+
+# Chunk-prefill pipelines in flight at once. One is enough to kill
+# head-of-line blocking (decode never waits on a monolithic prefill) while
+# keeping slot reservations — leased but not yet active — bounded.
+_MAX_PENDING = 1
+
+
+@dataclasses.dataclass
+class _PendingJoin:
+    """A join mid-chunk: standalone caches filling one chunk per tick."""
+
+    batch: List[Request]
+    slots: List[int]
+    caches: Any  # standalone full-precision caches [P, rows, lb, ...]
+    rows: int
+    lb: int
+    offsets: np.ndarray  # [len(batch)] next fill position per row
+    plens: np.ndarray  # [len(batch)] prompt lengths
+    nodes: List[list]  # per-row acquired trie nodes (release at completion)
+    floors: Any  # scale_floors for the quantized pool join (or None)
+    first_logits: Optional[jax.Array] = None  # [rows, V]; valid where done
+    done: Optional[np.ndarray] = None  # [len(batch)] row consumed its prompt
+
+    def __post_init__(self) -> None:
+        if self.done is None:
+            self.done = np.zeros(len(self.batch), bool)
+
+    @property
+    def all_done(self) -> bool:
+        return bool(self.done.all())
 
 
 @dataclasses.dataclass
@@ -106,6 +158,15 @@ class ContinuousEngine:
     # admits proportionally more slots. Prefill stays full-precision; the
     # join scatter calibrates per-slot scales and quantizes (see serve.cache).
     kv_format: Optional[str] = None
+    # Chunked prefill width (power of two; None = env REPRO_PREFILL_CHUNK,
+    # unset = off). Attention-only patterns; see the module docstring.
+    prefill_chunk: Optional[int] = None
+    # Prefix cache (None = env REPRO_PREFIX_CACHE, unset = off). Enabling it
+    # implies chunked prefill (suffix-only prefill needs the chunk entry);
+    # the trie persists across serve() calls for the engine's lifetime.
+    prefix_cache: Optional[bool] = None
+    prefix_block: int = 16  # trie block size, tokens
+    prefix_capacity: int = 1 << 16  # trie capacity, tokens
 
     def __post_init__(self) -> None:
         cfg = self.cfg
@@ -129,12 +190,57 @@ class ContinuousEngine:
                 stacklevel=2,
             )
 
+        # Resolve the prompt-side feature knobs (fields beat env).
+        if self.prefill_chunk is None:
+            env = os.environ.get("REPRO_PREFILL_CHUNK", "")
+            self.prefill_chunk = int(env) if env else None
+        if self.prefix_cache is None:
+            env = os.environ.get("REPRO_PREFIX_CACHE", "")
+            self.prefix_cache = env.lower() not in ("", "0", "false", "no")
+        if self.prefix_cache and self.prefill_chunk is None:
+            self.prefill_chunk = 32  # suffix prefill rides the chunk entry
+        if self.prefill_chunk is not None:
+            w = self.prefill_chunk
+            if w < 1 or (w & (w - 1)):
+                raise ValueError(f"prefill_chunk must be a power of two, got {w}")
+            attn_only = all(
+                bd.mixer in ("attn", "attn_local", "none") for bd in cfg.pattern
+            )
+            if not attn_only:
+                # Recurrent state can't resume mid-prompt from a scatter;
+                # fall back to monolithic bucket prefill rather than fail.
+                warnings.warn(
+                    "chunked prefill / prefix cache need attention-only "
+                    f"patterns; disabled for {cfg.name}",
+                    RuntimeWarning,
+                    stacklevel=2,
+                )
+                self.prefill_chunk = None
+                self.prefix_cache = False
+        self._trie: Optional[PrefixCache] = (
+            PrefixCache(
+                block_size=self.prefix_block,
+                capacity_tokens=self.prefix_capacity,
+                kv_format=self.kv_format,
+                n_kv=cfg.n_kv,
+            )
+            if self.prefix_cache
+            else None
+        )
+        self._pending: List[_PendingJoin] = []
+
         @functools.partial(jax.jit, static_argnums=())
         def _prefill(params, tokens, lengths):
             logits, caches = model_api.prefill_bucketed(
                 cfg, params, tokens, lengths, self.cache_dtype
             )
             return logits, caches
+
+        @functools.partial(jax.jit, donate_argnums=(1,))
+        def _chunk(params, caches, ctoks, offsets, last_idx):
+            return model_api.prefill_chunk(
+                cfg, params, ctoks, caches, offsets, last_idx
+            )
 
         @functools.partial(jax.jit, donate_argnums=(1,))
         def _decode(params, caches, tok, pos, active, key):
@@ -147,11 +253,13 @@ class ContinuousEngine:
             return nxt, caches, pos
 
         self._prefill = _prefill
+        self._chunk = _chunk
         self._decode = _decode
         # Utilization-attribution state (obs.attr): the GEMM workload of each
         # compiled step, captured once at trace time, then charged with every
         # subsequent dispatch's measured wall time. Keyed per compiled
-        # program: one decode step; prefills per (rows, bucket).
+        # program: one decode step; prefills per (rows, bucket); chunk steps
+        # per (rows, bucket, width).
         self._decode_workload = None
         self._prefill_workloads: Dict[tuple, dict] = {}
 
@@ -163,6 +271,51 @@ class ContinuousEngine:
             return int(self._decode._cache_size())
         except Exception:
             return None
+
+    def prefix_cache_stats(self) -> Optional[Dict[str, int]]:
+        """Hit/miss/eviction/residency counters of the prefix trie (None
+        when the cache is disabled)."""
+        if self._trie is None:
+            return None
+        return {
+            "hits": self._trie.hits,
+            "misses": self._trie.misses,
+            "evictions": self._trie.evictions,
+            "cached_tokens": self._trie.cached_tokens,
+        }
+
+    # -- utilization attribution -------------------------------------------
+
+    def _step_workload(self, store_key, fn, args, step_recs, kind: str):
+        """Resolve the GEMM workload to charge for one dispatch.
+
+        Records present => this dispatch traced: store its workload, return
+        None (the tick's wall bracket includes trace + compile — skip it).
+        Records absent and the key unknown (the compile happened while
+        metrics were disabled) => re-capture at zero cost via
+        ``jax.eval_shape`` so timed dispatches stop silently contributing
+        zero attributed GEMM-seconds; each re-capture counts on
+        ``gemm.attr_fallback``.
+        """
+        if step_recs:
+            self._prefill_workloads[store_key] = _attr.aggregate(step_recs)
+            return None
+        wl = self._prefill_workloads.get(store_key)
+        if wl is None and _obs.enabled():
+            # jax's trace cache is keyed on the function object + avals and
+            # is shared with the jit wrapper's original (metrics-off) trace,
+            # so eval_shape of either the wrapper or its unjitted body would
+            # hit the cache and emit nothing. A fresh lambda is a fresh
+            # cache key: the body genuinely re-traces (abstractly — zero
+            # FLOPs, no compile) and the registry records re-fire.
+            inner = getattr(fn, "__wrapped__", fn)
+            with _attr.capture_gemms() as recs:
+                jax.eval_shape(lambda *a: inner(*a), *args)
+            if recs:
+                wl = _attr.aggregate(recs)
+                self._prefill_workloads[store_key] = wl
+                _obs.counter("gemm.attr_fallback", step=kind).inc()
+        return wl
 
     # -- serving -----------------------------------------------------------
 
@@ -199,6 +352,10 @@ class ContinuousEngine:
             kv_format=self.kv_format,
         )
         self._last_kv_bytes_per_slot = pool.kv_bytes_per_slot()
+        # Abandoned pipelines die with their serve() call (slot leases are
+        # per-pool); the prefix trie deliberately survives — warmup runs
+        # populate it for the timed runs that follow.
+        self._pending = []
 
         b = self.n_slots
         tok = jnp.zeros((b, 1), jnp.int32)
@@ -232,6 +389,8 @@ class ContinuousEngine:
         occupancy_acc = 0.0
         limit = max_steps if max_steps is not None else (
             sum(r.arrival + r.max_new_tokens for r in requests) + 10 * self.max_len
+            # chunked joins spend up to ceil(plen/W) extra ticks per request
+            + (sum(len(r.prompt) for r in requests) if self.prefill_chunk else 0)
         )
 
         while not (sched.drained and pool.n_active == 0):
@@ -246,39 +405,91 @@ class ContinuousEngine:
 
             # -- join: refill free slots from the queue ---------------------
             joined = False
+            chunked = self.prefill_chunk is not None
             while pool.n_free:
-                batch = sched.next_batch(pool.n_free, now=step)
+                admissible = None
+                if chunked and len(self._pending) >= _MAX_PENDING:
+                    # Pipeline full: only prompts whose remaining prefill
+                    # fits one chunk can still join (they complete inline,
+                    # no pipeline slot). Everything else waits — and the
+                    # scheduler's deepest-admissible-bucket fallback keeps
+                    # short arrivals flowing past the blocked head.
+                    admissible = (
+                        lambda r: self._suffix_len(r) <= self.prefill_chunk
+                    )
+                batch = sched.next_batch(
+                    pool.n_free, now=step, admissible=admissible
+                )
                 if not batch:
                     break
                 if self.temperature > 0:
                     key, sub = jax.random.split(key)
                 else:
                     sub = key  # greedy: sampling ignores the key
-                tok, pos, active, n_gen = self._join(
-                    sched, pool, batch, tok, pos, active, sub, step, on_token,
-                    sync, pending,
-                )
-                prefill_batches += 1
-                generated += n_gen  # one token per request from prefill logits
-                joined = True
-                # First token exists now (sampled from prefill logits): the
-                # join stamp closes each admitted request's TTFT window.
-                now = wall()
-                _obs.counter("serve.requests", event="admitted").inc(len(batch))
-                for r in batch:
-                    ttft = now - arrive_wall.get(r.rid, now)
-                    ttfts.append(ttft)
-                    last_tok_wall[r.rid] = now
-                    _obs.histogram("serve.ttft_seconds").observe(ttft)
-                    if sched.states[r.rid].done:  # one-token request
-                        _obs.counter("serve.requests", event="retired").inc()
+                if chunked:
+                    pj = self._begin_join(sched, pool, batch, step)
+                    if len(self._pending) < _MAX_PENDING:
+                        self._pending.append(pj)  # advances below, this tick
+                    else:
+                        # All-fast batch (admissible guaranteed it): one
+                        # chunk finishes the whole prompt set — join now.
+                        # (Loop, not a single advance: a trie eviction racing
+                        # the admissibility check can lengthen a suffix.)
+                        while not pj.all_done:
+                            self._advance_chunk(pj)
+                        tok, pos, n_gen = self._complete_join(
+                            pj, sched, pool, tok, pos, active, sub, step,
+                            on_token, sync, pending,
+                        )
+                        prefill_batches += 1
+                        generated += n_gen
+                        joined = True
+                        self._stamp_join(
+                            pj.batch, sched, wall, arrive_wall, last_tok_wall,
+                            ttfts,
+                        )
+                else:
+                    tok, pos, active, n_gen = self._join(
+                        sched, pool, batch, tok, pos, active, sub, step,
+                        on_token, sync, pending,
+                    )
+                    prefill_batches += 1
+                    generated += n_gen  # one token per request, prefill logits
+                    joined = True
+                    # First token exists now (sampled from prefill logits):
+                    # the join stamp closes each request's TTFT window.
+                    self._stamp_join(
+                        batch, sched, wall, arrive_wall, last_tok_wall, ttfts
+                    )
+
+            # -- advance the pending chunk pipeline by one chunk ------------
+            if self._pending:
+                pj = self._pending[0]
+                self._advance_chunk(pj)
+                if pj.all_done:
+                    if self.temperature > 0:
+                        key, sub = jax.random.split(key)
+                    else:
+                        sub = key
+                    tok, pos, n_gen = self._complete_join(
+                        pj, sched, pool, tok, pos, active, sub, step,
+                        on_token, sync, pending,
+                    )
+                    prefill_batches += 1
+                    generated += n_gen
+                    joined = True
+                    self._stamp_join(
+                        pj.batch, sched, wall, arrive_wall, last_tok_wall,
+                        ttfts,
+                    )
+                    self._pending.pop(0)
             if joined:
                 active_dev = jnp.asarray(active)
 
             if not any(active):
-                if sched.drained:
+                if sched.drained and not self._pending:
                     break
-                step += 1  # idle tick: wait for the next arrival
+                step += 1  # idle tick: next arrival / next pending chunk
                 continue
 
             # -- decode: one fused masked step over the whole pool ----------
@@ -292,17 +503,24 @@ class ContinuousEngine:
                 tok, pool.caches, pos = self._decode(
                     self.params, pool.caches, tok, pos, active_dev, sub
                 )
-            if step_recs:
-                # This dispatch traced (records only appear at trace time):
-                # remember the step's GEMM workload, but skip attributing
-                # this tick — its wall bracket includes trace + compile.
-                self._decode_workload = _attr.aggregate(step_recs)
+            decode_wl = self._step_workload(
+                ("decode",), self._decode,
+                (self.params, pool.caches, tok, pos, active_dev, sub),
+                step_recs, "decode",
+            )
             decode_steps += 1
             occupancy_acc += n_live / self.n_slots
             step += 1
 
             # -- evict: stream tokens, retire finished requests -------------
-            live = [s for s in pool.active_slots() if active[s]]
+            # Guard against already-retired lanes: a slot released earlier in
+            # this tick (one-token request at join) must not be swept again —
+            # the owner check plus the release return value make the sweep a
+            # no-op for such lanes instead of freeing a re-leased slot twice.
+            live = [
+                s for s in pool.active_slots()
+                if active[s] and pool.owner_of(s) is not None
+            ]
             live_rids = [pool.owner_of(s) for s in live]
             n_retired = 0
             changed = False
@@ -314,19 +532,19 @@ class ContinuousEngine:
                         on_token(rid, t)
                     generated += 1
                     if sched.record_token(rid, t, now=step):
-                        pool.release(slot)
+                        if pool.release(slot):
+                            n_retired += 1
                         active[slot] = False
                         changed = True
-                        n_retired += 1
             else:
                 pending.append((tok, list(zip(live, live_rids))))
                 for slot, rid in zip(live, live_rids):
                     generated += 1
                     if sched.record_emitted(rid, now=step):
-                        pool.release(slot)
+                        if pool.release(slot):
+                            n_retired += 1
                         active[slot] = False
                         changed = True
-                        n_retired += 1
             if changed:
                 active_dev = jnp.asarray(active)
 
@@ -334,10 +552,10 @@ class ContinuousEngine:
             # inter-token gap, queue/occupancy gauges.
             now = wall()
             _obs.histogram("serve.step_seconds").observe(now - t_step)
-            if not step_recs and self._decode_workload:
+            if decode_wl:
                 # Same host-wall caveat as ITL: on the deferred path this is
                 # dispatch cadence, on the sync path token-to-token time.
-                _attr.observe_step(self._decode_workload, now - t_step)
+                _attr.observe_step(decode_wl, now - t_step)
             for rid in live_rids:
                 prev = last_tok_wall.get(rid)
                 if prev is not None:
@@ -392,6 +610,179 @@ class ContinuousEngine:
 
     # -- internals ---------------------------------------------------------
 
+    def _stamp_join(
+        self, batch, sched, wall, arrive_wall, last_tok_wall, ttfts
+    ) -> None:
+        """Close each admitted request's TTFT window (its first token was
+        just sampled) and emit the admission counters."""
+        now = wall()
+        _obs.counter("serve.requests", event="admitted").inc(len(batch))
+        for r in batch:
+            ttft = now - arrive_wall.get(r.rid, now)
+            ttfts.append(ttft)
+            last_tok_wall[r.rid] = now
+            _obs.histogram("serve.ttft_seconds").observe(ttft)
+            if sched.states[r.rid].done:  # one-token request
+                _obs.counter("serve.requests", event="retired").inc()
+
+    def _attach_len(self, matched: int, plen: int) -> int:
+        """Usable prefix span: snap the trie match down to a chunk boundary
+        (resume offsets stay chunk-aligned — one partial chunk per prompt,
+        at the tail) and always leave >= 1 token to prefill."""
+        w = self.prefill_chunk
+        attach = (min(matched, plen - 1) // w) * w
+        return max(attach, 0)
+
+    def _suffix_len(self, r: Request) -> int:
+        """Prompt tokens left to prefill after a (hypothetical) prefix
+        attach — the admissibility measure for a full chunk pipeline."""
+        if self._trie is None:
+            return len(r.prompt)
+        _, matched = self._trie.match(r.prompt)
+        return len(r.prompt) - self._attach_len(matched, len(r.prompt))
+
+    def _begin_join(
+        self, sched: Scheduler, pool: SlotPool, batch: List[Request], step: int
+    ) -> _PendingJoin:
+        """Lease slots, build standalone caches, attach cached prefixes.
+
+        The returned pipeline advances one chunk per engine tick; the batch
+        joins the pool (and its lanes activate) only at completion.
+        """
+        lb = sched.bucket(max(len(r.prompt) for r in batch))
+        rows = 1
+        while rows < len(batch):
+            rows *= 2
+        plens = np.array([len(r.prompt) for r in batch], np.int64)
+        caches = model_api.init_state(
+            self.cfg, rows, lb, self.cache_dtype
+        )
+        offsets = np.zeros(len(batch), np.int64)
+        nodes: List[list] = [[] for _ in batch]
+        floors = None
+        if self._trie is not None:
+            floors_np = None
+            for i, r in enumerate(batch):
+                path, matched = self._trie.match(r.prompt)
+                attach = self._attach_len(matched, int(plens[i]))
+                if attach <= 0:
+                    self._trie.misses += 1
+                    _obs.counter("serve.prefix_cache.misses").inc()
+                    continue
+                self._trie.hits += 1
+                _obs.counter("serve.prefix_cache.hits").inc()
+                # Keep only the nodes the attach actually covers resident.
+                n_nodes = -(-attach // self._trie.block_size)  # ceil
+                nodes[i] = path[:n_nodes]
+                self._trie.acquire(nodes[i])
+                spans, fls = self._trie.gather(nodes[i])
+                caches = _attach_prefix(caches, spans, i, attach)
+                if fls is not None:
+                    if floors_np is None:
+                        floors_np = _zero_floors(rows, fls)
+                    for e, f in enumerate(fls):
+                        if f is not None:
+                            floors_np[e][0][:, i] = np.asarray(f[0])
+                            floors_np[e][1][:, i] = np.asarray(f[1])
+                offsets[i] = attach
+            if floors_np is not None:
+                floors = tuple(
+                    None if f is None else (jnp.asarray(f[0]), jnp.asarray(f[1]))
+                    for f in floors_np
+                )
+        slots = pool.allocate([r.rid for r in batch])
+        sched.admit(batch, slots, now=step)
+        return _PendingJoin(
+            batch=batch, slots=slots, caches=caches, rows=rows, lb=lb,
+            offsets=offsets, plens=plens, nodes=nodes, floors=floors,
+        )
+
+    def _advance_chunk(self, pj: _PendingJoin) -> None:
+        """Advance every unfinished row of ``pj`` by one prompt chunk."""
+        w = self.prefill_chunk
+        ctoks = np.zeros((pj.rows, w), np.int32)
+        # Sentinel offset = bucket length: every K/V write of that row drops
+        # and its (garbage) logits row is never selected.
+        offs = np.full((pj.rows,), pj.lb, np.int32)
+        last_idx = np.zeros((pj.rows,), np.int32)
+        fin = np.zeros((pj.rows,), bool)
+        for i, r in enumerate(pj.batch):
+            if pj.done[i]:
+                continue
+            off = int(pj.offsets[i])
+            end = min(off + w, int(pj.plens[i]))
+            offs[i] = off
+            ctoks[i, : end - off] = np.asarray(r.prompt[off:end], np.int32)
+            if end >= pj.plens[i]:
+                fin[i] = True
+                last_idx[i] = int(pj.plens[i]) - 1 - off
+            pj.offsets[i] = end
+        args = (
+            self.params, pj.caches, jnp.asarray(ctoks), jnp.asarray(offs),
+            jnp.asarray(last_idx),
+        )
+        t_ck = time.perf_counter()
+        with _attr.capture_gemms() as ck_recs:
+            logits, pj.caches = self._chunk(*args)
+        wl = self._step_workload(
+            (pj.rows, pj.lb, w), self._chunk,
+            (self.params, pj.caches) + args[2:], ck_recs, "chunk",
+        )
+        if wl:
+            _attr.observe_step(wl, time.perf_counter() - t_ck)
+        fin_dev = jnp.asarray(fin)
+        pj.first_logits = (
+            logits if pj.first_logits is None
+            else jnp.where(fin_dev[:, None], logits, pj.first_logits)
+        )
+        pj.done |= fin[: len(pj.batch)]
+
+    def _complete_join(
+        self, pj: _PendingJoin, sched: Scheduler, pool: SlotPool,
+        tok, pos, active, key, step, on_token, sync, pending,
+    ):
+        """All prompts consumed: join the pool, seed lanes, sample first
+        tokens, insert the finished prompts into the prefix trie."""
+        first = sample_token(pj.first_logits, key, self.temperature)
+        pool.join(pj.caches, pj.slots, pj.floors)
+        slot_idx = jnp.asarray(pj.slots, jnp.int32)
+        tok = tok.at[slot_idx].set(first[: len(pj.batch)])
+        pos = pos.at[slot_idx].set(
+            jnp.asarray(pj.plens[: len(pj.batch)], jnp.int32)
+        )
+        n_gen = len(pj.batch)
+        if sync:
+            first_host = np.asarray(first[:, 0])
+            for i, r in enumerate(pj.batch):
+                t = int(first_host[i])
+                if on_token is not None:
+                    on_token(r.rid, t)
+                if sched.record_token(r.rid, t, now=step):
+                    pool.release(pj.slots[i])  # one-token request
+                else:
+                    active[pj.slots[i]] = True
+        else:
+            pending.append((first, [(i, r.rid) for i, r in enumerate(pj.batch)]))
+            for i, r in enumerate(pj.batch):
+                if sched.record_emitted(r.rid, now=step):
+                    pool.release(pj.slots[i])
+                else:
+                    active[pj.slots[i]] = True
+        if self._trie is not None:
+            ev0 = self._trie.evictions
+            for i, r in enumerate(pj.batch):
+                self._trie.insert(r.prompt, int(pj.plens[i]), pj.caches, i)
+                if pj.nodes[i]:
+                    self._trie.release(pj.nodes[i])
+            if self._trie.evictions > ev0:
+                _obs.counter("serve.prefix_cache.evictions").inc(
+                    self._trie.evictions - ev0
+                )
+            _obs.gauge("serve.prefix_cache.cached_tokens").set(
+                self._trie.cached_tokens
+            )
+        return tok, pos, n_gen
+
     def _join(
         self,
         sched: Scheduler,
@@ -422,17 +813,13 @@ class ContinuousEngine:
             tokens[len(batch):] = tokens[0]
             lengths[len(batch):] = lengths[0]
 
+        args = (self.params, jnp.asarray(tokens), jnp.asarray(lengths))
         t_pf = time.perf_counter()
         with _attr.capture_gemms() as pf_recs:
-            logits, caches = self._prefill(
-                self.params, jnp.asarray(tokens), jnp.asarray(lengths)
-            )
-        if pf_recs:
-            self._prefill_workloads[(rows, lb)] = _attr.aggregate(pf_recs)
-        else:
-            wl = self._prefill_workloads.get((rows, lb))
-            if wl:
-                _attr.observe_step(wl, time.perf_counter() - t_pf)
+            logits, caches = self._prefill(*args)
+        wl = self._step_workload((rows, lb), self._prefill, args, pf_recs, "prefill")
+        if wl:
+            _attr.observe_step(wl, time.perf_counter() - t_pf)
         first = sample_token(logits, key, self.temperature)
 
         slots = pool.allocate([r.rid for r in batch])
@@ -461,3 +848,60 @@ class ContinuousEngine:
                 else:
                     active[slots[i]] = True
         return tok, pos, active, n_gen
+
+
+@functools.partial(jax.jit, donate_argnums=(0,), static_argnums=(3,))
+def _attach_prefix_jit(caches, spans, row, attach: int):
+    out = []
+    for c, sp in zip(caches, spans):
+        if sp is None or not hasattr(c, "k"):
+            out.append(c)
+            continue
+        k, v = sp
+        out.append(
+            c._replace(
+                k=jax.lax.dynamic_update_slice(
+                    c.k,
+                    k[:, :attach].astype(c.k.dtype)[:, None],
+                    (0, row, 0, 0),
+                ),
+                v=jax.lax.dynamic_update_slice(
+                    c.v,
+                    v[:, :attach].astype(c.v.dtype)[:, None],
+                    (0, row, 0, 0),
+                ),
+            )
+        )
+    return tuple(out)
+
+
+def _attach_prefix(caches, spans, row: int, attach: int):
+    """Write a gathered prefix span into one row of standalone prefill
+    caches: positions ``[0:attach]`` of every attention entry. The span may
+    run past ``attach`` (the trie matched beyond the chunk-aligned snap) —
+    the excess is simply not attached.
+
+    Donated jit: the standalone stack is freshly initialized and threaded
+    through repeated attaches, so XLA updates it in place instead of copying
+    the whole pool-sized buffer per row. ``row`` is traced (one program
+    serves every lane); compile shapes key on the span/attach bucket, like
+    the chunk-prefill programs — the decode step is untouched."""
+    return _attach_prefix_jit(caches, spans, jnp.int32(row), int(attach))
+
+
+def _zero_floors(rows: int, fls):
+    """Host-side zero scale floors, per entry ``[n_periods, rows, n_kv]`` —
+    rows that attach a quantized prefix overwrite their lane."""
+    out = []
+    for f in fls:
+        if f is None:
+            out.append(None)
+        else:
+            p, n_kv = np.asarray(f[0]).shape
+            out.append(
+                (
+                    np.zeros((p, rows, n_kv), np.float32),
+                    np.zeros((p, rows, n_kv), np.float32),
+                )
+            )
+    return out

@@ -33,6 +33,7 @@ __all__ = [
     "bucket_length",
     "gen_len_spread",
     "poisson_trace",
+    "shared_prefix_trace",
 ]
 
 
@@ -147,24 +148,51 @@ class Scheduler:
 
     # -- admission ---------------------------------------------------------
 
-    def next_batch(self, max_n: int, now: int) -> List[Request]:
-        """Pop up to ``max_n`` arrived requests sharing the head's bucket.
+    def next_batch(
+        self, max_n: int, now: int, admissible=None
+    ) -> List[Request]:
+        """Pop up to ``max_n`` arrived requests sharing one bucket.
 
-        Strict FIFO for the head-of-line request; later same-bucket arrivals
-        ride along (other buckets keep their position for the next join).
-        Returns [] when nothing has arrived or no slot is free.
+        The head-of-line request keeps strict FIFO priority whenever it is
+        admissible: the join bucket is then the head's, and same-bucket
+        arrivals ride along. But admitting *only* from the literal head
+        starved whole buckets: with the head un-admittable (e.g. its prompt
+        needs a pipeline stage that is full), arrived requests in every
+        other bucket waited behind it while slots sat free. With the head
+        blocked, admission now falls through to the **deepest non-empty
+        admissible bucket** (longest prompts first — they have the most
+        remaining work to pipeline); skipped requests keep their queue
+        position.
+
+        ``admissible`` is an optional ``Request -> bool`` predicate supplied
+        by the engine (e.g. "this prompt's remaining prefill fits the chunk
+        pipeline right now"). Returns [] when nothing admissible has arrived
+        or no slot is free.
         """
         if max_n <= 0:
             return []
+        ok = admissible if admissible is not None else (lambda r: True)
         head = next((r for r in self._queue if r.arrival <= now), None)
         if head is None:
             return []
-        want = self.bucket(len(head.prompt))
+        if ok(head):
+            want = self.bucket(len(head.prompt))
+        else:
+            candidates = [
+                r for r in self._queue if r.arrival <= now and ok(r)
+            ]
+            if not candidates:
+                return []
+            want = max(self.bucket(len(r.prompt)) for r in candidates)
         batch: List[Request] = []
         for r in list(self._queue):
             if len(batch) >= max_n:
                 break
-            if r.arrival <= now and self.bucket(len(r.prompt)) == want:
+            if (
+                r.arrival <= now
+                and self.bucket(len(r.prompt)) == want
+                and ok(r)
+            ):
                 batch.append(r)
                 self._queue.remove(r)
         return batch
@@ -238,6 +266,43 @@ def poisson_trace(
             Request(
                 rid=rid,
                 prompt=[int(x) for x in rng.integers(0, vocab, plen)],
+                max_new_tokens=int(rng.choice(gen_lens)),
+                arrival=int(t),
+            )
+        )
+    return out
+
+
+def shared_prefix_trace(
+    n_requests: int,
+    *,
+    seed: int = 0,
+    vocab: int = 256,
+    prefix_len: int = 96,
+    tail_lens: Sequence[int] = (8, 12, 16),
+    gen_lens: Sequence[int] = (4, 8, 12),
+    mean_interarrival: float = 0.0,
+) -> List[Request]:
+    """Poisson-ish trace where every prompt opens with one shared system
+    prompt of ``prefix_len`` tokens followed by a unique per-request tail —
+    the chat-serving shape the prefix cache exists for. Request 0 pays the
+    cold prefill; once its blocks are inserted, every later join resumes
+    from the cached prefix and chunk-prefills only its tail."""
+    import numpy as np
+
+    rng = np.random.default_rng(seed)
+    prefix = [int(x) for x in rng.integers(0, vocab, prefix_len)]
+    t = 0.0
+    out = []
+    for rid in range(n_requests):
+        if mean_interarrival > 0:
+            t += rng.exponential(mean_interarrival)
+        tail_len = int(rng.choice(tail_lens))
+        tail = [int(x) for x in rng.integers(0, vocab, tail_len)]
+        out.append(
+            Request(
+                rid=rid,
+                prompt=prefix + tail,
                 max_new_tokens=int(rng.choice(gen_lens)),
                 arrival=int(t),
             )

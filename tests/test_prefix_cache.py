@@ -1,0 +1,264 @@
+"""Radix prefix-cache invariants + quantized scale-adoption exactness.
+
+Two layers of coverage:
+
+* property tests (hypothesis, skipped gracefully when the ``test`` extra
+  isn't installed) over the trie: longest-prefix match, block alignment,
+  refcount residency, LRU eviction to capacity;
+* deterministic seeded versions of the same invariants plus the quantized
+  round-trip: a cached prefix re-quantized under its adopted scale floor
+  must reproduce its narrow codes **bitwise** (``cast(q * s / s) == q``),
+  so attaching a cached prefix to a fresh slot never adds drift on top of
+  the one quantization the cold path already paid.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import KVCache
+from repro.quant.kvcache import adopt_scale_floor, quantize_kv_rows
+from repro.quant.quantize import format_of
+from repro.serve import PrefixCache
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_fallback import given, settings, st
+
+
+N_PERIODS = 2
+FUSED = 8  # n_kv=2 heads * head_dim=4
+N_KV = 2
+
+
+def _prefill_stack(seed, lb, rows=1, scale=1.0):
+    """Standalone prefill cache stack: one KVCache entry + one None slot
+    (mirrors a pattern with a non-attention position)."""
+    rng = np.random.default_rng(seed)
+    shape = (N_PERIODS, rows, lb, FUSED)
+    k = jnp.asarray(rng.normal(size=shape) * scale, jnp.float32)
+    v = jnp.asarray(rng.normal(size=shape) * scale, jnp.float32)
+    return (
+        KVCache(k=k, v=v, length=jnp.zeros((rows,), jnp.int32)),
+        None,
+    )
+
+
+def _prompt(rng, n, vocab=64):
+    return [int(x) for x in rng.integers(0, vocab, n)]
+
+
+# ---------------------------------------------------------------------------
+# trie invariants (property + deterministic)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    st.integers(min_value=0, max_value=2**31 - 1),
+    st.integers(min_value=1, max_value=40),
+    st.integers(min_value=2, max_value=8),
+)
+def test_match_block_aligned_and_capped(seed, plen, bs):
+    """match() returns a whole-block prefix length that always leaves >= 1
+    prompt token to prefill, regardless of what was inserted."""
+    rng = np.random.default_rng(seed)
+    trie = PrefixCache(block_size=bs, capacity_tokens=1 << 12)
+    toks = _prompt(rng, plen)
+    trie.insert(toks, plen, _prefill_stack(seed, plen), 0)
+    path, matched = trie.match(toks)
+    assert matched % bs == 0
+    assert matched <= len(toks) - 1  # never the whole prompt
+    assert matched == min((plen // bs) * bs, ((len(toks) - 1) // bs) * bs)
+    assert len(path) == matched // bs
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    st.integers(min_value=0, max_value=2**31 - 1),
+    st.integers(min_value=2, max_value=6),
+)
+def test_shared_prefix_unique_tails_share_blocks(seed, n_tails):
+    """Prompts diverging after a shared prefix match exactly the shared
+    whole blocks; inserting them re-creates no shared block (first writer
+    wins)."""
+    rng = np.random.default_rng(seed)
+    bs = 4
+    trie = PrefixCache(block_size=bs, capacity_tokens=1 << 12)
+    prefix = _prompt(rng, 3 * bs)
+    first = prefix + _prompt(rng, 5)
+    created = trie.insert(first, len(first), _prefill_stack(seed, 32), 0)
+    assert created == len(first) // bs
+    for j in range(n_tails):
+        p = prefix + [100 + j] * 5  # tails outside the vocab: never shared
+        path, matched = trie.match(p)
+        assert matched >= len(prefix)
+        n0 = trie.n_nodes
+        trie.insert(p, len(p), _prefill_stack(seed + j + 1, 32), 0)
+        # only the tail's whole blocks are new
+        assert trie.n_nodes - n0 == len(p) // bs - matched // bs
+
+
+def test_trie_deterministic_match_and_insert():
+    rng = np.random.default_rng(0)
+    trie = PrefixCache(block_size=4, capacity_tokens=1 << 12)
+    toks = _prompt(rng, 13)
+    stack = _prefill_stack(1, 16)
+    assert trie.match(toks) == ([], 0)
+    assert trie.misses == 0  # engine-side counter, not bumped by match()
+    created = trie.insert(toks, 13, stack, 0)
+    assert created == 3 and trie.cached_tokens == 12
+    _, matched = trie.match(toks)
+    assert matched == 12
+    # a 12-token prompt sharing those blocks must keep one token to prefill
+    _, matched = trie.match(toks[:12])
+    assert matched == 8
+    # divergent second block: only the first block matches
+    other = toks[:4] + [99] * 9
+    _, matched = trie.match(other)
+    assert matched == 4
+    # re-insert is a no-op (first writer wins)
+    assert trie.insert(toks, 13, _prefill_stack(2, 16), 0) == 0
+
+
+def test_refcount_blocks_eviction_release_enables_it():
+    rng = np.random.default_rng(3)
+    bs = 4
+    trie = PrefixCache(block_size=bs, capacity_tokens=2 * bs)  # 2 blocks max
+    a = _prompt(rng, 2 * bs + 1)
+    trie.insert(a, len(a), _prefill_stack(0, 16), 0)
+    path, matched = trie.match(a)
+    assert matched == 2 * bs
+    trie.acquire(path)
+    # inserting another prompt overflows capacity; a's blocks are pinned, so
+    # the sweep can only reclaim b's own (refcount-0) blocks.
+    b = [200 + t for t in _prompt(rng, 2 * bs + 1)]
+    trie.insert(b, len(b), _prefill_stack(1, 16), 0)
+    assert trie.match(a)[1] == 2 * bs  # survived while referenced
+    assert trie.match(b)[1] < 2 * bs  # b paid the eviction instead
+    assert trie.cached_tokens <= trie.capacity_tokens
+    assert trie.evictions > 0
+    trie.release(path)
+    # with a released (and now LRU after b is refreshed), a's blocks go next
+    trie.match(b)  # refresh whatever of b survived
+    c = [400 + t for t in _prompt(rng, 2 * bs + 1)]
+    trie.insert(c, len(c), _prefill_stack(2, 16), 0)
+    assert trie.cached_tokens <= trie.capacity_tokens
+    assert trie.match(a)[1] < 2 * bs  # at least one of a's blocks evicted
+    # releasing more than acquired is a bug, not a no-op
+    with pytest.raises(AssertionError):
+        trie.release(path)
+
+
+def test_gather_fp_roundtrip_exact():
+    rng = np.random.default_rng(7)
+    trie = PrefixCache(block_size=4, capacity_tokens=1 << 12)
+    toks = _prompt(rng, 9)
+    stack = _prefill_stack(5, 16)
+    trie.insert(toks, 9, stack, 0)
+    path, matched = trie.match(toks)
+    assert matched == 8
+    spans, floors = trie.gather(path)
+    assert floors is None and spans[1] is None
+    k, v = spans[0]
+    np.testing.assert_array_equal(np.asarray(k), np.asarray(stack[0].k[:, 0, :8]))
+    np.testing.assert_array_equal(np.asarray(v), np.asarray(stack[0].v[:, 0, :8]))
+
+
+# ---------------------------------------------------------------------------
+# quantized prefix: scale adoption is bitwise-exact
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(min_value=0, max_value=2**31 - 1))
+def test_scale_adoption_roundtrip_bitwise(seed):
+    """cast(q * s / s) == q: re-quantizing a dequantized span under its
+    original scale as a floor reproduces the codes exactly whenever the
+    floor dominates the fresh calibration."""
+    _assert_adoption_roundtrip(seed)
+
+
+def test_scale_adoption_roundtrip_bitwise_deterministic():
+    for seed in (0, 1, 2, 3):
+        _assert_adoption_roundtrip(seed)
+
+
+def _assert_adoption_roundtrip(seed):
+    rng = np.random.default_rng(seed)
+    span, tail = 8, 4
+    kf = jnp.asarray(rng.normal(size=(1, span, FUSED)), jnp.float32)
+    vf = jnp.asarray(rng.normal(size=(1, span, FUSED)), jnp.float32)
+    k_q, v_q, k_s, v_s = quantize_kv_rows(kf, vf, N_KV, fmt="int8")
+    # dequantized span + a small-magnitude suffix: fresh amax can't beat the
+    # floor, so the adopted scale is exactly the prefix's.
+    f = format_of("int8")
+
+    def deq(q, s):
+        b, sp, fused = q.shape
+        x = q.reshape(b, sp, N_KV, fused // N_KV).astype(jnp.float32)
+        return (x * s[:, None, :, None]).reshape(b, sp, fused)
+
+    k_full = jnp.concatenate(
+        [deq(k_q, k_s), jnp.full((1, tail, FUSED), 1e-4, jnp.float32)], axis=1
+    )
+    v_full = jnp.concatenate(
+        [deq(v_q, v_s), jnp.full((1, tail, FUSED), 1e-4, jnp.float32)], axis=1
+    )
+    k_q2, v_q2, k_s2, v_s2 = quantize_kv_rows(
+        k_full, v_full, N_KV, fmt="int8",
+        k_scale_floor=k_s, v_scale_floor=v_s,
+    )
+    np.testing.assert_array_equal(np.asarray(k_s2), np.asarray(k_s))
+    np.testing.assert_array_equal(np.asarray(v_s2), np.asarray(v_s))
+    np.testing.assert_array_equal(
+        np.asarray(k_q2[:, :span]), np.asarray(k_q)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(v_q2[:, :span]), np.asarray(v_q)
+    )
+    assert f.dtype == k_q2.dtype
+
+
+def test_quant_trie_gather_floors_and_codes():
+    """End-to-end through the quantized trie: gather's floors are the span
+    scales, and re-quantizing the gathered (dequantized) span under those
+    floors reproduces the stored narrow codes bitwise."""
+    rng = np.random.default_rng(11)
+    trie = PrefixCache(
+        block_size=4, capacity_tokens=1 << 12, kv_format="int8", n_kv=N_KV
+    )
+    toks = _prompt(rng, 9)
+    stack = _prefill_stack(9, 16, scale=3.0)
+    trie.insert(toks, 9, stack, 0)
+    path, matched = trie.match(toks)
+    assert matched == 8
+    spans, floors = trie.gather(path)
+    assert floors is not None and floors[1] is None
+    (k, v), (k_fl, v_fl) = spans[0], floors[0]
+    assert k_fl.shape == (N_PERIODS, N_KV)
+    # floor adoption: quantize the gathered span per period under the floor
+    f = format_of("int8")
+    for p in range(N_PERIODS):
+        k_q2, _, k_s2, _ = quantize_kv_rows(
+            k[p][None], v[p][None], N_KV, fmt="int8",
+            k_scale_floor=k_fl[p][None], v_scale_floor=v_fl[p][None],
+        )
+        want = jnp.concatenate([n.payload[0][0][p] for n in path], axis=0)
+        np.testing.assert_array_equal(np.asarray(k_q2[0]), np.asarray(want))
+        np.testing.assert_array_equal(np.asarray(k_s2[0]), np.asarray(k_fl[p]))
+
+
+def test_adopt_scale_floor_broadcast():
+    s = jnp.asarray([[0.5, 2.0], [1.0, 4.0]], jnp.float32)  # [P=2, n_kv=2]
+    out = adopt_scale_floor(s, 3)
+    assert out.shape == (2, 3, 2)
+    np.testing.assert_array_equal(np.asarray(out[:, 1]), np.asarray(s))
+
+
+def test_quant_trie_requires_n_kv():
+    with pytest.raises(ValueError):
+        PrefixCache(kv_format="int8")

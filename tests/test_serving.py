@@ -27,6 +27,7 @@ from repro.serve import (
     SlotPool,
     bucket_length,
     poisson_trace,
+    shared_prefix_trace,
 )
 
 KEY = jax.random.key(0)
@@ -123,6 +124,137 @@ def test_continuous_streams_and_stops_on_eos():
         assert got == report.outputs[r.rid]
 
 
+def test_continuous_chunked_prefill_matches_greedy():
+    """Chunked prefill alone (no prefix cache): token-for-token agreement
+    with the monolithic-prefill engine, one compiled decode program."""
+    cfg = ARCHS["chatglm3-6b"].reduced()
+    params = api.init_params(cfg, KEY)
+    specs = [(7, 5, 0), (23, 6, 0), (12, 4, 2), (30, 5, 4)]
+    requests = _trace(cfg, specs)
+    base = ContinuousEngine(cfg=cfg, params=params, n_slots=2, max_len=48,
+                            cache_dtype=jnp.float32)
+    want = base.serve(requests).outputs
+
+    eng = ContinuousEngine(cfg=cfg, params=params, n_slots=2, max_len=48,
+                           cache_dtype=jnp.float32, prefill_chunk=8)
+    report = eng.serve(requests)
+    assert report.outputs == want
+    n = eng.decode_compilations()
+    if n is not None:
+        assert n == 1
+
+
+def test_continuous_prefix_cache_matches_greedy_and_hits():
+    """Prefix cache + chunked prefill on a shared-system-prompt trace:
+    bitwise-identical greedy tokens vs the features-off engine, cache hits
+    observed, decode still compiles exactly once."""
+    cfg = ARCHS["chatglm3-6b"].reduced()
+    params = api.init_params(cfg, KEY)
+    requests = shared_prefix_trace(
+        6, seed=3, vocab=cfg.vocab, prefix_len=48, tail_lens=(5, 9),
+        gen_lens=(4, 6), mean_interarrival=1.0,
+    )
+    base = ContinuousEngine(cfg=cfg, params=params, n_slots=3, max_len=96,
+                            cache_dtype=jnp.float32)
+    want = base.serve(requests).outputs
+
+    eng = ContinuousEngine(
+        cfg=cfg, params=params, n_slots=3, max_len=96,
+        cache_dtype=jnp.float32, prefill_chunk=16, prefix_cache=True,
+        prefix_block=16,
+    )
+    report = eng.serve(requests)
+    assert report.outputs == want  # bitwise greedy agreement, cache on vs off
+    n = eng.decode_compilations()
+    if n is not None:
+        assert n == 1  # joins resumed from cache never recompiled decode
+    stats = eng.prefix_cache_stats()
+    assert stats["hits"] > 0 and stats["misses"] >= 1
+    assert stats["cached_tokens"] > 0
+
+
+def test_continuous_quant_pool_prefix_cache_serves():
+    """Quantized slot pool + quantized prefix trie: the run completes with
+    hits and the cold request (no cached prefix exists yet) matches the
+    cache-off engine exactly — later requests adopt the prefix's original
+    scales, which legitimately differ from a fresh whole-prompt
+    calibration, so their tokens are compared only for shape."""
+    cfg = ARCHS["chatglm3-6b"].reduced()
+    params = api.init_params(cfg, KEY)
+    requests = shared_prefix_trace(
+        4, seed=5, vocab=cfg.vocab, prefix_len=32, tail_lens=(5, 7),
+        gen_lens=(4,), mean_interarrival=2.0,
+    )
+    base = ContinuousEngine(cfg=cfg, params=params, n_slots=2, max_len=64,
+                            cache_dtype=jnp.float32, kv_format="int8")
+    want = base.serve(requests).outputs
+
+    eng = ContinuousEngine(
+        cfg=cfg, params=params, n_slots=2, max_len=64,
+        cache_dtype=jnp.float32, kv_format="int8",
+        prefill_chunk=16, prefix_cache=True, prefix_block=16,
+    )
+    report = eng.serve(requests)
+    assert report.outputs[0] == want[0]  # cold request: identical path
+    assert {r: len(t) for r, t in report.outputs.items()} == {
+        r: len(t) for r, t in want.items()
+    }
+    assert eng.prefix_cache_stats()["hits"] > 0
+
+
+def test_chunked_prefill_env_knobs_and_validation():
+    cfg = ARCHS["chatglm3-6b"].reduced()
+    params = api.init_params(cfg, KEY)
+    with pytest.raises(ValueError):
+        ContinuousEngine(cfg=cfg, params=params, n_slots=2, max_len=32,
+                         prefill_chunk=12)  # not a power of two
+    env = {"REPRO_PREFILL_CHUNK": "16", "REPRO_PREFIX_CACHE": "1"}
+    old = {k: os.environ.get(k) for k in env}
+    os.environ.update(env)
+    try:
+        eng = ContinuousEngine(cfg=cfg, params=params, n_slots=2, max_len=32)
+        assert eng.prefill_chunk == 16 and eng.prefix_cache
+    finally:
+        for k, v in old.items():
+            os.environ.pop(k, None) if v is None else os.environ.update({k: v})
+    # prefix cache alone implies a default chunk width
+    eng = ContinuousEngine(cfg=cfg, params=params, n_slots=2, max_len=32,
+                           prefix_cache=True)
+    assert eng.prefill_chunk is not None
+    # recurrent mixers can't resume mid-prompt: both features disable
+    with pytest.warns(RuntimeWarning, match="attention-only"):
+        eng = ContinuousEngine(
+            cfg=ARCHS["jamba-v0.1-52b"].reduced(), params=None,
+            n_slots=2, max_len=32, prefill_chunk=8, prefix_cache=True,
+        )
+    assert eng.prefill_chunk is None and not eng.prefix_cache
+
+
+def test_attr_fallback_recaptures_untraced_step():
+    """A compiled step whose trace ran while metrics were off must not
+    silently attribute zero GEMM-seconds forever: the engine re-captures
+    its workload via jax.eval_shape and counts on gemm.attr_fallback."""
+    from repro import obs
+
+    cfg = ARCHS["chatglm3-6b"].reduced()
+    params = api.init_params(cfg, KEY)
+    eng = ContinuousEngine(cfg=cfg, params=params, n_slots=2, max_len=32,
+                           cache_dtype=jnp.float32)
+    requests = _trace(cfg, [(7, 4, 0), (12, 4, 1)])
+    prev = obs.set_enabled(False)
+    try:
+        eng.serve(requests)  # traces + compiles with capture recording off
+    finally:
+        obs.set_enabled(prev)
+    assert eng._prefill_workloads == {}  # nothing attributed while off
+
+    obs.reset()
+    eng.serve(_trace(cfg, [(7, 4, 0), (12, 4, 1)], seed=11))
+    assert ("decode",) in eng._prefill_workloads  # re-captured via eval_shape
+    snap = obs.snapshot()["counters"].get("gemm.attr_fallback", {})
+    assert sum(snap.values()) >= 1
+
+
 def test_decode_at_matches_decode_lockstep():
     cfg = ARCHS["qwen2.5-32b"].reduced()  # qkv_bias: bias-preload decode path
     params = api.init_params(cfg, KEY)
@@ -185,13 +317,20 @@ def test_slot_pool_lease_bookkeeping():
     slots = pool.allocate(["a", "b"])
     assert slots == [0, 1] and pool.n_free == 1
     assert pool.owner_of(0) == "a" and pool.active_slots() == [0, 1]
-    pool.release(0)
+    assert pool.release(0) is True
     assert pool.n_free == 2 and pool.owner_of(0) is None
     assert pool.allocate(["c"]) == [0]  # recycled lowest slot first
     with pytest.raises(RuntimeError):
         pool.allocate(["d", "e", "f"])  # only 1 free
+    # releasing a free (never- or already-released) slot is an idempotent
+    # no-op — the evict sweep may race a same-tick retire — but an
+    # out-of-range slot is a caller bug and still raises.
+    assert pool.release(2) is False  # never leased
+    assert pool.release(0) is True
+    assert pool.release(0) is False  # double release: no-op, slot not re-freed
+    assert pool.n_free == 2
     with pytest.raises(KeyError):
-        pool.release(2)  # never leased
+        pool.release(17)  # out of range
 
 
 def test_slot_pool_join_scatters_only_target_slots():
@@ -254,6 +393,73 @@ def test_scheduler_fifo_bucketed_admission():
     b3 = sched.next_batch(4, now=0)
     assert [r.rid for r in b3] == [3]
     assert sched.next_batch(4, now=0) == []
+
+
+def test_scheduler_unadmittable_head_falls_through_to_deepest_bucket():
+    """Starvation regression: an un-admittable head-of-line request must not
+    pin arrived requests of other buckets behind it while slots sit free.
+    Admission falls through to the deepest non-empty admissible bucket; the
+    blocked head keeps its queue position."""
+    cfg = ARCHS["chatglm3-6b"].reduced()
+    reqs = [
+        Request(rid=0, prompt=[1] * 30, max_new_tokens=4),  # bucket 32 (head)
+        Request(rid=1, prompt=[1] * 6, max_new_tokens=4),   # bucket 8
+        Request(rid=2, prompt=[1] * 12, max_new_tokens=4),  # bucket 16
+        Request(rid=3, prompt=[1] * 7, max_new_tokens=4),   # bucket 8
+    ]
+    sched = _mk_sched(cfg, reqs)
+    blocked = lambda r: len(r.prompt) <= 16  # head (30) not admissible
+    b1 = sched.next_batch(4, now=0, admissible=blocked)
+    assert [r.rid for r in b1] == [2]  # deepest admissible bucket (16) first
+    b2 = sched.next_batch(4, now=0, admissible=blocked)
+    assert [r.rid for r in b2] == [1, 3]
+    # head becomes admissible again: strict FIFO resumes
+    b3 = sched.next_batch(4, now=0)
+    assert [r.rid for r in b3] == [0]
+
+
+def test_scheduler_no_starvation_ticks():
+    """Simulated engine tick loop: at every tick with a free slot and at
+    least one arrived admissible request, admission must make progress —
+    the free-slots-while-admissible-queue-waits tick count stays zero."""
+    cfg = ARCHS["chatglm3-6b"].reduced()
+    rng = np.random.default_rng(2)
+    reqs = [
+        Request(
+            rid=i, prompt=[1] * int(rng.choice([6, 12, 25, 30])),
+            max_new_tokens=2, arrival=int(rng.integers(0, 6)),
+        )
+        for i in range(12)
+    ]
+    sched = _mk_sched(cfg, reqs)
+    free = 3
+    in_flight = []  # (rid, ticks_left)
+    admissible = lambda r: len(r.prompt) <= 16  # long prompts never admit
+    n_admissible = sum(1 for r in reqs if admissible(r))
+    starved_ticks = 0
+    done = 0
+    for now in range(200):
+        while free > 0:
+            batch = sched.next_batch(free, now, admissible=admissible)
+            if not batch:
+                break
+            free -= len(batch)
+            in_flight.extend((r.rid, 2) for r in batch)
+        waiting = sum(
+            1 for r in sched._queue if r.arrival <= now and admissible(r)
+        )
+        if free > 0 and waiting:
+            starved_ticks += 1
+        nxt = []
+        for rid, left in in_flight:
+            if left - 1 == 0:
+                free += 1
+                done += 1
+            else:
+                nxt.append((rid, left - 1))
+        in_flight = nxt
+    assert starved_ticks == 0
+    assert done == n_admissible  # every admissible request ran to completion
 
 
 def test_scheduler_arrival_gating_and_eviction():
