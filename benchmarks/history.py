@@ -78,9 +78,15 @@ DEFAULT_TOLERANCES: List[Tolerance] = [
     Tolerance("*occupancy*", "higher", 0.05),
     Tolerance("*kv_bytes_ratio*", "higher", 0.05),
     Tolerance("*speedup_tokens_per_step*", "higher", 0.05),
+    # goodput is a fraction of requests meeting deliberately generous SLOs;
+    # it should sit at ~1.0 — a big drop means a latency cliff, not jitter
+    Tolerance("*goodput*", "higher", 0.9),
     # wall-clock — generous (machine-to-machine variance is real)
     Tolerance("gflops_tuned/*", "higher", 0.9),
     Tolerance("gflops_heuristic/*", "higher", 0.9),
+    Tolerance("*queue_p*", "lower", 9.0),
+    Tolerance("*attach_p*", "lower", 9.0),
+    Tolerance("*chunk_prefill_p*", "lower", 9.0),
     Tolerance("*ttft_p99*", "lower", 9.0),
     Tolerance("*ttft_p50*", "lower", 9.0),
     Tolerance("*itl_p99*", "lower", 9.0),

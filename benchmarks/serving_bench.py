@@ -29,6 +29,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import time
 from typing import Dict, List
 
@@ -40,6 +41,12 @@ try:  # package layout (benchmarks.serving_bench) vs direct script run
 except ImportError:  # pragma: no cover - script-mode fallback
     from run import bench_meta
     import history as bench_history
+
+# Deadline SLOs for goodput accounting. Deliberately generous for a CPU CI
+# box — the gated signal is "goodput stays ~1.0 under these objectives",
+# i.e. no request falls off a latency cliff, not a hardware-tuned target.
+SLO_TTFT_MS = 5000.0
+SLO_ITL_MS = 2000.0
 
 
 def run_static(engine, requests, n_slots: int) -> Dict:
@@ -102,6 +109,14 @@ def _report_row(name: str, report, engine) -> Dict:
         "ttft_p99": report.ttft_p99,
         "itl_p50": report.itl_p50,
         "itl_p99": report.itl_p99,
+        "goodput": report.goodput,
+        "queue_p50": report.queue_p50,
+        "queue_p99": report.queue_p99,
+        "attach_p50": report.attach_p50,
+        "attach_p99": report.attach_p99,
+        "chunk_prefill_p50": report.chunk_prefill_p50,
+        "chunk_prefill_p99": report.chunk_prefill_p99,
+        "slot_hwm": report.slot_hwm,
     }
 
 
@@ -163,6 +178,7 @@ def bench_serving(
     cont_eng = ContinuousEngine(
         cfg=cfg, params=params, n_slots=n_slots, max_len=max_len,
         cache_dtype=cache_dtype,
+        slo_ttft_ms=SLO_TTFT_MS, slo_itl_ms=SLO_ITL_MS,
     )
     if warmup:
         # Replay the full trace once first: both engines hit every compiled
@@ -225,11 +241,13 @@ def bench_prefix_cache(
     off_eng = ContinuousEngine(
         cfg=cfg, params=params, n_slots=n_slots, max_len=max_len,
         cache_dtype=jnp.float32, prefill_chunk=None, prefix_cache=False,
+        slo_ttft_ms=SLO_TTFT_MS, slo_itl_ms=SLO_ITL_MS,
     )
     on_eng = ContinuousEngine(
         cfg=cfg, params=params, n_slots=n_slots, max_len=max_len,
         cache_dtype=jnp.float32, prefill_chunk=chunk, prefix_cache=True,
         prefix_block=chunk,
+        slo_ttft_ms=SLO_TTFT_MS, slo_itl_ms=SLO_ITL_MS,
     )
     if warmup:
         # One full replay each: every compiled shape (prefill buckets, chunk
@@ -240,7 +258,14 @@ def bench_prefix_cache(
         on_eng.timed_serve(trace)
 
     off_rep = off_eng.timed_serve(trace)
+    # The timed cache-on run doubles as the trace-export fixture: reset the
+    # lifecycle recorder so the exported timeline holds exactly this run's
+    # spans, then check each request's phase chain sums to its TTFT sample.
+    from repro.obs import tracing
+
+    tracing.reset()
     on_rep = on_eng.timed_serve(trace)
+    decomposition, chrome = trace_decomposition(tracing.snapshot())
     off = _report_row("cache_off", off_rep, off_eng)
     on = _report_row("cache_on", on_rep, on_eng)
     on["prefix_cache"] = on_eng.prefix_cache_stats()
@@ -263,7 +288,46 @@ def bench_prefix_cache(
             on["ttft_p50"] / off["ttft_p50"]
             if on["ttft_p50"] and off["ttft_p50"] else None
         ),
+        "trace_decomposition": decomposition,
+        "_chrome_trace": chrome,  # popped by main(), written to --trace-out
     }
+
+
+def trace_decomposition(snap: Dict) -> tuple:
+    """Validate the exported timeline against the engine's own latency
+    accounting: for every retired request, the pre-decode phase durations
+    (queue + prefix_attach + chunk_prefill, or queue + prefill) must sum to
+    the ``ttft_s`` stamped on its first-token instant — the exact value the
+    engine observed into ``serve.ttft_seconds``. Returns
+    ``({"requests", "max_abs_err_ms", "enabled"}, chrome_doc)``; the chrome
+    doc is structurally validated too (span pairing, non-negative dur)."""
+    from repro.obs import tracing
+
+    if not snap.get("requests"):
+        return {"requests": 0, "max_abs_err_ms": None,
+                "enabled": tracing.enabled()}, None
+    pre = ("queue", "prefix_attach", "chunk_prefill", "prefill")
+    max_err = 0.0
+    checked = 0
+    for req in snap["requests"]:
+        ft = next(
+            (i for i in req["instants"] if i["name"] == "first_token"), None
+        )
+        if ft is None:
+            continue
+        total = sum(
+            p["t1"] - p["t0"] for p in req["phases"]
+            if p["name"] in pre and p["t1"] is not None
+        )
+        max_err = max(max_err, abs(total - ft["ttft_s"]))
+        checked += 1
+    chrome = tracing.chrome_trace(snap)
+    tracing.validate_chrome_trace(chrome)
+    return {
+        "requests": checked,
+        "max_abs_err_ms": max_err * 1e3,
+        "enabled": True,
+    }, chrome
 
 
 def history_metrics(result: Dict, prefix: Dict = None) -> Dict:
@@ -278,6 +342,10 @@ def history_metrics(result: Dict, prefix: Dict = None) -> Dict:
         "continuous.ttft_p99": c["ttft_p99"],
         "continuous.itl_p50": c["itl_p50"],
         "continuous.itl_p99": c["itl_p99"],
+        "continuous.goodput": c.get("goodput"),
+        "continuous.queue_p50": c.get("queue_p50"),
+        "continuous.queue_p99": c.get("queue_p99"),
+        "continuous.slot_hwm": c.get("slot_hwm"),
         "speedup_tokens_per_step": result["speedup_tokens_per_step"],
         "occupancy_gain": result["occupancy_gain"],
     }
@@ -290,6 +358,8 @@ def history_metrics(result: Dict, prefix: Dict = None) -> Dict:
             "prefix.tokens_per_sec_on": on["tokens_per_sec"],
             "prefix.greedy_agreement": prefix["greedy_agreement"],
             "prefix.hits": (on.get("prefix_cache") or {}).get("hits"),
+            "prefix.goodput_on": on.get("goodput"),
+            "prefix.attach_p50_on": on.get("attach_p50"),
         })
     return row
 
@@ -307,6 +377,10 @@ def main() -> None:
     ap.add_argument("--max-len", type=int, default=160)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default="BENCH_serving.json")
+    ap.add_argument("--trace-out", default=None,
+                    help="Chrome trace-event timeline of the timed cache-on "
+                    "run (load in Perfetto / chrome://tracing); default: "
+                    "<--out stem>_trace.json, next to --out")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny trace for CI (still asserts the win)")
     ap.add_argument("--history-dir", default=bench_history.HISTORY_DIR,
@@ -333,9 +407,18 @@ def main() -> None:
         )
     )
     prefix = bench_prefix_cache(args.arch, seed=args.seed, **pkw)
+    chrome = prefix.pop("_chrome_trace", None)
     result["prefix_cache"] = prefix
     with open(args.out, "w") as f:
         json.dump(result, f, indent=2)
+    trace_out = args.trace_out or (
+        os.path.splitext(args.out)[0] + "_trace.json"
+    )
+    if chrome is not None:
+        with open(trace_out, "w") as f:
+            json.dump(chrome, f)
+        print(f"[serving_bench] chrome trace "
+              f"({len(chrome['traceEvents'])} events) -> {trace_out}")
     if not args.no_history:
         hist = bench_history.append_row(
             "serving", history_metrics(result, prefix), result["meta"],
@@ -363,6 +446,11 @@ def main() -> None:
           f"{_ms(poff['ttft_p50'])} -> {_ms(pon['ttft_p50'])} ms, "
           f"{stats.get('hits', 0)} hits, greedy agreement "
           f"{prefix['greedy_agreement']:.2f}")
+    decomp = prefix.get("trace_decomposition") or {}
+    if decomp.get("requests"):
+        print(f"  trace decomposition: {decomp['requests']} requests, "
+              f"phase-sum vs ttft max err "
+              f"{decomp['max_abs_err_ms']:.4f} ms")
     if not (
         result["speedup_tokens_per_step"] > 1.0
         and result["occupancy_gain"] > 0.0
@@ -376,6 +464,19 @@ def main() -> None:
         and pon["ttft_p50"] < poff["ttft_p50"]
     ):
         raise SystemExit("prefix cache did not improve TTFT p50")
+    if decomp.get("enabled"):
+        # The exported timeline must agree with the engine's own latency
+        # accounting: each request's pre-decode phases sum to its TTFT sample.
+        if not decomp.get("requests"):
+            raise SystemExit(
+                "tracing enabled but no requests carried a first_token "
+                "instant — trace export is broken"
+            )
+        if decomp["max_abs_err_ms"] > 1.0:
+            raise SystemExit(
+                f"trace phase decomposition drifted from measured TTFT: "
+                f"max err {decomp['max_abs_err_ms']:.3f} ms > 1 ms"
+            )
 
 
 if __name__ == "__main__":

@@ -96,6 +96,14 @@ def _continuous(cfg, params, args) -> None:
         "latency", ttft_p50_s=report.ttft_p50, ttft_p99_s=report.ttft_p99,
         itl_p50_s=report.itl_p50, itl_p99_s=report.itl_p99,
     )
+    log.info(
+        "phases", queue_p50_s=report.queue_p50, queue_p99_s=report.queue_p99,
+        attach_p50_s=report.attach_p50,
+        chunk_prefill_p50_s=report.chunk_prefill_p50,
+        slot_hwm=report.slot_hwm,
+    )
+    if report.goodput is not None:
+        log.info("goodput", fraction=report.goodput)
     if report.kv_bytes_per_slot:
         log.info(
             "kv_cache", format=args.kv_format or "full-width",
@@ -103,7 +111,7 @@ def _continuous(cfg, params, args) -> None:
         )
     first = trace[0]
     log.info(
-        "first_request", prompt_tokens=len(first.prompt),
+        "first_request", uid=first.uid, prompt_tokens=len(first.prompt),
         output=str(report.outputs[first.rid]),
     )
 
@@ -130,21 +138,45 @@ def main() -> None:
                     help="continuous engine: narrow K/V lanes (~4x less "
                     "cache memory per slot)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--linger-seconds", type=float, default=0.0,
+                    help="keep the process (and its REPRO_METRICS_PORT "
+                    "scrape server) alive this long after the run, so "
+                    "/metrics, /requests and /trace can be curled against "
+                    "the frozen registry (Ctrl-C/SIGINT ends the linger "
+                    "early but still runs the atexit dump hooks)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
 
+    log = obs.get_logger("serve")
+    server = obs.http.maybe_serve_from_env()
+    if server is not None:
+        log.info(
+            "metrics_server", port=server.port,
+            endpoints="/metrics /requests /trace",
+        )
+
     params = api.init_params(cfg, jax.random.key(args.seed))
     if args.engine == "static" or cfg.family in ("audio", "vlm"):
         if args.engine == "continuous":
-            obs.get_logger("serve").info(
-                "engine_fallback", family=cfg.family, engine="static"
-            )
+            log.info("engine_fallback", family=cfg.family, engine="static")
         _static(cfg, params, args)
     else:
         _continuous(cfg, params, args)
+
+    if args.linger_seconds > 0 and server is not None:
+        # The run is done and nothing mutates the registry anymore: what
+        # /metrics serves now is byte-identical to what REPRO_METRICS_DUMP
+        # will write at exit — the property the CI scrape smoke asserts.
+        log.info(
+            "metrics_linger", port=server.port, seconds=args.linger_seconds
+        )
+        try:
+            time.sleep(args.linger_seconds)
+        except KeyboardInterrupt:
+            pass
 
 
 if __name__ == "__main__":

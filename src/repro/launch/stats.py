@@ -18,6 +18,12 @@ Examples::
 
     # tail the event log a serving or training process is appending to
     repro-stats tail --file events.jsonl -n 20 --kind train_step
+    repro-stats tail --file events.jsonl --follow   # poll for new events
+
+    # export the request-lifecycle trace as Chrome trace-event JSON
+    # (REPRO_TRACE_DUMP=raw.json on the serving process writes the input)
+    repro-stats trace --file raw.json --out timeline.json  # open in Perfetto
+    repro-stats trace --file raw.json --summary            # phase table
 
     # run the serving driver here, then report (optionally with a profile)
     repro-stats serve --profile /tmp/trace -- --arch chatglm3-6b --reduced
@@ -128,6 +134,59 @@ def _cmd_tail(args) -> None:
         events = [e for e in events if e.get("kind") == args.kind]
     for e in events[-args.n:]:
         print(json.dumps(e, default=str))
+    if getattr(args, "follow", False):
+        try:
+            for e in obs.follow_events(
+                path, poll_interval=args.poll, start_at_end=True
+            ):
+                if args.kind and e.get("kind") != args.kind:
+                    continue
+                print(json.dumps(e, default=str), flush=True)
+        except KeyboardInterrupt:
+            return
+
+
+def _cmd_trace(args) -> None:
+    """Export the request-lifecycle buffer as Chrome trace-event JSON."""
+    from repro.obs import tracing
+
+    if args.file:
+        with open(args.file) as f:
+            snap = json.load(f)
+    else:
+        snap = tracing.snapshot()
+    if not snap.get("requests"):
+        print("no requests traced — run a continuous-engine workload with "
+              "REPRO_METRICS=1 (and REPRO_TRACE_DUMP=<path> to export "
+              "across processes)", file=sys.stderr)
+    if args.summary:
+        print(f"{'uid':>5} {'rid':>5} {'slot':>4} {'reason':<8} "
+              f"{'queue_ms':>9} {'attach_ms':>9} {'chunk_ms':>9} "
+              f"{'decode_ms':>9} {'total_ms':>9}")
+        for req in snap.get("requests", []):
+            by = {}
+            for p in req.get("phases", []):
+                if p.get("t1") is not None:
+                    by[p["name"]] = by.get(p["name"], 0.0) + (p["t1"] - p["t0"])
+            total = sum(by.values())
+            print(f"{req['uid']:>5} {req['rid']:>5} "
+                  f"{'-' if req.get('slot') is None else req['slot']:>4} "
+                  f"{req.get('retire_reason') or 'live':<8} "
+                  f"{by.get('queue', 0.0) * 1e3:>9.3f} "
+                  f"{by.get('prefix_attach', 0.0) * 1e3:>9.3f} "
+                  f"{(by.get('chunk_prefill', 0.0) + by.get('prefill', 0.0)) * 1e3:>9.3f} "
+                  f"{by.get('decode', 0.0) * 1e3:>9.3f} {total * 1e3:>9.3f}")
+        return
+    doc = tracing.chrome_trace(snap)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(doc, f)
+        n = sum(1 for e in doc["traceEvents"] if e.get("ph") == "b")
+        print(f"[stats] {n} request span(s) -> {args.out} "
+              f"(load in Perfetto / chrome://tracing)", file=sys.stderr)
+    else:
+        json.dump(doc, sys.stdout)
+        sys.stdout.write("\n")
 
 
 def _cmd_top(args) -> None:
@@ -341,7 +400,26 @@ def main(argv: Optional[List[str]] = None) -> None:
                     help="event log path (default: $REPRO_EVENTS)")
     tp.add_argument("-n", type=int, default=20, help="number of events")
     tp.add_argument("--kind", default=None, help="filter by event kind")
+    tp.add_argument("--follow", "-f", action="store_true",
+                    help="after printing the last -n events, poll the file "
+                         "and stream new ones (Ctrl-C to stop)")
+    tp.add_argument("--poll", type=float, default=0.5,
+                    help="follow-mode poll interval, seconds")
     tp.set_defaults(fn=_cmd_tail)
+
+    rp = sub.add_parser(
+        "trace",
+        help="export the request-lifecycle trace as Chrome trace-event "
+             "JSON (load in Perfetto / chrome://tracing)",
+    )
+    rp.add_argument("--file", default=None,
+                    help="raw trace snapshot written by REPRO_TRACE_DUMP "
+                         "(default: this process's live recorder)")
+    rp.add_argument("--out", default=None,
+                    help="write the Chrome trace JSON here (default: stdout)")
+    rp.add_argument("--summary", action="store_true",
+                    help="print a per-request phase table instead of JSON")
+    rp.set_defaults(fn=_cmd_trace)
 
     op = sub.add_parser(
         "top",

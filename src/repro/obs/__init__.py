@@ -21,6 +21,13 @@ own numbers. This package is the one place runtime observability lives:
   attributed per shape bucket (``gemm.achieved_gflops`` /
   ``gemm.roofline_fraction``; ``repro-stats top``), feeding the
   ``ops.on_util_gap`` drift-retune seam.
+* :mod:`~repro.obs.tracing` — request-scoped lifecycle tracing for the
+  serving engine (``Request.uid``-keyed phase chains: queue → prefix-attach
+  → chunk-prefill → decode, chunk-tick slices, token instants), exported
+  as Chrome trace-event JSON (``repro-stats trace`` → Perfetto).
+* :mod:`~repro.obs.http` — live scrape surface (``REPRO_METRICS_PORT``):
+  ``/metrics`` (Prometheus text), ``/requests`` (in-flight phase ages),
+  ``/trace`` (Chrome-trace JSON) on a stdlib ``http.server`` thread.
 * :mod:`~repro.obs.audit` — shadow numerics auditor: ``REPRO_AUDIT=N``
   samples quantized-family GEMMs for fp re-execution on the
   ``grad_backend`` (``numerics.abs_err``/``rel_err``, NaN/Inf sentinels,
@@ -34,12 +41,13 @@ backend/family/tile/fusion source, degradation events, tile-cache hit/miss
 CLI (``repro.launch.stats``) surfaces all of it.
 """
 
-from . import attr, audit
+from . import attr, audit, http, tracing
 from .logging import (
     Logger,
     clear_events,
     event,
     event_log_path,
+    follow_events,
     get_logger,
     log_mode,
     read_events,
@@ -68,6 +76,8 @@ from .spans import span
 __all__ = [
     "attr",
     "audit",
+    "http",
+    "tracing",
     "Counter",
     "Gauge",
     "Histogram",
@@ -93,4 +103,5 @@ __all__ = [
     "event_log_path",
     "recent_events",
     "read_events",
+    "follow_events",
 ]

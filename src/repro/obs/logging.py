@@ -41,6 +41,7 @@ __all__ = [
     "event_log_path",
     "recent_events",
     "read_events",
+    "follow_events",
 ]
 
 _LOG_ENV_VAR = "REPRO_LOG"
@@ -179,3 +180,45 @@ def read_events(path: str, n: Optional[int] = None) -> List[dict]:
         except json.JSONDecodeError:
             continue
     return out
+
+
+def follow_events(
+    path: str,
+    *,
+    poll_interval: float = 0.5,
+    start_at_end: bool = False,
+    stop=None,
+):
+    """Generator over events appended to a JSONL sink — the engine behind
+    ``repro-stats tail --follow``. Polls (portable: no inotify); waits for
+    the file to appear; yields each complete line as a parsed dict (a line
+    mid-write — no trailing newline yet — is buffered until its newline
+    lands; undecodable lines are skipped). ``start_at_end`` skips history
+    and yields only events appended after the call. ``stop`` is an optional
+    zero-arg callable polled between reads — return True to end the
+    generator (tests and embedders; the CLI just Ctrl-C's)."""
+    while not os.path.exists(path):
+        if stop is not None and stop():
+            return
+        time.sleep(poll_interval)
+    buf = ""
+    with open(path) as f:
+        if start_at_end:
+            f.seek(0, os.SEEK_END)
+        while True:
+            chunk = f.readline()
+            if not chunk:
+                if stop is not None and stop():
+                    return
+                time.sleep(poll_interval)
+                continue
+            buf += chunk
+            if not buf.endswith("\n"):
+                continue  # partial line: writer mid-append
+            line, buf = buf.strip(), ""
+            if not line:
+                continue
+            try:
+                yield json.loads(line)
+            except json.JSONDecodeError:
+                continue

@@ -183,6 +183,10 @@ class SlotPool:
     caches: Any
     _free: List[int]
     _owner: Dict[int, Any]  # slot -> request id
+    # Peak concurrently-leased slots over the pool's lifetime (leased =
+    # owned, whether the lane is already decoding or still mid-chunk-prefill)
+    # — the capacity-planning high-watermark `serve.slot_pool_hwm` reports.
+    leased_hwm: int = 0
 
     @classmethod
     def create(
@@ -232,6 +236,7 @@ class SlotPool:
         slots = [self._free.pop(0) for _ in request_ids]
         for s, rid in zip(slots, request_ids):
             self._owner[s] = rid
+        self.leased_hwm = max(self.leased_hwm, len(self._owner))
         return slots
 
     def release(self, slot: int) -> bool:

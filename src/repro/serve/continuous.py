@@ -42,6 +42,16 @@ off by default — ``prefill_chunk`` / ``prefix_cache`` fields or the
   re-quantize the attached span under the prefix's original scales
   (scale adoption — see ``quant.kvcache``). Emits
   ``serve.prefix_cache.{hits,misses,evictions,cached_tokens}``.
+
+Every request's lifecycle — arrival, admission (incl. fall-through bucket),
+prefix attach, chunk ticks, first token, each ITL, retirement — is stamped
+into :mod:`repro.obs.tracing` keyed by ``Request.uid`` (host-side only; the
+compiled decode step is bit-identical with tracing on or off). The
+``queue``/``prefix_attach``/``chunk_prefill`` phases are contiguous and
+share the TTFT stamps, so the exported Perfetto timeline decomposes each
+``serve.ttft_seconds`` sample exactly. ``slo_ttft_ms``/``slo_itl_ms`` (or
+``REPRO_SLO_TTFT_MS``/``REPRO_SLO_ITL_MS``) turn those stamps into
+``ServingReport.goodput``.
 """
 
 from __future__ import annotations
@@ -59,6 +69,7 @@ import numpy as np
 
 from repro import obs as _obs
 from repro.obs import attr as _attr
+from repro.obs import tracing as _tracing
 from repro.configs.base import ArchConfig
 from repro.models import api as model_api
 
@@ -99,6 +110,128 @@ class _PendingJoin:
         return bool(self.done.all())
 
 
+class _Lifecycle:
+    """Per-``serve()`` request-lifecycle bookkeeping.
+
+    Owns the wall stamps the report's product fields (TTFT/ITL and phase
+    percentiles, goodput) are computed from, emits the phase histograms,
+    and mirrors every lifecycle edge into :mod:`repro.obs.tracing`. The
+    phase chain — queue → prefix_attach → chunk_prefill → decode (chunked)
+    or queue → prefill → decode (monolithic) — is contiguous and shares
+    these exact stamps, so each request's pre-decode phase durations sum
+    to its ``serve.ttft_seconds`` sample by construction, which is what
+    makes the exported timeline trustworthy as a TTFT decomposition.
+    """
+
+    def __init__(self) -> None:
+        self.arrive: Dict[int, float] = {}  # rid -> clock-start stamp
+        self.admit: Dict[int, float] = {}  # rid -> queue-exit stamp
+        self.attach: Dict[int, float] = {}  # rid -> attach-done stamp
+        self.last_tok: Dict[int, float] = {}
+        self.ttfts: List[float] = []
+        self.itls: List[float] = []
+        self.queue_s: List[float] = []
+        self.attach_s: List[float] = []
+        self.chunk_s: List[float] = []
+        self.ttft_by_rid: Dict[int, float] = {}
+        self.itl_max: Dict[int, float] = {}
+
+    def arrival(self, r: Request, ts: float) -> None:
+        """Queue enter: the loop reached the request's arrival tick."""
+        self.arrive[r.rid] = ts
+        _tracing.begin_request(r.uid, r.rid, ts)
+
+    def admitted(
+        self, batch: List[Request], ts: float, bucket, fallthrough: bool,
+        phase: str,
+    ) -> None:
+        """Queue exit: the scheduler popped ``batch`` for one join."""
+        for r in batch:
+            q = ts - self.arrive.get(r.rid, ts)
+            self.admit[r.rid] = ts
+            self.queue_s.append(q)
+            _obs.histogram("serve.queue_seconds").observe(q)
+            _tracing.annotate(r.uid, bucket=bucket, fallthrough=fallthrough)
+            _tracing.instant(
+                r.uid, "admitted", ts,
+                bucket=bucket, fallthrough=fallthrough, queue_s=q,
+            )
+            _tracing.begin_phase(r.uid, phase, ts)
+
+    def attached(self, batch: List[Request], ts: float) -> None:
+        """Chunked path: slots leased + cached prefixes attached; the
+        chunk-prefill pipeline owns the request from here to first token."""
+        for r in batch:
+            a = ts - self.admit.get(r.rid, ts)
+            self.attach[r.rid] = ts
+            self.attach_s.append(a)
+            _obs.histogram("serve.prefill_attach_seconds").observe(a)
+            _tracing.begin_phase(r.uid, "chunk_prefill", ts)
+
+    def first_token(
+        self, batch: List[Request], sched: Scheduler, eos_id, ts: float,
+        chunked: bool,
+    ) -> None:
+        """First token sampled (from prefill logits, at join): closes the
+        TTFT window and the last pre-decode phase with the same stamp."""
+        _obs.counter("serve.requests", event="admitted").inc(len(batch))
+        for r in batch:
+            ttft = ts - self.arrive.get(r.rid, ts)
+            self.ttfts.append(ttft)
+            self.ttft_by_rid[r.rid] = ttft
+            self.last_tok[r.rid] = ts
+            _obs.histogram("serve.ttft_seconds").observe(ttft)
+            if chunked:
+                c = ts - self.attach.get(r.rid, ts)
+                self.chunk_s.append(c)
+                _obs.histogram("serve.chunk_prefill_seconds").observe(c)
+            _tracing.instant(r.uid, "first_token", ts, ttft_s=ttft)
+            _tracing.begin_phase(r.uid, "decode", ts)
+            st = sched.states[r.rid]
+            if st.done:  # one-token request: retires at its own join tick
+                _obs.counter("serve.requests", event="retired").inc()
+                reason = (
+                    "eos"
+                    if eos_id is not None and st.tokens
+                    and st.tokens[-1] == eos_id
+                    else "budget"
+                )
+                self.retired(r, st, reason, ts)
+
+    def token(self, r: Request, ts: float) -> None:
+        prev = self.last_tok.get(r.rid)
+        if prev is not None:
+            itl = ts - prev
+            self.itls.append(itl)
+            self.itl_max[r.rid] = max(self.itl_max.get(r.rid, 0.0), itl)
+            _obs.histogram("serve.itl_seconds").observe(itl)
+            _tracing.instant(r.uid, "token", ts, itl_s=itl)
+        self.last_tok[r.rid] = ts
+
+    def retired(self, r: Request, st, reason: str, ts: float) -> None:
+        _obs.event(
+            "request_retired", uid=r.uid, rid=r.rid, reason=reason,
+            tokens=st.n_emitted, slot=st.slot,
+        )
+        _tracing.end_request(r.uid, reason, ts)
+
+    def goodput(self, requests: List[Request], slo_ttft_s, slo_itl_s):
+        """Fraction of requests meeting every configured SLO; None when no
+        SLO is set (absence of an objective must not read as 100%)."""
+        if (slo_ttft_s is None and slo_itl_s is None) or not requests:
+            return None
+        good = 0
+        for r in requests:
+            ok = True
+            if slo_ttft_s is not None:
+                ttft = self.ttft_by_rid.get(r.rid)
+                ok = ok and ttft is not None and ttft <= slo_ttft_s
+            if slo_itl_s is not None:
+                ok = ok and self.itl_max.get(r.rid, 0.0) <= slo_itl_s
+            good += bool(ok)
+        return good / len(requests)
+
+
 @dataclasses.dataclass
 class ServingReport:
     """Outcome + the utilization counters the paper's story maps onto."""
@@ -123,6 +256,24 @@ class ServingReport:
     ttft_p99: Optional[float] = None
     itl_p50: Optional[float] = None
     itl_p99: Optional[float] = None
+    # SLO / phase decomposition. ``goodput`` = fraction of requests whose
+    # TTFT (and worst ITL) met every configured objective (engine
+    # ``slo_ttft_ms``/``slo_itl_ms`` fields or ``REPRO_SLO_TTFT_MS`` /
+    # ``REPRO_SLO_ITL_MS``); None when no SLO is set. ``queue_*`` is the
+    # arrival -> admission wait; ``attach_*`` / ``chunk_prefill_*`` are the
+    # chunked path's prefix-attach and chunk-prefill phases (None on the
+    # monolithic path, whose single pre-decode phase is TTFT - queue).
+    # The three phases are contiguous and share the TTFT stamps, so per
+    # request they sum exactly to its ``serve.ttft_seconds`` sample.
+    # ``slot_hwm`` = peak concurrently-leased slots (capacity headroom).
+    goodput: Optional[float] = None
+    queue_p50: Optional[float] = None
+    queue_p99: Optional[float] = None
+    attach_p50: Optional[float] = None
+    attach_p99: Optional[float] = None
+    chunk_prefill_p50: Optional[float] = None
+    chunk_prefill_p99: Optional[float] = None
+    slot_hwm: int = 0
 
     @property
     def tokens_per_sec(self) -> float:
@@ -167,6 +318,12 @@ class ContinuousEngine:
     prefix_cache: Optional[bool] = None
     prefix_block: int = 16  # trie block size, tokens
     prefix_capacity: int = 1 << 16  # trie capacity, tokens
+    # TTFT / worst-ITL service-level objectives in milliseconds (None = env
+    # REPRO_SLO_TTFT_MS / REPRO_SLO_ITL_MS, unset = no SLO). With at least
+    # one set, ServingReport.goodput is the fraction of requests meeting
+    # every configured objective.
+    slo_ttft_ms: Optional[float] = None
+    slo_itl_ms: Optional[float] = None
 
     def __post_init__(self) -> None:
         cfg = self.cfg
@@ -189,6 +346,14 @@ class ContinuousEngine:
                 RuntimeWarning,
                 stacklevel=2,
             )
+
+        # Resolve the SLO knobs (fields beat env).
+        if self.slo_ttft_ms is None:
+            env = os.environ.get("REPRO_SLO_TTFT_MS", "")
+            self.slo_ttft_ms = float(env) if env else None
+        if self.slo_itl_ms is None:
+            env = os.environ.get("REPRO_SLO_ITL_MS", "")
+            self.slo_itl_ms = float(env) if env else None
 
         # Resolve the prompt-side feature knobs (fields beat env).
         if self.prefill_chunk is None:
@@ -228,6 +393,9 @@ class ContinuousEngine:
             else None
         )
         self._pending: List[_PendingJoin] = []
+        # Prefix-trie residency high-watermark (tokens) — the trie persists
+        # across serve() calls, so the peak does too.
+        self._prefix_hwm = 0
 
         @functools.partial(jax.jit, static_argnums=())
         def _prefill(params, tokens, lengths):
@@ -377,10 +545,7 @@ class ContinuousEngine:
         wall = time.perf_counter
         by_arrival = sorted(requests, key=lambda r: r.arrival)
         n_arrival_stamped = 0
-        arrive_wall: Dict[int, float] = {}
-        last_tok_wall: Dict[int, float] = {}
-        ttfts: List[float] = []
-        itls: List[float] = []
+        lc = _Lifecycle()
 
         step = 0
         decode_steps = 0
@@ -400,7 +565,7 @@ class ContinuousEngine:
                 n_arrival_stamped < len(by_arrival)
                 and by_arrival[n_arrival_stamped].arrival <= step
             ):
-                arrive_wall[by_arrival[n_arrival_stamped].rid] = wall()
+                lc.arrival(by_arrival[n_arrival_stamped], wall())
                 n_arrival_stamped += 1
 
             # -- join: refill free slots from the queue ---------------------
@@ -422,12 +587,18 @@ class ContinuousEngine:
                 )
                 if not batch:
                     break
+                adm = sched.last_admission or {}
                 if self.temperature > 0:
                     key, sub = jax.random.split(key)
                 else:
                     sub = key  # greedy: sampling ignores the key
                 if chunked:
+                    lc.admitted(
+                        batch, wall(), adm.get("bucket"),
+                        bool(adm.get("fallthrough")), phase="prefix_attach",
+                    )
                     pj = self._begin_join(sched, pool, batch, step)
+                    lc.attached(batch, wall())
                     if len(self._pending) < _MAX_PENDING:
                         self._pending.append(pj)  # advances below, this tick
                     else:
@@ -444,11 +615,12 @@ class ContinuousEngine:
                         prefill_batches += 1
                         generated += n_gen
                         joined = True
-                        self._stamp_join(
-                            pj.batch, sched, wall, arrive_wall, last_tok_wall,
-                            ttfts,
-                        )
+                        self._stamp_join(pj.batch, sched, wall, lc)
                 else:
+                    lc.admitted(
+                        batch, wall(), adm.get("bucket"),
+                        bool(adm.get("fallthrough")), phase="prefill",
+                    )
                     tok, pos, active, n_gen = self._join(
                         sched, pool, batch, tok, pos, active, sub, step,
                         on_token, sync, pending,
@@ -458,9 +630,7 @@ class ContinuousEngine:
                     joined = True
                     # First token exists now (sampled from prefill logits):
                     # the join stamp closes each request's TTFT window.
-                    self._stamp_join(
-                        batch, sched, wall, arrive_wall, last_tok_wall, ttfts
-                    )
+                    self._stamp_join(batch, sched, wall, lc)
 
             # -- advance the pending chunk pipeline by one chunk ------------
             if self._pending:
@@ -478,10 +648,7 @@ class ContinuousEngine:
                     prefill_batches += 1
                     generated += n_gen
                     joined = True
-                    self._stamp_join(
-                        pj.batch, sched, wall, arrive_wall, last_tok_wall,
-                        ttfts,
-                    )
+                    self._stamp_join(pj.batch, sched, wall, lc)
                     self._pending.pop(0)
             if joined:
                 active_dev = jnp.asarray(active)
@@ -523,6 +690,7 @@ class ContinuousEngine:
             ]
             live_rids = [pool.owner_of(s) for s in live]
             n_retired = 0
+            retired_now: List[tuple] = []  # (Request, reason)
             changed = False
             if sync:
                 emitted = np.asarray(tok[:, 0])
@@ -532,6 +700,12 @@ class ContinuousEngine:
                         on_token(rid, t)
                     generated += 1
                     if sched.record_token(rid, t, now=step):
+                        reason = (
+                            "eos"
+                            if self.eos_id is not None and t == self.eos_id
+                            else "budget"
+                        )
+                        retired_now.append((sched.states[rid].request, reason))
                         if pool.release(slot):
                             n_retired += 1
                         active[slot] = False
@@ -541,6 +715,9 @@ class ContinuousEngine:
                 for slot, rid in zip(live, live_rids):
                     generated += 1
                     if sched.record_emitted(rid, now=step):
+                        retired_now.append(
+                            (sched.states[rid].request, "budget")
+                        )
                         if pool.release(slot):
                             n_retired += 1
                         active[slot] = False
@@ -549,7 +726,9 @@ class ContinuousEngine:
                 active_dev = jnp.asarray(active)
 
             # Per-tick telemetry: step wall time, each live lane's
-            # inter-token gap, queue/occupancy gauges.
+            # inter-token gap, queue/occupancy gauges. Retirement stamps
+            # come after the token stamps so a request's last ITL instant
+            # lands inside its span.
             now = wall()
             _obs.histogram("serve.step_seconds").observe(now - t_step)
             if decode_wl:
@@ -557,17 +736,15 @@ class ContinuousEngine:
                 # dispatch cadence, on the sync path token-to-token time.
                 _attr.observe_step(decode_wl, now - t_step)
             for rid in live_rids:
-                prev = last_tok_wall.get(rid)
-                if prev is not None:
-                    itl = now - prev
-                    itls.append(itl)
-                    _obs.histogram("serve.itl_seconds").observe(itl)
-                last_tok_wall[rid] = now
+                lc.token(sched.states[rid].request, now)
+            for r, reason in retired_now:
+                lc.retired(r, sched.states[r.rid], reason, now)
             _obs.counter("serve.tokens").inc(len(live_rids))
             if n_retired:
                 _obs.counter("serve.requests", event="retired").inc(n_retired)
             _obs.gauge("serve.queue_depth").set(sched.n_arrived(step))
             _obs.gauge("serve.occupancy").set(n_live / self.n_slots)
+            _obs.gauge("serve.slot_pool_hwm").set(pool.leased_hwm)
 
         # Deferred fetch: one host sync for the whole run.
         for arr, pairs in pending:
@@ -576,6 +753,12 @@ class ContinuousEngine:
                 sched.states[rid].tokens.append(int(vals[row]))
         jax.block_until_ready(tok)
         outputs = {rid: st.tokens for rid, st in sched.states.items()}
+        _obs.gauge("serve.slot_pool_hwm").set(pool.leased_hwm)
+        goodput = lc.goodput(
+            requests,
+            None if self.slo_ttft_ms is None else self.slo_ttft_ms / 1e3,
+            None if self.slo_itl_ms is None else self.slo_itl_ms / 1e3,
+        )
         report = ServingReport(
             outputs=outputs,
             generated_tokens=generated,
@@ -584,10 +767,18 @@ class ContinuousEngine:
             mean_occupancy=(occupancy_acc / decode_steps) if decode_steps else 0.0,
             wall_time_s=0.0,  # stamped by timed_serve
             kv_bytes_per_slot=self._last_kv_bytes_per_slot,
-            ttft_p50=_obs.percentile(ttfts, 50),
-            ttft_p99=_obs.percentile(ttfts, 99),
-            itl_p50=_obs.percentile(itls, 50),
-            itl_p99=_obs.percentile(itls, 99),
+            ttft_p50=_obs.percentile(lc.ttfts, 50),
+            ttft_p99=_obs.percentile(lc.ttfts, 99),
+            itl_p50=_obs.percentile(lc.itls, 50),
+            itl_p99=_obs.percentile(lc.itls, 99),
+            goodput=goodput,
+            queue_p50=_obs.percentile(lc.queue_s, 50),
+            queue_p99=_obs.percentile(lc.queue_s, 99),
+            attach_p50=_obs.percentile(lc.attach_s, 50),
+            attach_p99=_obs.percentile(lc.attach_s, 99),
+            chunk_prefill_p50=_obs.percentile(lc.chunk_s, 50),
+            chunk_prefill_p99=_obs.percentile(lc.chunk_s, 99),
+            slot_hwm=pool.leased_hwm,
         )
         _obs.event(
             "serving_report",
@@ -599,6 +790,10 @@ class ContinuousEngine:
             ttft_p99=report.ttft_p99,
             itl_p50=report.itl_p50,
             itl_p99=report.itl_p99,
+            goodput=report.goodput,
+            queue_p50=report.queue_p50,
+            queue_p99=report.queue_p99,
+            slot_hwm=report.slot_hwm,
         )
         return report
 
@@ -610,20 +805,16 @@ class ContinuousEngine:
 
     # -- internals ---------------------------------------------------------
 
-    def _stamp_join(
-        self, batch, sched, wall, arrive_wall, last_tok_wall, ttfts
-    ) -> None:
+    def _stamp_join(self, batch, sched, wall, lc: _Lifecycle) -> None:
         """Close each admitted request's TTFT window (its first token was
-        just sampled) and emit the admission counters."""
-        now = wall()
-        _obs.counter("serve.requests", event="admitted").inc(len(batch))
-        for r in batch:
-            ttft = now - arrive_wall.get(r.rid, now)
-            ttfts.append(ttft)
-            last_tok_wall[r.rid] = now
-            _obs.histogram("serve.ttft_seconds").observe(ttft)
-            if sched.states[r.rid].done:  # one-token request
-                _obs.counter("serve.requests", event="retired").inc()
+        just sampled) and emit the admission counters. One shared ``now``
+        per batch simultaneously closes the last pre-decode phase and
+        timestamps the first token — the reason the exported phase chain
+        sums exactly to the TTFT sample."""
+        lc.first_token(
+            batch, sched, self.eos_id, wall(),
+            chunked=self.prefill_chunk is not None,
+        )
 
     def _attach_len(self, matched: int, plen: int) -> int:
         """Usable prefix span: snap the trie match down to a chunk boundary
@@ -668,6 +859,10 @@ class ContinuousEngine:
                 if attach <= 0:
                     self._trie.misses += 1
                     _obs.counter("serve.prefix_cache.misses").inc()
+                    _tracing.instant(
+                        r.uid, "prefix_miss", time.perf_counter(),
+                        matched=int(matched),
+                    )
                     continue
                 self._trie.hits += 1
                 _obs.counter("serve.prefix_cache.hits").inc()
@@ -677,6 +872,14 @@ class ContinuousEngine:
                 self._trie.acquire(nodes[i])
                 spans, fls = self._trie.gather(nodes[i])
                 caches = _attach_prefix(caches, spans, i, attach)
+                _tracing.instant(
+                    r.uid, "prefix_attach", time.perf_counter(),
+                    tokens=int(attach), matched=int(matched),
+                    spans=int(n_nodes),
+                )
+                _tracing.annotate(
+                    r.uid, prefix_tokens=int(attach), prefix_spans=int(n_nodes)
+                )
                 if fls is not None:
                     if floors_np is None:
                         floors_np = _zero_floors(rows, fls)
@@ -692,6 +895,8 @@ class ContinuousEngine:
                 )
         slots = pool.allocate([r.rid for r in batch])
         sched.admit(batch, slots, now=step)
+        for r, s in zip(batch, slots):
+            _tracing.set_slot(r.uid, s)
         return _PendingJoin(
             batch=batch, slots=slots, caches=caches, rows=rows, lb=lb,
             offsets=offsets, plens=plens, nodes=nodes, floors=floors,
@@ -706,6 +911,7 @@ class ContinuousEngine:
         offs = np.full((pj.rows,), pj.lb, np.int32)
         last_idx = np.zeros((pj.rows,), np.int32)
         fin = np.zeros((pj.rows,), bool)
+        advanced = []  # (uid, off, end): trace slices stamped post-dispatch
         for i, r in enumerate(pj.batch):
             if pj.done[i]:
                 continue
@@ -717,6 +923,7 @@ class ContinuousEngine:
                 fin[i] = True
                 last_idx[i] = int(pj.plens[i]) - 1 - off
             pj.offsets[i] = end
+            advanced.append((r.uid, off, end))
         args = (
             self.params, pj.caches, jnp.asarray(ctoks), jnp.asarray(offs),
             jnp.asarray(last_idx),
@@ -724,12 +931,17 @@ class ContinuousEngine:
         t_ck = time.perf_counter()
         with _attr.capture_gemms() as ck_recs:
             logits, pj.caches = self._chunk(*args)
+        t_done = time.perf_counter()
         wl = self._step_workload(
             (pj.rows, pj.lb, w), self._chunk,
             (self.params, pj.caches) + args[2:], ck_recs, "chunk",
         )
         if wl:
-            _attr.observe_step(wl, time.perf_counter() - t_ck)
+            _attr.observe_step(wl, t_done - t_ck)
+        # One nested slice per row advanced this tick (host dispatch
+        # bracket — the chunk step itself is async like every dispatch).
+        for uid, off, end in advanced:
+            _tracing.slice_event(uid, "chunk", t_ck, t_done, offset=off, end=end)
         fin_dev = jnp.asarray(fin)
         pj.first_logits = (
             logits if pj.first_logits is None
@@ -781,6 +993,8 @@ class ContinuousEngine:
             _obs.gauge("serve.prefix_cache.cached_tokens").set(
                 self._trie.cached_tokens
             )
+            self._prefix_hwm = max(self._prefix_hwm, self._trie.cached_tokens)
+            _obs.gauge("serve.prefix_cache.hwm_tokens").set(self._prefix_hwm)
         return tok, pos, n_gen
 
     def _join(
@@ -824,6 +1038,8 @@ class ContinuousEngine:
 
         slots = pool.allocate([r.rid for r in batch])
         sched.admit(batch, slots, now=step)
+        for r, s in zip(batch, slots):
+            _tracing.set_slot(r.uid, s)
         pool.join(caches, slots)
 
         slot_idx = jnp.asarray(slots, jnp.int32)

@@ -21,6 +21,7 @@ next join without touching any other lane.
 from __future__ import annotations
 
 import dataclasses
+import itertools
 from collections import deque
 from typing import Deque, Dict, List, Optional, Sequence
 
@@ -37,15 +38,25 @@ __all__ = [
 ]
 
 
+# Process-wide monotonic uid source: `rid` is the caller's name for a
+# request (benchmarks reuse the same rids across warmup/timed replays), so
+# per-request telemetry keys on `uid` instead — unique across every Request
+# ever constructed in this process.
+_UIDS = itertools.count(1)
+
+
 @dataclasses.dataclass
 class Request:
     """One serving request. ``arrival`` is in scheduler clock ticks (one tick
-    per engine decode step), so traces replay deterministically."""
+    per engine decode step), so traces replay deterministically. ``uid`` is
+    assigned monotonically at construction and is the stable key every
+    per-request trace/log record carries (see :mod:`repro.obs.tracing`)."""
 
     rid: int
     prompt: Sequence[int]
     max_new_tokens: int
     arrival: int = 0
+    uid: int = dataclasses.field(default_factory=lambda: next(_UIDS))
 
     def __post_init__(self) -> None:
         if not len(self.prompt):
@@ -73,6 +84,10 @@ class RequestState:
     @property
     def done(self) -> bool:
         return self.finished_at is not None
+
+    @property
+    def uid(self) -> int:
+        return self.request.uid
 
 
 def bucket_length(
@@ -119,6 +134,11 @@ class Scheduler:
         self.max_bucket = max_bucket
         self._queue: Deque[Request] = deque()
         self.states: Dict[int, RequestState] = {}  # rid -> state
+        # Admission side-channel for the engine's tracer: set by every
+        # next_batch() that returns a batch — {"bucket": join bucket,
+        # "fallthrough": head was blocked and admission fell through to a
+        # deeper bucket}; None when the last call returned [].
+        self.last_admission: Optional[Dict[str, object]] = None
 
     # -- queue -------------------------------------------------------------
 
@@ -169,13 +189,15 @@ class Scheduler:
         pipeline right now"). Returns [] when nothing admissible has arrived
         or no slot is free.
         """
+        self.last_admission = None
         if max_n <= 0:
             return []
         ok = admissible if admissible is not None else (lambda r: True)
         head = next((r for r in self._queue if r.arrival <= now), None)
         if head is None:
             return []
-        if ok(head):
+        fallthrough = not ok(head)
+        if not fallthrough:
             want = self.bucket(len(head.prompt))
         else:
             candidates = [
@@ -195,6 +217,8 @@ class Scheduler:
             ):
                 batch.append(r)
                 self._queue.remove(r)
+        if batch:
+            self.last_admission = {"bucket": want, "fallthrough": fallthrough}
         return batch
 
     def admit(self, requests: List[Request], slots: List[int], now: int) -> None:

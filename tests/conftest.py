@@ -33,13 +33,19 @@ def _reset_telemetry():
     from repro import obs
     from repro.kernels import ops
     from repro.obs import audit
+    from repro.obs import http as obs_http
+    from repro.obs import tracing as obs_tracing
 
     obs.reset()
     obs.clear_events()
+    obs_tracing.reset()  # request-lifecycle trace buffer
     ops.reset_tile_cache_stats()
     yield
     obs.reset()
     obs.clear_events()
+    obs_tracing.reset()
+    obs_tracing.set_enabled(None)  # back to env-driven tracing toggle
+    obs_http.shutdown()  # a test that started the scrape server won't leak it
     ops.reset_tile_cache_stats()  # also drops util-gap streaks/bests
     ops.on_miss_streak(None)  # restore the default retune-candidate hook
     ops.on_util_gap(None)  # restore the default util-gap hook

@@ -950,13 +950,18 @@ def test_metrics_off_decode_step_hlo_is_identical():
         step = jax.jit(lambda p, t, c, q: api.decode(cfg, p, t, c, q))
         return step.lower(params, tok, caches, pos).compile().as_text()
 
+    from repro.obs import tracing
+
     prev = obs.set_enabled(True)
+    tracing.set_enabled(True)  # request tracing must be free too
     try:
         on = _instruction_census(lower())
         obs.set_enabled(False)
+        tracing.set_enabled(False)
         off = _instruction_census(lower())
     finally:
         obs.set_enabled(prev)
+        tracing.set_enabled(None)
 
     assert sum(on.values()) > 0
     assert on == off, (

@@ -1,0 +1,431 @@
+"""Request-lifecycle tracing: recorder semantics, Chrome export, the live
+scrape surface, and — load-bearing — the engine integration invariant that
+each request's contiguous pre-decode phases sum *exactly* to its TTFT
+sample, which is what makes the exported timeline a trustworthy TTFT
+decomposition rather than a second, drifting clock.
+"""
+
+import json
+import threading
+import time
+import urllib.error
+import urllib.request
+
+import jax
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.configs import ARCHS
+from repro.models import api
+from repro.obs import http as obs_http
+from repro.obs import tracing
+from repro.serve import ContinuousEngine, Request
+
+KEY = jax.random.key(0)
+
+
+def _trace(cfg, specs, seed=7):
+    """specs: [(prompt_len, max_new, arrival), ...]"""
+    rng = np.random.default_rng(seed)
+    return [
+        Request(
+            rid=i,
+            prompt=[int(x) for x in rng.integers(0, cfg.vocab, p)],
+            max_new_tokens=g,
+            arrival=a,
+        )
+        for i, (p, g, a) in enumerate(specs)
+    ]
+
+
+# ---------------------------------------------------------------------------
+# recorder semantics
+# ---------------------------------------------------------------------------
+
+
+def test_recorder_phase_chain_is_contiguous_and_closed():
+    tracing.begin_request(101, 0, 1.0)
+    tracing.begin_phase(101, "prefill", 1.5)
+    tracing.begin_phase(101, "decode", 2.0)
+    tracing.end_request(101, "eos", 3.0)
+
+    snap = tracing.snapshot()
+    assert len(snap["requests"]) == 1
+    rec = snap["requests"][0]
+    assert rec["uid"] == 101 and rec["retire_reason"] == "eos"
+    names = [p["name"] for p in rec["phases"]]
+    assert names == ["queue", "prefill", "decode"]
+    # Contiguity by construction: each phase closes where the next opens,
+    # and retirement closes the tail — the phases tile [arrival, retire].
+    for prev, nxt in zip(rec["phases"], rec["phases"][1:]):
+        assert prev["t1"] == nxt["t0"]
+    assert rec["phases"][-1]["t1"] == 3.0 == rec["retired_ts"]
+    assert tracing.active_requests() == []
+
+
+def test_recorder_instants_slices_and_annotations():
+    tracing.begin_request(7, 3, 0.0)
+    tracing.set_slot(7, 2)
+    tracing.annotate(7, prefix_tokens=32)
+    tracing.instant(7, "admitted", 0.5, bucket=64, fallthrough=False)
+    tracing.slice_event(7, "chunk", 0.6, 0.7, offset=0, end=16)
+
+    active = tracing.active_requests(now=1.0)
+    assert len(active) == 1
+    a = active[0]
+    assert a["slot"] == 2 and a["meta"]["prefix_tokens"] == 32
+    assert a["phase"] == "queue" and a["age_s"] == pytest.approx(1.0)
+    rec = tracing.snapshot()["requests"][0]
+    assert rec["instants"][0] == {
+        "name": "admitted", "ts": 0.5, "bucket": 64, "fallthrough": False,
+    }
+    assert rec["slices"][0]["offset"] == 0 and rec["slices"][0]["end"] == 16
+
+
+def test_recorder_retired_ring_is_bounded():
+    rec = tracing.TraceRecorder(cap=2)
+    for uid in (1, 2, 3):
+        rec.begin_request(uid, uid, float(uid))
+        rec.end_request(uid, "budget", float(uid) + 0.5)
+    uids = [r["uid"] for r in rec.snapshot()["requests"]]
+    assert uids == [2, 3]  # oldest dropped first
+
+
+def test_recorder_instant_cap_counts_drops(monkeypatch):
+    monkeypatch.setattr(tracing, "_MAX_INSTANTS", 3)
+    tracing.begin_request(9, 0, 0.0)
+    for i in range(5):
+        tracing.instant(9, "token", float(i))
+    rec = tracing.snapshot()["requests"][0]
+    assert len(rec["instants"]) == 3
+    assert rec["meta"]["instants_dropped"] == 2
+
+
+def test_recorder_disabled_is_a_noop():
+    tracing.set_enabled(False)
+    assert not tracing.enabled()
+    tracing.begin_request(5, 0, 0.0)
+    tracing.instant(5, "admitted", 0.1)
+    tracing.end_request(5, "eos", 0.2)
+    assert tracing.snapshot()["requests"] == []
+    # tracing also rides the registry hard-off switch
+    tracing.set_enabled(None)
+    prev = obs.set_enabled(False)
+    try:
+        assert not tracing.enabled()
+    finally:
+        obs.set_enabled(prev)
+
+
+def test_request_uids_are_monotonic_and_survive_rid_reuse():
+    a = Request(rid=0, prompt=[1], max_new_tokens=1)
+    b = Request(rid=0, prompt=[1], max_new_tokens=1)  # same rid, new uid
+    c = Request(rid=1, prompt=[1], max_new_tokens=1)
+    assert a.uid < b.uid < c.uid
+
+
+# ---------------------------------------------------------------------------
+# Chrome trace export
+# ---------------------------------------------------------------------------
+
+
+def _one_retired_one_active():
+    tracing.begin_request(1, 0, 0.0)
+    tracing.set_slot(1, 0)
+    tracing.begin_phase(1, "prefill", 0.2)
+    tracing.begin_phase(1, "decode", 0.4)
+    tracing.end_request(1, "budget", 1.0)
+    tracing.begin_request(2, 1, 0.5)  # still queued
+
+
+def test_chrome_trace_layout_and_validation():
+    _one_retired_one_active()
+    doc = tracing.chrome_trace()
+    assert doc["displayTimeUnit"] == "ms"
+    evs = doc["traceEvents"]
+    assert {"ph": "M", "pid": 1, "name": "process_name",
+            "args": {"name": "repro.serve"}} in evs
+    begins = [e for e in evs if e["ph"] == "b"]
+    ends = [e for e in evs if e["ph"] == "e"]
+    assert {e["id"] for e in begins} == {1, 2}
+    assert [e["id"] for e in ends] == [1]  # uid 2 is still open
+    # the queue phase rides the queue track; later phases ride the slot's
+    phases = {e["name"]: e for e in evs if e.get("cat") == "phase"
+              and e["args"]["uid"] == 1}
+    assert phases["queue"]["tid"] == 0
+    assert phases["prefill"]["tid"] == 1 and phases["decode"]["tid"] == 1
+    assert phases["queue"]["dur"] == pytest.approx(0.2e6)
+    assert tracing.validate_chrome_trace(doc) == 2
+
+
+def test_validate_chrome_trace_rejects_malformed_docs():
+    with pytest.raises(ValueError, match="missing or empty"):
+        tracing.validate_chrome_trace({"traceEvents": []})
+    base = {"pid": 1, "tid": 0, "ts": 0.0, "cat": "request", "name": "r"}
+    with pytest.raises(ValueError, match="closed without open"):
+        tracing.validate_chrome_trace(
+            {"traceEvents": [{**base, "ph": "e", "id": 1}]}
+        )
+    with pytest.raises(ValueError, match="opened twice"):
+        tracing.validate_chrome_trace(
+            {"traceEvents": [{**base, "ph": "b", "id": 1},
+                             {**base, "ph": "b", "id": 1}]}
+        )
+    with pytest.raises(ValueError, match="invalid dur"):
+        tracing.validate_chrome_trace(
+            {"traceEvents": [{"ph": "X", "name": "p", "ts": 0.0, "dur": -1.0}]}
+        )
+    with pytest.raises(ValueError, match="no phase slices"):
+        tracing.validate_chrome_trace(
+            {"traceEvents": [{**base, "ph": "b", "id": 1, "ts": 0.0},
+                             {**base, "ph": "e", "id": 1, "ts": 1.0}]}
+        )
+
+
+# ---------------------------------------------------------------------------
+# engine integration
+# ---------------------------------------------------------------------------
+
+
+def _engine(cfg, params, **kw):
+    kw.setdefault("n_slots", 2)
+    kw.setdefault("max_len", 48)
+    import jax.numpy as jnp
+
+    return ContinuousEngine(
+        cfg=cfg, params=params, cache_dtype=jnp.float32, **kw
+    )
+
+
+def test_engine_chunked_phases_sum_to_ttft():
+    """The acceptance invariant: per request, queue + prefix_attach +
+    chunk_prefill durations equal the first-token instant's ``ttft_s`` —
+    the same value observed into ``serve.ttft_seconds``."""
+    cfg = ARCHS["chatglm3-6b"].reduced()
+    params = api.init_params(cfg, KEY)
+    eng = _engine(cfg, params, prefill_chunk=8, prefix_cache=True,
+                  prefix_block=8)
+    reqs = _trace(cfg, [(12, 3, 0), (12, 4, 0), (20, 3, 2), (6, 3, 5)])
+    eng.serve(reqs)
+
+    snap = tracing.snapshot()
+    assert {r["uid"] for r in snap["requests"]} == {r.uid for r in reqs}
+    for rec in snap["requests"]:
+        assert rec["retire_reason"] == "budget"
+        names = [p["name"] for p in rec["phases"]]
+        assert names == ["queue", "prefix_attach", "chunk_prefill", "decode"]
+        ft = next(i for i in rec["instants"] if i["name"] == "first_token")
+        pre = sum(p["t1"] - p["t0"] for p in rec["phases"][:-1])
+        assert pre == pytest.approx(ft["ttft_s"], abs=1e-9)
+    assert tracing.validate_chrome_trace(tracing.chrome_trace(snap)) == 4
+    # retirement emitted one structured event per request, keyed by uid
+    retired = obs.recent_events(kind="request_retired")
+    assert {e["uid"] for e in retired} == {r.uid for r in reqs}
+    for e in retired:
+        assert e["reason"] == "budget" and e["tokens"] >= 1
+        assert "slot" in e and "rid" in e
+
+
+def test_engine_monolithic_phases_and_report_fields():
+    cfg = ARCHS["chatglm3-6b"].reduced()
+    params = api.init_params(cfg, KEY)
+    eng = _engine(cfg, params)  # monolithic prefill
+    reqs = _trace(cfg, [(8, 3, 0), (8, 3, 0), (5, 4, 3)])
+    rep = eng.serve(reqs)
+
+    for rec in tracing.snapshot()["requests"]:
+        names = [p["name"] for p in rec["phases"]]
+        assert names == ["queue", "prefill", "decode"]
+        ft = next(i for i in rec["instants"] if i["name"] == "first_token")
+        pre = sum(p["t1"] - p["t0"] for p in rec["phases"][:-1])
+        assert pre == pytest.approx(ft["ttft_s"], abs=1e-9)
+    assert rep.goodput is None  # no SLO configured: not 100%, *no answer*
+    assert rep.queue_p50 is not None and rep.queue_p99 is not None
+    assert rep.attach_p50 is None  # chunked-path phase, monolithic run
+    assert 1 <= rep.slot_hwm <= 2
+    # phase histograms landed in the registry
+    hists = obs.snapshot()["histograms"]
+    assert "serve.queue_seconds" in hists
+    assert "serve.ttft_seconds" in hists
+
+
+def test_engine_goodput_against_slos():
+    cfg = ARCHS["chatglm3-6b"].reduced()
+    params = api.init_params(cfg, KEY)
+    eng = _engine(cfg, params, slo_ttft_ms=60_000.0, slo_itl_ms=60_000.0)
+    reqs = _trace(cfg, [(8, 3, 0), (8, 3, 1)])
+    assert eng.serve(reqs).goodput == 1.0  # CI-box generous: all good
+
+    eng.slo_ttft_ms = 1e-7  # 0.1 us: nothing meets it
+    assert eng.serve(_trace(cfg, [(8, 3, 0), (8, 3, 1)])).goodput == 0.0
+
+
+def test_engine_tracing_off_still_reports_latency():
+    """Tracing is observability; the report's percentiles are product.
+    REPRO_TRACE=0 must leave the report intact and the buffer empty."""
+    cfg = ARCHS["chatglm3-6b"].reduced()
+    params = api.init_params(cfg, KEY)
+    tracing.set_enabled(False)
+    eng = _engine(cfg, params)
+    rep = eng.serve(_trace(cfg, [(8, 3, 0), (8, 3, 0)]))
+    assert rep.ttft_p50 is not None and rep.queue_p50 is not None
+    assert tracing.snapshot()["requests"] == []
+
+
+def test_fallthrough_admission_stamps_queue_exit_and_starved_head():
+    """Satellite: with the chunk pipeline full behind a long head, a short
+    arrival is admitted via the fall-through bucket — its queue phase must
+    close at the fall-through admission (not at the head's), while the
+    starved head stays visible in ``/requests`` as a ``queue``-phase entry
+    with growing age."""
+    cfg = ARCHS["chatglm3-6b"].reduced()
+    params = api.init_params(cfg, KEY)
+    eng = _engine(cfg, params, n_slots=3, max_len=64, prefill_chunk=8,
+                  prefix_cache=False)
+    # A (40 tokens, bucket 64) fills the one-deep chunk pipeline; B (20
+    # tokens, bucket 32) becomes the un-admissible head (suffix > chunk);
+    # C (6 tokens, bucket 8) fits one chunk and falls through past B.
+    a, b, c = _trace(cfg, [(40, 4, 0), (20, 3, 0), (6, 4, 0)])
+
+    head_sightings = []
+
+    def on_token(rid, tok):
+        for entry in tracing.active_requests():
+            if entry["uid"] == b.uid:
+                head_sightings.append(entry)
+
+    eng.serve([a, b, c], on_token=on_token)
+
+    by_uid = {r["uid"]: r for r in tracing.snapshot()["requests"]}
+    adm_c = next(i for i in by_uid[c.uid]["instants"]
+                 if i["name"] == "admitted")
+    assert adm_c["fallthrough"] is True and adm_c["bucket"] == 8
+    # C's queue phase closed at its own fall-through admission stamp
+    queue_c = by_uid[c.uid]["phases"][0]
+    assert queue_c["name"] == "queue" and queue_c["t1"] == adm_c["ts"]
+    # the head was *not* a fall-through admit once the pipeline drained,
+    # and its queue wait strictly exceeds the request that jumped past it
+    adm_b = next(i for i in by_uid[b.uid]["instants"]
+                 if i["name"] == "admitted")
+    assert adm_b["fallthrough"] is False
+    assert adm_b["queue_s"] > adm_c["queue_s"]
+    # while starved, the head showed up in the live view, queued and aging
+    # (later sightings — after the pipeline drains and B is admitted — are
+    # in post-queue phases, which is fine; the starvation window is what
+    # must have been visible)
+    queued = [s for s in head_sightings if s["phase"] == "queue"]
+    assert len(queued) >= 2
+    ages = [s["age_s"] for s in queued]
+    assert ages == sorted(ages) and ages[-1] > ages[0]
+
+
+# ---------------------------------------------------------------------------
+# live scrape surface (obs.http)
+# ---------------------------------------------------------------------------
+
+
+def _get(port, path):
+    with urllib.request.urlopen(f"http://127.0.0.1:{port}{path}") as r:
+        return r.status, r.read().decode()
+
+
+def test_http_scrape_surface_end_to_end():
+    obs.counter("serve.tokens").inc(5)
+    tracing.begin_request(11, 0, 0.0)
+    tracing.set_slot(11, 1)
+    tracing.begin_phase(11, "decode", 0.5)
+    tracing.end_request(11, "eos", 1.0)
+    tracing.begin_request(12, 1, 2.0)  # in flight
+
+    server = obs_http.serve_metrics(port=0)
+    assert server.port > 0
+    assert obs_http.serve_metrics() is server  # idempotent
+
+    status, body = _get(server.port, "/metrics")
+    assert status == 200
+    # byte-identical to the CLI's rendering over the same registry state
+    assert body == obs.prometheus_text()
+    assert "serve_tokens_total 5" in body
+
+    _, body = _get(server.port, "/requests")
+    live = json.loads(body)
+    assert [r["uid"] for r in live] == [12]
+    assert live[0]["phase"] == "queue"
+
+    _, body = _get(server.port, "/trace")
+    doc = json.loads(body)
+    assert tracing.validate_chrome_trace(doc) == 2
+
+    _, body = _get(server.port, "/")
+    assert "/metrics" in body
+    with pytest.raises(urllib.error.HTTPError) as exc:
+        _get(server.port, "/nope")
+    assert exc.value.code == 404
+
+    obs_http.shutdown()
+    assert obs_http.current_server() is None
+    obs_http.shutdown()  # idempotent
+
+
+def test_http_maybe_serve_from_env(monkeypatch):
+    monkeypatch.delenv("REPRO_METRICS_PORT", raising=False)
+    assert obs_http.maybe_serve_from_env() is None
+    monkeypatch.setenv("REPRO_METRICS_PORT", "0")  # ephemeral port
+    server = obs_http.maybe_serve_from_env()
+    assert server is not None and server.port > 0
+    status, _ = _get(server.port, "/healthz")
+    assert status == 200
+
+
+# ---------------------------------------------------------------------------
+# CLI: repro-stats trace / tail --follow
+# ---------------------------------------------------------------------------
+
+
+def test_stats_trace_converts_raw_dump(tmp_path, capsys):
+    from repro.launch import stats
+
+    _one_retired_one_active()
+    raw = tmp_path / "raw.json"
+    raw.write_text(json.dumps(tracing.snapshot()))
+    out = tmp_path / "timeline.json"
+
+    stats.main(["trace", "--file", str(raw), "--out", str(out)])
+    doc = json.loads(out.read_text())
+    assert tracing.validate_chrome_trace(doc) == 2
+
+    stats.main(["trace", "--file", str(raw), "--summary"])
+    table = capsys.readouterr().out
+    assert "queue_ms" in table and "budget" in table
+
+
+def test_follow_events_streams_appended_lines(tmp_path):
+    path = tmp_path / "events.jsonl"
+    path.write_text(json.dumps({"kind": "first"}) + "\n")
+    stop = threading.Event()
+    got = []
+
+    def consume():
+        for e in obs.follow_events(
+            str(path), poll_interval=0.02, stop=stop.is_set
+        ):
+            got.append(e)
+
+    t = threading.Thread(target=consume)
+    t.start()
+    deadline = time.time() + 5.0
+    while not got and time.time() < deadline:
+        time.sleep(0.02)
+    with open(path, "a") as f:  # appended mid-follow, including a partial
+        f.write(json.dumps({"kind": "second"}) + "\n")
+        f.write('{"kind": "thi')
+        f.flush()
+        time.sleep(0.1)
+        f.write('rd"}\n')
+    while len(got) < 3 and time.time() < deadline:
+        time.sleep(0.02)
+    stop.set()
+    t.join(timeout=5.0)
+    assert not t.is_alive()
+    assert [e["kind"] for e in got] == ["first", "second", "third"]
